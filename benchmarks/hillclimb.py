@@ -1,0 +1,78 @@
+"""§Perf hillclimb driver: run tagged dry-run variants for the three chosen
+pairs and print before/after roofline terms per iteration.
+
+MUST run as its own process (owns the 512-device env):
+  PYTHONPATH=src:. python -m benchmarks.hillclimb
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import dataclasses  # noqa: E402
+import json         # noqa: E402
+
+from repro.configs.base import RunConfig  # noqa: E402
+from repro.launch import mesh as M        # noqa: E402
+from repro.launch.dryrun import dryrun_one  # noqa: E402
+
+BASE = RunConfig()
+
+# (arch, shape) -> list of (tag, RunConfig-overrides, cfg-overrides)
+PLAN = {
+    # 1. worst roofline fraction: 56 heads replicate over the 16-wide model
+    #    axis -> attention compute + resharding storm
+    ("yi_34b", "train_4k"): [
+        ("it1_pad_heads", {}, {"pad_heads": True}),
+        ("it2_pad_heads_blockskip", {"causal_block_skip": True},
+         {"pad_heads": True}),
+        ("it3_pad_heads_dots", {"remat": "dots"}, {"pad_heads": True}),
+        ("it4_pad_heads_bkv", {"gqa_broadcast_kv": True},
+         {"pad_heads": True}),
+    ],
+    # 2. most collective-bound: vocab 92553 unshardable -> replicated-head
+    #    logits all-reduced per loss chunk
+    ("internvl2_2b", "train_4k"): [
+        ("it1_pad_vocab", {}, {"pad_vocab": True}),
+        ("it2_pad_vocab_bkv", {"gqa_broadcast_kv": True},
+         {"pad_vocab": True}),
+        ("it3_pad_vocab_bkv_skip",
+         {"gqa_broadcast_kv": True, "causal_block_skip": True},
+         {"pad_vocab": True}),
+    ],
+    # 3. paper-representative: MoE expert-parallel federated workhorse
+    ("dbrx_132b", "train_4k"): [
+        ("it1_gather_bf16", {"moe_gather_bf16": True}, {}),
+        ("it2_gather_bf16_dots", {"moe_gather_bf16": True,
+                                  "remat": "dots"}, {}),
+        ("it3_gather_bf16_bkv", {"moe_gather_bf16": True,
+                                 "gqa_broadcast_kv": True}, {}),
+    ],
+}
+
+
+def fmt(rec):
+    t = rec["roofline"]
+    mem = t.get("memory_fused_s", t["memory_s"])
+    return (f"compute {t['compute_s']:7.3f}s  mem(fused) {mem:7.3f}s  "
+            f"coll {t['collective_s']:7.3f}s  dom={t['dominant']:<14s} "
+            f"useful={rec['useful_flops_ratio']*100:3.0f}%  "
+            f"wire={rec['collective_wire_bytes']/1e9:8.1f}GB")
+
+
+def main():
+    mesh = M.make_production_mesh()
+    for (arch, shape), iters in PLAN.items():
+        print(f"\n=== {arch} x {shape} ===", flush=True)
+        base = dryrun_one(arch, shape, run=BASE, mesh=mesh,
+                          tag="baseline", verbose=False)
+        print(f"  baseline               : {fmt(base)}", flush=True)
+        for tag, run_over, cfg_over in iters:
+            run = dataclasses.replace(BASE, **run_over)
+            rec = dryrun_one(arch, shape, run=run, mesh=mesh, tag=tag,
+                             verbose=False,
+                             pad_vocab=cfg_over.get("pad_vocab", False),
+                             pad_heads=cfg_over.get("pad_heads", False))
+            print(f"  {tag:<23s}: {fmt(rec)}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

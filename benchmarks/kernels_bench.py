@@ -1,0 +1,90 @@
+"""Kernel micro-benchmarks: wall-time of the XLA reference paths on CPU
+(the Pallas kernels target TPU; interpret mode is correctness-only, so we
+time the jit'd XLA implementations that the CPU paths actually use) plus
+derived achieved-GFLOP/s."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hist.ref import hist_ref
+from repro.models.attention import chunked_attention
+from repro.models.ssm import ssd_chunked
+
+
+def _time(fn: Callable, *args, iters: int = 5) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def bench_attention() -> List[Tuple[str, float, str]]:
+    rows = []
+    f = jax.jit(lambda q, k, v: chunked_attention(q, k, v, causal=True,
+                                                  kv_chunk=512))
+    for (B, T, H, dh) in [(1, 512, 8, 64), (1, 2048, 8, 64)]:
+        rng = jax.random.PRNGKey(0)
+        q = jax.random.normal(rng, (B, T, H, dh), jnp.float32)
+        us = _time(f, q, q, q) * 1e6
+        flops = 4 * B * H * T * T * dh
+        rows.append((f"attention_B{B}_T{T}_H{H}", us,
+                     f"gflops={flops/us/1e3:.1f}"))
+    return rows
+
+
+def bench_ssd() -> List[Tuple[str, float, str]]:
+    rows = []
+    f = jax.jit(lambda x, dt, a, b, c: ssd_chunked(x, dt, a, b, c, 64)[0])
+    for (B, T, H, P, N) in [(1, 1024, 8, 64, 64), (2, 2048, 8, 64, 128)]:
+        ks = [jax.random.fold_in(jax.random.PRNGKey(1), i)
+              for i in range(5)]
+        x = jax.random.normal(ks[0], (B, T, H, P))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H)))
+        a = jax.random.normal(ks[2], (H,)) * 0.5
+        b = jax.random.normal(ks[3], (B, T, 1, N)) * 0.3
+        c = jax.random.normal(ks[4], (B, T, 1, N)) * 0.3
+        us = _time(f, x, dt, a, b, c) * 1e6
+        rows.append((f"ssd_B{B}_T{T}_H{H}_N{N}", us,
+                     f"tok_per_s={B*T/us*1e6:.0f}"))
+    return rows
+
+
+def bench_hist() -> List[Tuple[str, float, str]]:
+    rows = []
+    f = jax.jit(lambda b, g, h: hist_ref(b, g, h, 64))
+    for (n, F) in [(4238, 15), (65536, 32)]:
+        rng = jax.random.PRNGKey(2)
+        bins = jax.random.randint(rng, (n, F), 0, 64)
+        g = jax.random.normal(rng, (n,))
+        us = _time(f, bins, g, jnp.abs(g)) * 1e6
+        rows.append((f"hist_n{n}_F{F}", us,
+                     f"msamples_per_s={n*F/us:.1f}"))
+    return rows
+
+
+def bench_tree_training() -> List[Tuple[str, float, str]]:
+    """The paper's §4.9 'local XGBoost cost' concern, measured."""
+    import numpy as np
+    from repro.trees import gbdt
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1130, 15)).astype(np.float32))
+    y = jnp.asarray((rng.random(1130) < 0.3).astype(np.float32))
+    t0 = time.perf_counter()
+    gbdt.fit(x, y, num_rounds=10, depth=6)
+    dt = (time.perf_counter() - t0) / 10
+    return [("gbdt_tree_fit_n1130", dt * 1e6, "per-tree, paper-scale")]
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows = []
+    for fn in (bench_attention, bench_ssd, bench_hist,
+               bench_tree_training):
+        rows.extend(fn())
+    return rows

@@ -1,0 +1,154 @@
+"""Render EXPERIMENTS.md sections from results artifacts.
+
+  python -m benchmarks.report dryrun    # §Dry-run summary table
+  python -m benchmarks.report roofline  # §Roofline table
+  python -m benchmarks.report paper     # §Repro tables vs paper claims
+  python -m benchmarks.report perf      # §Perf before/after per tag
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from collections import defaultdict
+
+from benchmarks import roofline as RL
+
+# the paper's published numbers (for side-by-side rendering)
+PAPER = {
+    "table2": {"logreg/none": 0.55, "logreg/ros": 0.65, "logreg/rus": 0.56,
+               "logreg/smote": 0.64, "svm/none": 0.46, "svm/ros": 0.57,
+               "svm/rus": 0.74, "svm/smote": 0.65, "mlp/none": 0.51,
+               "mlp/ros": 0.59, "mlp/rus": 0.57, "mlp/smote": 0.64},
+    "table3": {"rf_full/none": 0.80, "rf_full/ros": 0.80,
+               "rf_full/rus": 0.68, "rf_full/smote": 0.79,
+               "rf_sub30/smote": 0.81, "xgb_full/none": 0.80,
+               "xgb_full/ros": 0.74, "xgb_full/rus": 0.67,
+               "xgb_full/smote": 0.80, "xgb_fe/smote": 0.80},
+    "table5": {"logreg": (0.65, 0.65), "svm": (0.72, 0.74),
+               "mlp": (0.69, 0.64), "random_forest": (0.87, 0.81),
+               "xgboost": (0.78, 0.80)},
+}
+
+
+def dryrun_section() -> str:
+    lines = ["### §Dry-run — every (arch x shape x mesh) lowers + compiles",
+             "",
+             "| arch | shape | mesh | compile_s | args GiB/dev | "
+             "temp GiB/dev | wire MB/dev | collectives |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in RL.load(tag="baseline"):
+        mem = r.get("memory_analysis", {})
+        args_g = mem.get("argument_size_in_bytes", 0) / 2 ** 30
+        temp_g = mem.get("temp_size_in_bytes", 0) / 2 ** 30
+        kinds = ",".join(f"{k.split('-')[1] if '-' in k else k}:"
+                         f"{int(v)}"
+                         for k, v in sorted(
+                             r["collective_count_by_kind"].items()))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compile_s']:.0f} | {args_g:.2f} | {temp_g:.2f} "
+            f"| {r['collective_wire_bytes']/1e6:,.0f} | {kinds} |")
+    return "\n".join(lines)
+
+
+def roofline_section() -> str:
+    recs = RL.load(tag="baseline", mesh="16x16")
+    return ("### §Roofline — single-pod (16x16 = 256 chips)\n\n"
+            + RL.table(recs))
+
+
+def paper_section() -> str:
+    with open("results/paper/tables.json") as f:
+        res = json.load(f)
+    out = ["### §Repro — paper tables on the synthetic Framingham twin",
+           ""]
+    out.append("**Table 2 (parametric, federated)** — ours vs paper F1:")
+    out.append("")
+    out.append("| model/sampling | F1 (ours) | F1 (paper) | P | R | "
+               "comm MB |")
+    out.append("|---|---|---|---|---|---|")
+    for k, v in res["table2"].items():
+        pp = PAPER["table2"].get(k)
+        out.append(f"| {k} | {v['f1']:.2f} | "
+                   f"{pp if pp is not None else '—'} | "
+                   f"{v['precision']:.2f} | {v['recall']:.2f} | "
+                   f"{v['comm_mb']:.2f} |")
+    out.append("")
+    out.append("**Table 3 (non-parametric, federated)**:")
+    out.append("")
+    out.append("| model/sampling | F1 (ours) | F1 (paper) | uplink MB | "
+               "agg s |")
+    out.append("|---|---|---|---|---|")
+    for k, v in res["table3"].items():
+        pp = PAPER["table3"].get(k)
+        out.append(f"| {k} | {v['f1']:.2f} | "
+                   f"{pp if pp is not None else '—'} | "
+                   f"{v['uplink_mb']:.2f} | {v['agg_s']:.2f} |")
+    out.append("")
+    out.append("**Table 4 (framework comparison)**:")
+    for k, v in res["table4"].items():
+        out.append(f"- {k}: F1={v['f1']:.2f}, uplink={v['uplink_mb']:.2f}MB,"
+                   f" imbalance={v['imbalance']}, models={v['models']}")
+    out.append("")
+    out.append("**Table 5 (centralized vs federated F1)**:")
+    out.append("")
+    out.append("| model | centralized (ours/paper) | federated "
+               "(ours/paper) |")
+    out.append("|---|---|---|")
+    for k, v in res["table5"].items():
+        pp = PAPER["table5"].get(k, (None, None))
+        c = "—" if v["centralized_f1"] is None else f"{v['centralized_f1']:.2f}"
+        out.append(f"| {k} | {c} / {pp[0] if pp[0] else '—'} "
+                   f"| {v['federated_f1']:.2f} / {pp[1] if pp[1] else '—'} |")
+    out.append("")
+    out.append("**Fig 2 (comm/F1 trade-off)**: "
+               + "; ".join(f"{k}: {v['uplink_mb']:.1f}MB@F1={v['f1']:.2f}"
+                           for k, v in res["fig2"].items()))
+    out.append("")
+    out.append("**Fig 3 (federated SMOTE recall gain, skewed non-IID)**: "
+               + "; ".join(f"{k}: {v:+.1f}%"
+                           for k, v in res["fig3"].items()
+                           if k.endswith("recall_gain_pct"))
+               + " (paper claims +22%)")
+    out.append("")
+    out.append("**Theorem 1**:")
+    for k, v in res["theorem1"].items():
+        out.append(f"- {k}: |dF1|={v['delta_f1']:.3f} "
+                   f"(bound 0.03 -> {'OK' if v['bound_ok'] else 'MISS'}), "
+                   f"comm cut {v['comm_reduction_pct']:.0f}%, "
+                   f"F1 retention {v['f1_retention_pct']:.0f}%")
+    return "\n".join(out)
+
+
+def perf_section(pairs=None) -> str:
+    """Compare all tags per (arch, shape) pair."""
+    recs = RL.load()
+    by_pair = defaultdict(list)
+    for r in recs:
+        if r["mesh"] != "16x16":
+            continue
+        by_pair[(r["arch"], r["shape"])].append(r)
+    out = ["| arch x shape | tag | compute | memory(fused) | collective | "
+           "dominant | useful |", "|---|---|---|---|---|---|---|"]
+    for (arch, shape), rs in sorted(by_pair.items()):
+        if len(rs) < 2 and pairs is None:
+            continue
+        if pairs is not None and (arch, shape) not in pairs:
+            continue
+        for r in sorted(rs, key=lambda x: x["tag"]):
+            t = r["roofline"]
+            mem = t.get("memory_fused_s", t["memory_s"])
+            out.append(
+                f"| {arch} x {shape} | {r['tag']} "
+                f"| {t['compute_s']*1e3:.0f}ms | {mem*1e3:.0f}ms "
+                f"| {t['collective_s']*1e3:.0f}ms "
+                f"| {t['dominant'].replace('_s','')} "
+                f"| {r['useful_flops_ratio']*100:.0f}% |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "roofline"
+    print({"dryrun": dryrun_section, "roofline": roofline_section,
+           "paper": paper_section, "perf": perf_section}[which]())

@@ -1,0 +1,84 @@
+"""Benchmark harness: one function per paper table/figure + kernel micro-
+benchmarks + roofline readout. Prints ``name,us_per_call,derived`` CSV.
+
+Modes:
+  python -m benchmarks.run             # full: paper tables + kernels + roofline
+  python -m benchmarks.run --quick     # kernels + roofline only (no FL runs)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def _emit(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def paper_table_rows(results) -> list:
+    rows = []
+    for tname in ("table2", "table3"):
+        for key, v in results[tname].items():
+            rows.append((f"{tname}/{key}", v.get("agg_s", 0.0) * 1e6,
+                         f"f1={v['f1']:.3f};comm_mb="
+                         f"{v.get('uplink_mb', v.get('comm_mb', 0)):.3f}"))
+    for key, v in results["table4"].items():
+        rows.append((f"table4/{key}", v.get("agg_s", 0.0) * 1e6,
+                     f"f1={v['f1']:.3f};comm_mb={v['uplink_mb']:.3f}"))
+    for key, v in results["table5"].items():
+        c = v.get("centralized_f1")
+        rows.append((f"table5/{key}", 0.0,
+                     f"centralized={c if c is None else round(c, 3)};"
+                     f"federated={round(v['federated_f1'], 3)}"))
+    for key, v in results["fig2"].items():
+        rows.append((f"fig2/{key}", 0.0,
+                     f"mb={v['uplink_mb']:.3f};f1={v['f1']:.3f}"))
+    for key, v in results["fig3"].items():
+        if key.endswith("recall_gain_pct"):
+            rows.append((f"fig3/{key}", 0.0, f"gain_pct={v:.1f}"))
+    for key, v in results["theorem1"].items():
+        rows.append((f"theorem1/{key}", 0.0,
+                     f"dF1={v['delta_f1']:.3f};ok={v['bound_ok']};"
+                     f"comm_cut_pct={v['comm_reduction_pct']:.0f}"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the FL paper-table runs")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+
+    from benchmarks import kernels_bench
+    for row in kernels_bench.run():
+        _emit(*row)
+
+    from benchmarks import roofline
+    recs = roofline.load(tag="baseline")
+    if recs:
+        for row in roofline.csv_rows(recs):
+            _emit(*row)
+    else:
+        _emit("roofline", 0.0,
+              "no dry-run artifacts; run python -m repro.launch.dryrun")
+
+    if not args.quick:
+        cache = "results/paper/tables.json"
+        if os.path.exists(cache):
+            with open(cache) as f:
+                results = json.load(f)
+        else:
+            from benchmarks import paper_tables
+            results = paper_tables.run_all(seed=args.seed)
+        for row in paper_table_rows(results):
+            _emit(*row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Federated LM training across pods (hospitals) — the paper's protocols
+applied to the assigned architectures.
+
+Compares three aggregation regimes on non-IID pod data:
+  dense FedAvg | top-k update-subset (Theorem-1 analog) | top-k + sampler
+  sync (fed-SMOTE analog: pods share domain-mixture statistics).
+
+Run:  PYTHONPATH=src python examples/fed_llm_pods.py [--arch qwen3_4b]
+"""
+import argparse
+
+from repro.launch.fed_train import simulate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_4b")
+    ap.add_argument("--pods", type=int, default=3)
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--local-steps", type=int, default=6)
+    args = ap.parse_args()
+
+    common = dict(n_pods=args.pods, rounds=args.rounds,
+                  local_steps=args.local_steps, batch=2, seq=128,
+                  non_iid_alpha=0.3, verbose=False, seed=0)
+
+    print(f"=== {args.arch} (reduced), {args.pods} pods, "
+          f"{args.rounds} rounds x {args.local_steps} local steps ===\n")
+    dense = simulate(args.arch, **common)
+    print(f"dense FedAvg      : loss {dense['loss_history'][0]:.3f} -> "
+          f"{dense['loss_history'][-1]:.3f}, "
+          f"uplink {dense['uplink_mb']:.2f} MB")
+    topk = simulate(args.arch, compression="topk", rho=0.05, **common)
+    print(f"top-k rho=0.05    : loss {topk['loss_history'][0]:.3f} -> "
+          f"{topk['loss_history'][-1]:.3f}, "
+          f"uplink {topk['uplink_mb']:.2f} MB "
+          f"({dense['uplink_mb']/topk['uplink_mb']:.1f}x less)")
+    synced = simulate(args.arch, compression="topk", rho=0.05,
+                      sync_sampler=True, **common)
+    print(f"top-k + sync      : loss {synced['loss_history'][0]:.3f} -> "
+          f"{synced['loss_history'][-1]:.3f} "
+          f"(sampler-sync = fed-SMOTE analog)")
+    print("\nTheorem-1 generalization: structured update subsets cut "
+          "federation bandwidth ~rho x with bounded loss drift.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Serving example: batched prefill + decode across architecture families
+(dense KV cache, SSM O(1) state, hybrid both, enc-dec cross-attention).
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+from repro.launch.serve import serve
+
+for arch in ["phi3_mini", "mamba2_13b", "hymba_15b", "whisper_medium"]:
+    print(f"--- {arch} ---")
+    gen = serve(arch, smoke=True, batch=2, prompt_len=16, gen_len=12)
+    print(f"  generated: {gen[0].tolist()}\n")

@@ -1,0 +1,250 @@
+"""Config system: model architecture, input shapes, runtime options.
+
+Every assigned architecture gets a ``configs/<id>.py`` exporting ``CONFIG``
+(the exact published shape, used only via the dry-run) and ``SMOKE_CONFIG``
+(a reduced same-family variant for CPU smoke tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+Family = str  # 'dense' | 'moe' | 'ssm' | 'hybrid' | 'encdec' | 'vlm'
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 16
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    # d_ff of each expert (the arch table's d_ff is per-expert for MoE archs)
+    router_aux_weight: float = 0.01
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    state_size: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk_size: int = 256
+    num_groups: int = 1  # B/C projection groups
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def num_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclass(frozen=True)
+class EncoderConfig:
+    """Stub-frontend encoder (audio frames / vision patches are supplied
+    pre-embedded by ``input_specs`` — see DESIGN.md carve-out)."""
+    num_layers: int = 0
+    seq_len: int = 0            # e.g. 1536 audio frames (padded from 1500)
+    frontend_dim: int = 0       # dim of the supplied embeddings
+    # vlm: number of image tokens prepended to the text sequence
+    num_image_tokens: int = 0
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Family
+    num_layers: int
+    d_model: int
+    num_heads: int          # q heads; 0 for attn-free (ssm)
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0       # 0 -> d_model // num_heads
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    # Sliding-window size used for the long_500k decode variant on archs whose
+    # native attention is full/causal (DESIGN.md long_500k policy). None for
+    # SSM (not needed).
+    long_context_window: Optional[int] = 8192
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    encoder: Optional[EncoderConfig] = None
+    # §Perf lever: pad the embedding/head vocab dim up to a multiple of 512
+    # so odd vocab sizes shard over 'model' instead of replicating.
+    pad_vocab: bool = False
+    # §Perf lever: pad q heads up to the next multiple of 16 (when the
+    # padded count stays divisible by num_kv_heads) so attention shards
+    # over 'model' instead of replicating — yi-34b's 56 heads otherwise
+    # replicate 16x. Adds initially-dead heads (model surgery; documented
+    # in EXPERIMENTS.md §Perf).
+    pad_heads: bool = False
+    dtype: str = "bfloat16"
+    # citation for the shape (hf model card or arXiv id)
+    source: str = ""
+
+    @property
+    def head_dim_(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.num_heads, 1)
+
+    @property
+    def attn_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def padded_vocab_size(self) -> int:
+        if not self.pad_vocab:
+            return self.vocab_size
+        return (self.vocab_size + 511) // 512 * 512
+
+    @property
+    def padded_num_heads(self) -> int:
+        if not self.pad_heads or not self.num_heads:
+            return self.num_heads
+        h = (self.num_heads + 15) // 16 * 16
+        if self.num_kv_heads and h % self.num_kv_heads:
+            return self.num_heads  # padding would break GQA grouping
+        return h
+
+    @property
+    def activation_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    def num_params(self) -> int:
+        """Analytic parameter count (drives MODEL_FLOPS = 6*N*D)."""
+        d, L = self.d_model, self.num_layers
+        n = self.vocab_size * d  # embed
+        if not self.tie_embeddings:
+            n += self.vocab_size * d
+        n += d  # final norm
+        per_layer = 0
+        if self.family != "ssm":
+            H, K, dh = self.num_heads, self.num_kv_heads, self.head_dim_
+            per_layer += d * H * dh + 2 * d * K * dh + H * dh * d  # qkvo
+            per_layer += 2 * d  # ln1/ln2 (rms)
+            if self.qk_norm:
+                per_layer += 2 * dh
+        if self.family in ("dense", "encdec", "vlm"):
+            per_layer += 3 * d * self.d_ff
+        if self.family == "hybrid":
+            per_layer += 3 * d * self.d_ff
+        if self.moe is not None:
+            e = self.moe.num_experts
+            per_layer += e * 3 * d * self.d_ff + d * e  # experts + router
+        if self.ssm is not None:
+            s = self.ssm
+            di = s.d_inner(d)
+            nh = s.num_heads(d)
+            gn = s.num_groups * s.state_size
+            in_dim = 2 * di + 2 * gn + nh
+            per_layer += d * in_dim + di * d  # in/out proj
+            per_layer += (di + 2 * gn) * s.conv_width  # conv
+            per_layer += 3 * nh + di  # A, dt_bias, D, gate-norm
+            if self.family == "ssm":
+                per_layer += d  # single pre-norm
+        n += per_layer * L
+        if self.encoder is not None and self.encoder.num_layers:
+            # whisper-style encoder: bidirectional attn + mlp, same dims
+            H, K, dh = self.num_heads, self.num_kv_heads, self.head_dim_
+            enc_layer = d * H * dh + 2 * d * K * dh + H * dh * d + 2 * d
+            enc_layer += 3 * d * self.d_ff
+            n += enc_layer * self.encoder.num_layers + d
+        if self.encoder is not None and self.encoder.num_image_tokens:
+            # vlm projector: frontend_dim -> d (2-layer mlp)
+            f = self.encoder.frontend_dim
+            n += f * d + d * d + 2 * d
+        return n
+
+    def num_active_params(self) -> int:
+        """Active params per token (MoE uses top_k of num_experts)."""
+        if self.moe is None:
+            return self.num_params()
+        d, L = self.d_model, self.num_layers
+        e, k = self.moe.num_experts, self.moe.top_k
+        dead = (e - k) * 3 * d * self.d_ff * L
+        return self.num_params() - dead
+
+    def reduced(self, **over) -> "ModelConfig":
+        """Smoke-test variant: same family/features, tiny dims."""
+        base = dict(
+            num_layers=2,
+            d_model=min(self.d_model, 128),
+            num_heads=min(self.num_heads, 4) if self.num_heads else 0,
+            num_kv_heads=min(self.num_kv_heads, 2) if self.num_kv_heads else 0,
+            d_ff=min(self.d_ff, 256),
+            vocab_size=min(self.vocab_size, 512),
+            head_dim=32 if self.num_heads else 0,
+            name=self.name + "-smoke",
+        )
+        if self.moe is not None:
+            base["moe"] = dataclasses.replace(self.moe, num_experts=4,
+                                              top_k=min(self.moe.top_k, 2))
+        if self.ssm is not None:
+            base["ssm"] = dataclasses.replace(
+                self.ssm, state_size=min(self.ssm.state_size, 16),
+                head_dim=32, chunk_size=32)
+        if self.encoder is not None:
+            base["encoder"] = dataclasses.replace(
+                self.encoder,
+                num_layers=min(self.encoder.num_layers, 2),
+                seq_len=min(self.encoder.seq_len, 64) or 0,
+                frontend_dim=min(self.encoder.frontend_dim, 64)
+                if self.encoder.frontend_dim else 0,
+                num_image_tokens=min(self.encoder.num_image_tokens, 8)
+                if self.encoder.num_image_tokens else 0,
+            )
+        base.update(over)
+        return dataclasses.replace(self, **base)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    phase: str  # 'train' | 'prefill' | 'decode'
+
+
+INPUT_SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    """Runtime/perf knobs — the levers the §Perf hillclimb turns."""
+    use_pallas: bool = False          # pallas kernels (interpret on CPU)
+    remat: str = "full"               # 'none' | 'full' | 'dots'
+    causal_block_skip: bool = False   # skip fully-masked kv blocks (prefill)
+    seq_shard_activations: bool = True  # Megatron-SP style boundary constraint
+    loss_chunk: int = 8192            # CE computed in token chunks
+    attn_q_chunk: int = 1024
+    attn_kv_chunk: int = 1024
+    moe_impl: str = "auto"            # 'auto' | 'local' | 'ep'  (expert parallel)
+    decode_window_slice: bool = False  # §Perf: slice window instead of masking
+    fsdp_params: bool = True          # shard weights over 'data' too (train)
+    # Analysis mode: unroll every scan so compiled cost_analysis/HLO
+    # reflects true per-step op counts (XLA costs a scan body ONCE,
+    # ignoring trip count). Used by the dry-run; execution paths keep
+    # rolled scans.
+    scan_unroll: bool = False
+    # --- §Perf levers (beyond-paper optimizations; baseline = all off) ---
+    # pad embed/head vocab dim to a multiple of 512 so odd vocabs
+    # (whisper/internvl/hymba/mamba2) shard over 'model' instead of
+    # replicating; CE slices the logits back to the true vocab.
+    pad_vocab: bool = False
+    # broadcast kv heads to q heads before the attention einsum so the
+    # (B,T,H,dh)->(B,T,K,G,dh) reshape never splits the model-sharded H
+    # dim (avoids per-layer q resharding collectives).
+    gqa_broadcast_kv: bool = False
+    # cast expert weights to the activation dtype BEFORE the shard_map
+    # all-gather in the EP MoE layer (halves FSDP gather traffic).
+    moe_gather_bf16: bool = False

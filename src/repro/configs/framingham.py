@@ -1,0 +1,33 @@
+"""The paper's own workload: Framingham CHD tabular prediction
+(n=4238, 15 features, 15.2% positive; Kaggle dileep070 card)."""
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class FraminghamConfig:
+    n_records: int = 4238
+    n_features: int = 15
+    positive_rate: float = 0.152
+    n_clients: int = 3
+    train_frac: float = 0.8
+    # paper hyper-params
+    rf_trees: int = 100
+    rf_subset_trees: int = 10          # floor(sqrt(100))
+    rf_max_depth: int = 8
+    xgb_trees: int = 50
+    xgb_max_depth: int = 6
+    xgb_shallow_depth: int = 4         # feature-extraction tree depth
+    xgb_top_features: int = 8          # top-p ranked features
+    xgb_lr: float = 0.3
+    lr_l2: float = 0.01
+    svm_c: float = 1.0
+    nn_hidden: int = 16
+    fedprox_mu: float = 0.01
+    dp_epsilon: float = 0.5
+    dp_delta: float = 1e-5
+    n_bins: int = 64
+
+
+CONFIG = FraminghamConfig()
+SMOKE_CONFIG = FraminghamConfig(n_records=400, rf_trees=10,
+                                rf_subset_trees=3, xgb_trees=5)

@@ -1,0 +1,13 @@
+"""Hymba-1.5B: hybrid heads — parallel attention (25H, GQA kv=5) + Mamba
+heads in the same block. 32L, d=1600, d_ff=5504, vocab=32001, ssm_state=16.
+[arXiv:2411.13676]"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b", family="hybrid",
+    num_layers=32, d_model=1600, num_heads=25, num_kv_heads=5,
+    head_dim=64, d_ff=5504, vocab_size=32001,
+    ssm=SSMConfig(state_size=16, head_dim=64, expand=2),
+    source="arXiv:2411.13676",
+)
+SMOKE_CONFIG = CONFIG.reduced(num_heads=4, num_kv_heads=2, head_dim=32)

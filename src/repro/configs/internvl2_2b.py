@@ -1,0 +1,14 @@
+"""InternVL2-2B backbone: InternLM2-1.8B LM (24L, d=2048, 16H GQA kv=8,
+d_ff=8192, vocab=92553) + stub InternViT frontend supplying 256 patch
+embeddings (dim 1024) through a real 2-layer MLP projector.
+[arXiv:2404.16821]"""
+from repro.configs.base import EncoderConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-2b", family="vlm",
+    num_layers=24, d_model=2048, num_heads=16, num_kv_heads=8,
+    d_ff=8192, vocab_size=92553, rope_theta=1000000.0,
+    encoder=EncoderConfig(num_image_tokens=256, frontend_dim=1024),
+    source="arXiv:2404.16821",
+)
+SMOKE_CONFIG = CONFIG.reduced()

@@ -1,0 +1,12 @@
+"""Mamba2-1.3B: attention-free SSD. 48L, d=2048, d_inner=4096 (64 heads x
+head_dim 64), ssm_state=128, vocab=50280. [arXiv:2405.21060]"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-1.3b", family="ssm",
+    num_layers=48, d_model=2048, num_heads=0, num_kv_heads=0,
+    d_ff=0, vocab_size=50280, long_context_window=None,
+    ssm=SSMConfig(state_size=128, head_dim=64, expand=2),
+    source="arXiv:2405.21060",
+)
+SMOKE_CONFIG = CONFIG.reduced()

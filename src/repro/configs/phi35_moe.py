@@ -1,0 +1,12 @@
+"""Phi-3.5-MoE: 32L, d=4096, 32H (GQA kv=8), 16 experts top-2,
+d_ff(expert)=6400, vocab=32064. [hf:microsoft/Phi-3.5-MoE-instruct]"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="phi3.5-moe-42b-a6.6b", family="moe",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8,
+    d_ff=6400, vocab_size=32064,
+    moe=MoEConfig(num_experts=16, top_k=2),
+    source="hf:microsoft/Phi-3.5-MoE-instruct",
+)
+SMOKE_CONFIG = CONFIG.reduced()

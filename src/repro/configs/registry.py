@@ -1,0 +1,53 @@
+"""Assigned-architecture registry: ``get(arch_id)`` / ``get_smoke(arch_id)``."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig, ShapeConfig
+
+ARCH_IDS: List[str] = [
+    "dbrx_132b",
+    "phi35_moe",
+    "whisper_medium",
+    "internvl2_2b",
+    "qwen3_4b",
+    "yi_34b",
+    "hymba_15b",
+    "mamba2_13b",
+    "phi3_mini",
+    "minitron_4b",
+    "framingham",   # the paper's own (tabular) "architecture"
+]
+
+_ALIASES = {
+    "dbrx-132b": "dbrx_132b",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe",
+    "whisper-medium": "whisper_medium",
+    "internvl2-2b": "internvl2_2b",
+    "qwen3-4b": "qwen3_4b",
+    "yi-34b": "yi_34b",
+    "hymba-1.5b": "hymba_15b",
+    "mamba2-1.3b": "mamba2_13b",
+    "phi3-mini-3.8b": "phi3_mini",
+    "minitron-4b": "minitron_4b",
+}
+
+LM_ARCH_IDS = [a for a in ARCH_IDS if a != "framingham"]
+
+
+def _module(arch_id: str):
+    arch_id = _ALIASES.get(arch_id, arch_id).replace("-", "_")
+    return importlib.import_module(f"repro.configs.{arch_id}")
+
+
+def get(arch_id: str) -> ModelConfig:
+    return _module(arch_id).CONFIG
+
+
+def get_smoke(arch_id: str) -> ModelConfig:
+    return _module(arch_id).SMOKE_CONFIG
+
+
+def shape(name: str) -> ShapeConfig:
+    return INPUT_SHAPES[name]

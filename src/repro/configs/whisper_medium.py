@@ -1,0 +1,13 @@
+"""Whisper-medium backbone: 24L enc + 24L dec, d=1024, 16H, d_ff=4096,
+vocab=51865. Conv/mel frontend stubbed (DESIGN.md); encoder frames padded
+1500 -> 1536 for clean mesh divisibility. [arXiv:2212.04356]"""
+from repro.configs.base import EncoderConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium", family="encdec",
+    num_layers=24, d_model=1024, num_heads=16, num_kv_heads=16,
+    d_ff=4096, vocab_size=51865,
+    encoder=EncoderConfig(num_layers=24, seq_len=1536, frontend_dim=1024),
+    source="arXiv:2212.04356",
+)
+SMOKE_CONFIG = CONFIG.reduced()

@@ -1,0 +1,11 @@
+"""Yi-34B: llama-arch GQA, 60L, d=7168, 56H (kv=8), d_ff=20480,
+vocab=64000. [arXiv:2403.04652]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-34b", family="dense",
+    num_layers=60, d_model=7168, num_heads=56, num_kv_heads=8,
+    d_ff=20480, vocab_size=64000, rope_theta=5000000.0,
+    source="arXiv:2403.04652",
+)
+SMOKE_CONFIG = CONFIG.reduced()

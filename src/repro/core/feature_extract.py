@@ -1,0 +1,151 @@
+"""XGBoost-based feature extraction for lightweight federated ensembles
+(paper C3): clients fit a local GBDT, rank features by gain importance,
+train a small shallow-tree ensemble on the top-p features, and ship only
+that. The server predicts by data-size-weighted voting:
+f(x) = sum |D_i|/|D| T_i(x).  (The paper's own comm table — 6.9 MB shipped
+vs 22.3 MB dense, 3.2x — implies the shallow model is a reduced ensemble,
+not a single tree; see EXPERIMENTS.md.)
+
+A dense federated-XGBoost baseline (every boosted tree shipped, clients'
+margins averaged) is implemented alongside so the 3.2x reduction is a
+measured before/after.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.comm import CommLog, Timer
+from repro.core.metrics import binary_metrics
+from repro.data import sampling as S
+from repro.trees import gbdt
+from repro.trees.growth import nbytes
+
+
+@dataclass
+class FedXGBConfig:
+    num_rounds: int = 50
+    depth: int = 6
+    shallow_depth: int = 4
+    shallow_rounds: int = 0      # 0 -> num_rounds // 3 (the paper's own
+    # comm numbers — 6.9 MB vs 22.3 MB, a 3.2x cut — imply the shipped
+    # "shallow" model is a small boosted ensemble, not a single tree)
+    top_features: int = 8
+    n_bins: int = 64
+    learning_rate: float = 0.3
+    sampling: str = "none"
+    seed: int = 0
+
+    @property
+    def shallow_rounds_(self) -> int:
+        return self.shallow_rounds or max(self.num_rounds // 3, 1)
+
+
+@dataclass
+class FeatureExtractEnsemble:
+    trees: List[gbdt.GBDT]       # one shallow boosted ensemble per client
+    weights: List[float]         # |D_i| / |D|
+    base_margins: List[float]
+    top_features: List[np.ndarray]
+
+
+def train_federated_xgb_fe(clients: Sequence[Tuple[np.ndarray, np.ndarray]],
+                           cfg: FedXGBConfig, fed_stats=None):
+    """Returns (ensemble, comm, timer)."""
+    comm = CommLog()
+    timer = Timer()
+    trees, weights, bases, tops = [], [], [], []
+    sizes = [len(y) for _, y in clients]
+    total = sum(sizes)
+    for i, (x, y) in enumerate(clients):
+        xs, ys = S.apply_strategy(cfg.sampling, x, y, cfg.seed + i,
+                                  fed_stats=fed_stats)
+        xs, ys = jnp.asarray(xs), jnp.asarray(ys)
+        local = gbdt.fit(xs, ys, num_rounds=cfg.num_rounds, depth=cfg.depth,
+                         n_bins=cfg.n_bins,
+                         learning_rate=cfg.learning_rate)
+        phi = np.asarray(gbdt.feature_importance(local))
+        top = np.argsort(-phi)[:cfg.top_features]
+        mask = np.zeros(x.shape[1], np.float32)
+        mask[top] = 1.0
+        shallow = gbdt.fit(xs, ys, num_rounds=cfg.shallow_rounds_,
+                           depth=cfg.shallow_depth, n_bins=cfg.n_bins,
+                           learning_rate=cfg.learning_rate,
+                           feature_mask=jnp.asarray(mask))
+        comm.log(0, f"c{i}", "up",
+                 nbytes(shallow.forest) + 4 + 4 * len(top), "shallow-gbdt")
+        trees.append(shallow)
+        weights.append(sizes[i] / total)
+        bases.append(shallow.base_margin)
+        tops.append(top)
+    ens = FeatureExtractEnsemble(trees, weights, bases, tops)
+    with timer:
+        pass  # aggregation is a concat; vote happens at predict time
+    for i in range(len(clients)):
+        comm.log(0, f"c{i}", "down",
+                 sum(nbytes(t.forest) for t in trees) + 8 * len(trees),
+                 "ensemble")
+    return ens, comm, timer
+
+
+def predict_fe(ens: FeatureExtractEnsemble, x) -> np.ndarray:
+    xj = jnp.asarray(x)
+    score = np.zeros(x.shape[0])
+    for model, w in zip(ens.trees, ens.weights):
+        p = jax.nn.sigmoid(gbdt.predict_margin(model, xj))
+        score += w * np.asarray(p)
+    return score > 0.5
+
+
+def evaluate_fe(ens, x, y):
+    return binary_metrics(predict_fe(ens, x), y)
+
+
+# --- dense federated XGBoost baseline ----------------------------------------
+
+@dataclass
+class FedXGBEnsemble:
+    models: List[gbdt.GBDT]
+    weights: List[float]
+
+
+def train_federated_xgb(clients, cfg: FedXGBConfig, fed_stats=None):
+    """Every client ships its full boosted ensemble; margins averaged
+    (data-size weighted). The paper's 'Federated XGBoost' rows."""
+    comm = CommLog()
+    timer = Timer()
+    models, weights = [], []
+    sizes = [len(y) for _, y in clients]
+    total = sum(sizes)
+    for i, (x, y) in enumerate(clients):
+        xs, ys = S.apply_strategy(cfg.sampling, x, y, cfg.seed + i,
+                                  fed_stats=fed_stats)
+        local = gbdt.fit(jnp.asarray(xs), jnp.asarray(ys),
+                         num_rounds=cfg.num_rounds, depth=cfg.depth,
+                         n_bins=cfg.n_bins,
+                         learning_rate=cfg.learning_rate)
+        comm.log(0, f"c{i}", "up", nbytes(local.forest), "gbdt")
+        models.append(local)
+        weights.append(sizes[i] / total)
+    with timer:
+        pass
+    for i in range(len(clients)):
+        comm.log(0, f"c{i}", "down",
+                 sum(nbytes(m.forest) for m in models), "ensemble")
+    return FedXGBEnsemble(models, weights), comm, timer
+
+
+def predict_fed_xgb(ens: FedXGBEnsemble, x) -> np.ndarray:
+    xj = jnp.asarray(x)
+    margin = np.zeros(x.shape[0])
+    for m, w in zip(ens.models, ens.weights):
+        margin += w * np.asarray(gbdt.predict_margin(m, xj))
+    return margin > 0
+
+
+def evaluate_fed_xgb(ens, x, y):
+    return binary_metrics(predict_fed_xgb(ens, x), y)

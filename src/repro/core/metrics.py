@@ -1,0 +1,21 @@
+"""Binary-classification metrics (paper's primary: F1; plus P/R/acc)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+
+def binary_metrics(pred, y) -> Dict[str, float]:
+    pred = np.asarray(pred).astype(bool)
+    y = np.asarray(y).astype(bool)
+    tp = int(np.sum(pred & y))
+    fp = int(np.sum(pred & ~y))
+    fn = int(np.sum(~pred & y))
+    tn = int(np.sum(~pred & ~y))
+    prec = tp / max(tp + fp, 1)
+    rec = tp / max(tp + fn, 1)
+    f1 = 2 * prec * rec / max(prec + rec, 1e-12)
+    acc = (tp + tn) / max(len(y), 1)
+    return {"f1": f1, "precision": prec, "recall": rec, "accuracy": acc,
+            "tp": tp, "fp": fp, "fn": fn, "tn": tn}

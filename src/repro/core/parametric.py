@@ -1,0 +1,153 @@
+"""Parametric FL pipeline (paper C1): LR / poly-SVM / NN with FedAvg,
+FedProx for the NN, optional secure aggregation + DP, full comm ledger.
+Also provides the pooled-data centralized baselines for Table 5.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import privacy
+from repro.core.comm import CommLog, Timer, pytree_bytes
+from repro.core.metrics import binary_metrics
+from repro.data import sampling as S
+from repro.models import tabular
+from repro.optim import adam, fedprox_grad
+
+
+@dataclass
+class FedParametricConfig:
+    model: str = "logreg"            # logreg | svm | mlp
+    rounds: int = 30
+    local_steps: int = 40
+    lr: float = 0.05
+    sampling: str = "none"           # none | ros | rus | smote | fed_smote
+    fedprox_mu: float = 0.0          # >0 -> FedProx (paper: NN)
+    secure_agg: bool = False
+    dp_epsilon: float = 0.0          # >0 -> DP noise on the aggregate
+    dp_delta: float = 1e-5
+    dp_clip: float = 1.0
+    seed: int = 0
+
+
+def _prep(model_name: str, x):
+    if tabular.MODELS[model_name]["needs_poly"]:
+        pairs, triples = tabular.poly3_indices(x.shape[1])
+        return np.asarray(tabular.poly3_features(jnp.asarray(x), pairs,
+                                                 triples))
+    return x
+
+
+def _local_train(model_name, params, x, y, steps, lr, global_params=None,
+                 mu=0.0):
+    spec = tabular.MODELS[model_name]
+    loss_fn = spec["loss"]
+    opt = adam()
+    state = opt.init(params)
+    xd, yd = jnp.asarray(x), jnp.asarray(y)
+
+    @jax.jit
+    def step(params, state):
+        grads = jax.grad(loss_fn)(params, xd, yd)
+        if mu > 0 and global_params is not None:
+            grads = fedprox_grad(grads, params, global_params, mu)
+        return opt.update(grads, state, params, lr)
+
+    for _ in range(steps):
+        params, state = step(params, state)
+    return params
+
+
+def _fed_sampling(clients, strategy, seed, comm: CommLog, round_idx=0):
+    """Apply a sampling strategy locally; fed_smote also syncs stats."""
+    if strategy != "fed_smote":
+        return [S.apply_strategy(strategy, x, y, seed + i)
+                for i, (x, y) in enumerate(clients)], None
+    stats = [S.minority_stats(x, y) for (x, y) in clients]
+    for i in range(len(clients)):
+        comm.log(round_idx, f"c{i}", "up",
+                 S.stats_bytes(clients[i][0].shape[1]), "smote-stats")
+        comm.log(round_idx, f"c{i}", "down",
+                 S.stats_bytes(clients[i][0].shape[1]), "smote-stats")
+    agg = S.aggregate_stats(stats)
+    return [S.fed_smote(x, y, agg[0], agg[1], seed + i)
+            for i, (x, y) in enumerate(clients)], agg
+
+
+def train_federated(clients: Sequence[Tuple[np.ndarray, np.ndarray]],
+                    cfg: FedParametricConfig,
+                    test: Optional[Tuple[np.ndarray, np.ndarray]] = None):
+    """Returns (global_params, comm: CommLog, history, agg_timer)."""
+    comm = CommLog()
+    timer = Timer()
+    spec = tabular.MODELS[cfg.model]
+    clients = [(_prep(cfg.model, x), y) for x, y in clients]
+    if test is not None:
+        test = (_prep(cfg.model, test[0]), test[1])
+    clients, _ = _fed_sampling(clients, cfg.sampling, cfg.seed, comm)
+    n_feat = clients[0][0].shape[1]
+    rng = jax.random.PRNGKey(cfg.seed)
+    global_params = spec["init"](rng, n_feat)
+    history = []
+    for r in range(cfg.rounds):
+        updates = []
+        for i, (x, y) in enumerate(clients):
+            comm.log(r, f"c{i}", "down", pytree_bytes(global_params),
+                     "model")
+            local = _local_train(cfg.model, global_params, x, y,
+                                 cfg.local_steps, cfg.lr,
+                                 global_params=global_params,
+                                 mu=cfg.fedprox_mu)
+            update = jax.tree.map(lambda a, b: a - b, local, global_params)
+            if cfg.dp_epsilon > 0:
+                update, _ = privacy.clip_update(update, cfg.dp_clip)
+            if cfg.secure_agg:
+                update = privacy.mask_update(update, i, len(clients),
+                                             cfg.seed * 7919 + r)
+            comm.log(r, f"c{i}", "up", pytree_bytes(update), "update")
+            updates.append(update)
+        with timer:
+            total = privacy.secure_sum(updates)
+            mean_update = jax.tree.map(lambda t: t / len(clients), total)
+            if cfg.dp_epsilon > 0:
+                mean_update = privacy.add_dp_noise(
+                    mean_update, cfg.dp_epsilon, cfg.dp_delta,
+                    cfg.dp_clip / len(clients), cfg.seed * 31 + r)
+            global_params = jax.tree.map(lambda g, u: g + u, global_params,
+                                         mean_update)
+        if test is not None:
+            pred = np.asarray(spec["predict"](global_params,
+                                              jnp.asarray(test[0])))
+            history.append(binary_metrics(pred, test[1]))
+    return global_params, comm, history, timer
+
+
+def train_centralized(x, y, cfg: FedParametricConfig,
+                      test: Optional[Tuple] = None):
+    """Pooled-data baseline with matched optimization budget."""
+    spec = tabular.MODELS[cfg.model]
+    xp = _prep(cfg.model, x)
+    xs, ys = S.apply_strategy(
+        cfg.sampling if cfg.sampling != "fed_smote" else "smote",
+        xp, y, cfg.seed)
+    rng = jax.random.PRNGKey(cfg.seed)
+    params = spec["init"](rng, xp.shape[1])
+    params = _local_train(cfg.model, params, xs, ys,
+                          cfg.rounds * cfg.local_steps, cfg.lr)
+    out = {}
+    if test is not None:
+        xt = _prep(cfg.model, test[0])
+        pred = np.asarray(spec["predict"](params, jnp.asarray(xt)))
+        out = binary_metrics(pred, test[1])
+    return params, out
+
+
+def evaluate(model_name: str, params, x, y) -> Dict[str, float]:
+    spec = tabular.MODELS[model_name]
+    xp = _prep(model_name, x)
+    pred = np.asarray(spec["predict"](params, jnp.asarray(xp)))
+    return binary_metrics(pred, y)

@@ -1,0 +1,68 @@
+"""Security layer (paper C6).
+
+* Secure aggregation: pairwise additive masks (Bonawitz-style, simulated)
+  — client i adds PRG(seed_ij)*sign(i-j) for every peer j; masks cancel in
+  the server's sum, so the server only ever sees the aggregate.  Stand-in
+  for the paper's homomorphic encryption (DESIGN.md §Changed-assumptions).
+* Differential privacy: Gaussian noise on the aggregated update with
+  sigma = sqrt(2 ln(1.25/delta)) * sensitivity / epsilon  (eps=0.5,
+  delta=1e-5 per the paper).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _pair_mask(seed: int, tree):
+    rng = np.random.default_rng(seed)
+    return jax.tree.map(
+        lambda x: jnp.asarray(rng.normal(0, 1.0, np.shape(x)),
+                              dtype=jnp.asarray(x).dtype), tree)
+
+
+def mask_update(update, client_idx: int, n_clients: int, round_seed: int):
+    """Add pairwise-cancelling masks to one client's update."""
+    masked = update
+    for j in range(n_clients):
+        if j == client_idx:
+            continue
+        lo, hi = min(client_idx, j), max(client_idx, j)
+        m = _pair_mask(round_seed * 1000003 + lo * 1009 + hi, update)
+        sgn = 1.0 if client_idx < j else -1.0
+        masked = jax.tree.map(lambda a, b: a + sgn * b, masked, m)
+    return masked
+
+
+def secure_sum(updates: Sequence):
+    """Server: sum of masked updates == sum of true updates."""
+    total = updates[0]
+    for u in updates[1:]:
+        total = jax.tree.map(lambda a, b: a + b, total, u)
+    return total
+
+
+def gaussian_sigma(epsilon: float, delta: float,
+                   sensitivity: float = 1.0) -> float:
+    return float(np.sqrt(2 * np.log(1.25 / delta)) * sensitivity / epsilon)
+
+
+def clip_update(update, max_norm: float):
+    leaves = jax.tree.leaves(update)
+    nrm = jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                       for x in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(nrm, 1e-12))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), update), nrm
+
+
+def add_dp_noise(tree, epsilon: float, delta: float, sensitivity: float,
+                 seed: int):
+    sigma = gaussian_sigma(epsilon, delta, sensitivity)
+    rng = np.random.default_rng(seed)
+    return jax.tree.map(
+        lambda x: x + jnp.asarray(
+            rng.normal(0, sigma, np.shape(x)),
+            dtype=jnp.asarray(x).dtype), tree)

@@ -1,0 +1,114 @@
+"""Class-imbalance resolution: ROS, RUS, SMOTE (local), and the paper's
+federated SMOTE synchronization (C4) via shared sufficient statistics."""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+
+def ros(x, y, seed: int = 0):
+    """Random oversampling of the minority class to parity."""
+    rng = np.random.default_rng(seed)
+    pos, neg = np.where(y == 1)[0], np.where(y == 0)[0]
+    mino, majo = (pos, neg) if len(pos) < len(neg) else (neg, pos)
+    extra = rng.choice(mino, size=len(majo) - len(mino), replace=True)
+    idx = np.concatenate([np.arange(len(y)), extra])
+    rng.shuffle(idx)
+    return x[idx], y[idx]
+
+
+def rus(x, y, seed: int = 0):
+    """Random undersampling of the majority class to parity."""
+    rng = np.random.default_rng(seed)
+    pos, neg = np.where(y == 1)[0], np.where(y == 0)[0]
+    mino, majo = (pos, neg) if len(pos) < len(neg) else (neg, pos)
+    keep = rng.choice(majo, size=len(mino), replace=False)
+    idx = np.concatenate([mino, keep])
+    rng.shuffle(idx)
+    return x[idx], y[idx]
+
+
+def smote(x, y, k: int = 5, seed: int = 0):
+    """Classic SMOTE: synthesize minority points on kNN line segments."""
+    rng = np.random.default_rng(seed)
+    pos, neg = np.where(y == 1)[0], np.where(y == 0)[0]
+    mino, majo = (pos, neg) if len(pos) < len(neg) else (neg, pos)
+    need = len(majo) - len(mino)
+    if need <= 0 or len(mino) < 2:
+        return x, y
+    xm = x[mino]
+    d2 = ((xm[:, None, :] - xm[None, :, :]) ** 2).sum(-1)
+    np.fill_diagonal(d2, np.inf)
+    kk = min(k, len(mino) - 1)
+    nn = np.argsort(d2, axis=1)[:, :kk]          # (m, k)
+    base = rng.integers(0, len(mino), need)
+    pick = nn[base, rng.integers(0, kk, need)]
+    lam = rng.random((need, 1))
+    synth = xm[base] + lam * (xm[pick] - xm[base])
+    ys = np.full(need, y[mino[0]], y.dtype)
+    return (np.concatenate([x, synth.astype(x.dtype)]),
+            np.concatenate([y, ys]))
+
+
+# --- federated SMOTE synchronization (paper C4) -----------------------------
+
+def minority_stats(x, y) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Client-side: local minority-class mean/variance (the only thing
+    shared with the server — never raw rows). Clients with <2 minority
+    rows report zeros with count 0 (they contribute nothing to the
+    aggregate — exactly the clients fed-SMOTE rescues)."""
+    pos, neg = np.where(y == 1)[0], np.where(y == 0)[0]
+    mino = pos if len(pos) < len(neg) else neg
+    if len(mino) < 2:
+        return (np.zeros(x.shape[1]), np.zeros(x.shape[1]), 0)
+    xm = x[mino]
+    return xm.mean(0), xm.var(0), len(mino)
+
+
+def aggregate_stats(stats: List[Tuple[np.ndarray, np.ndarray, int]]):
+    """Server-side: mu_g = mean(mu_i), sigma_g^2 = mean(sigma_i^2)
+    (the paper's unweighted aggregation over contributing clients)."""
+    live = [s for s in stats if s[2] > 0]
+    if not live:
+        raise ValueError("no client holds minority samples")
+    mus = np.stack([s[0] for s in live])
+    vars_ = np.stack([s[1] for s in live])
+    return mus.mean(0), vars_.mean(0)
+
+
+def fed_smote(x, y, mu_g, var_g, seed: int = 0):
+    """Client-side: augment with synthetic minority draws from
+    N(mu_g, sigma_g^2)."""
+    rng = np.random.default_rng(seed)
+    pos, neg = np.where(y == 1)[0], np.where(y == 0)[0]
+    mino, majo = (pos, neg) if len(pos) < len(neg) else (neg, pos)
+    need = len(majo) - len(mino)
+    if need <= 0:
+        return x, y
+    synth = rng.normal(mu_g, np.sqrt(np.maximum(var_g, 1e-12)),
+                       size=(need, x.shape[1]))
+    label = 1.0 if len(pos) <= len(neg) else 0.0  # works at 0 local rows
+    ys = np.full(need, label, y.dtype)
+    return (np.concatenate([x, synth.astype(x.dtype)]),
+            np.concatenate([y, ys]))
+
+
+def stats_bytes(n_features: int) -> int:
+    """Bytes shipped per client for fed-SMOTE sync (mu, var, count)."""
+    return n_features * 4 * 2 + 4
+
+
+def apply_strategy(name: str, x, y, seed: int = 0, fed_stats=None):
+    if name in (None, "none"):
+        return x, y
+    if name == "ros":
+        return ros(x, y, seed)
+    if name == "rus":
+        return rus(x, y, seed)
+    if name == "smote":
+        return smote(x, y, seed=seed)
+    if name == "fed_smote":
+        assert fed_stats is not None
+        return fed_smote(x, y, fed_stats[0], fed_stats[1], seed)
+    raise ValueError(name)

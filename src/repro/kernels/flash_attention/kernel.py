@@ -1,0 +1,112 @@
+"""Pallas TPU flash attention (blockwise online softmax).
+
+TPU adaptation notes (DESIGN.md §Hardware-adaptation): the GPU flash
+algorithm's warp-level softmax is re-blocked for VMEM/MXU — q blocks of
+``block_q`` rows stay resident in VMEM while the kv-block grid dimension
+iterates sequentially (TPU grids are sequential on the last axis), carrying
+(m, l, acc) in VMEM scratch. Matmul dims are 128-aligned for the MXU.
+
+Grid: (batch, q_heads, num_q_blocks, num_kv_blocks); kv block index maps
+GQA q-heads onto their kv head via integer division.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale: float, causal: bool, window: Optional[int],
+                 block_q: int, block_kv: int, seq_kv: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32) * scale   # (block_q, dh)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)           # (block_kv, dh)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bkv)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_kv), 0)
+    kv_pos = ki * block_kv + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (block_q, block_kv), 1)
+    mask = kv_pos < seq_kv
+    if causal:
+        mask = mask & (kv_pos <= q_pos)
+    if window is not None:
+        mask = mask & (kv_pos > q_pos - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = (acc_scr[...] * corr
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, :, 0, :] = (acc_scr[...]
+                             / jnp.maximum(l_scr[...], 1e-30)
+                             ).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    block_q: int = 512, block_kv: int = 512,
+                    interpret: bool = False):
+    """q (B,T,H,dh); k,v (B,S,K,dh) with H = G*K. Returns (B,T,H,dh)."""
+    B, T, H, dh = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    block_q = min(block_q, T)
+    block_kv = min(block_kv, S)
+    pad_t = (-T) % block_q
+    pad_s = (-S) % block_kv
+    qp = jnp.pad(q, ((0, 0), (0, pad_t), (0, 0), (0, 0))) if pad_t else q
+    kp = jnp.pad(k, ((0, 0), (0, pad_s), (0, 0), (0, 0))) if pad_s else k
+    vp = jnp.pad(v, ((0, 0), (0, pad_s), (0, 0), (0, 0))) if pad_s else v
+    Tp, Sp = T + pad_t, S + pad_s
+    nq, nk = Tp // block_q, Sp // block_kv
+
+    grid = (B, H, nq, nk)
+    out = pl.pallas_call(
+        functools.partial(
+            _attn_kernel, scale=dh ** -0.5, causal=causal, window=window,
+            block_q=block_q, block_kv=block_kv, seq_kv=S),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, dh),
+                         lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, block_kv, 1, dh),
+                         lambda b, h, i, j: (b, j, h // G, 0)),
+            pl.BlockSpec((1, block_kv, 1, dh),
+                         lambda b, h, i, j: (b, j, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, dh),
+                               lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Tp, H, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :T]

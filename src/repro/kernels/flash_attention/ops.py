@@ -1,0 +1,32 @@
+"""Public jit'd wrapper: picks the Pallas kernel (TPU, or interpret mode on
+CPU for validation) or the chunked-XLA path used by the dry-run."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.models.attention import chunked_attention
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+              impl: str = "auto", block_q: int = 512, block_kv: int = 512):
+    """impl: 'pallas' | 'pallas_interpret' | 'xla' | 'ref' | 'auto'."""
+    if impl == "auto":
+        impl = "pallas" if not _on_cpu() else "xla"
+    if impl == "pallas":
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_kv=block_kv)
+    if impl == "pallas_interpret":
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_kv=block_kv,
+                               interpret=True)
+    if impl == "xla":
+        return chunked_attention(q, k, v, causal=causal, window=window)
+    return attention_ref(q, k, v, causal=causal, window=window)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import jax
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None):
+    """Naive full-matrix attention. q (B,T,H,dh); k,v (B,S,K,dh)."""
+    B, T, H, dh = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, T, K, G, dh).astype(jnp.float32) * dh ** -0.5
+    s = jnp.einsum("btkgd,bskd->btkgs", qg, k.astype(jnp.float32))
+    q_pos = jnp.arange(T)[:, None]
+    kv_pos = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask = mask & (kv_pos <= q_pos)
+    if window is not None:
+        mask = mask & (kv_pos > q_pos - window)
+    s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("btkgs,bskd->btkgd", w, v.astype(jnp.float32))
+    return out.reshape(B, T, H, dh).astype(q.dtype)

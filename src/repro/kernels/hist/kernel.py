@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: gradient/hessian histogram build for GBDT training.
+
+This is the compute hot-spot of the paper's local XGBoost training
+(§4.9 notes local XGBoost cost as a limitation) and the layer FedTree-style
+systems optimize.  GPU implementations scatter with atomics; TPUs have no
+atomics, so the TPU-native formulation (DESIGN.md §Hardware-adaptation)
+turns the scatter into an MXU contraction per (sample-block, feature-block):
+
+    one_hot(bins)ᵀ @ [grad, hess]  --  (F_b·B_bins, N_b) x (N_b, 2)
+
+The sample-block grid axis is sequential; the (F_b, B_bins, 2) output block
+stays resident in VMEM and accumulates across sample blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hist_kernel(bins_ref, gh_ref, o_ref, *, n_bins: int, block_f: int,
+                 block_n: int):
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    bins = bins_ref[...]                       # (block_n, block_f) int32
+    gh = gh_ref[...].astype(jnp.float32)       # (block_n, 2)
+    iota = jax.lax.broadcasted_iota(jnp.int32,
+                                    (block_n, block_f, n_bins), 2)
+    onehot = (bins[:, :, None] == iota).astype(jnp.float32)
+    oh2 = onehot.reshape(block_n, block_f * n_bins)
+    upd = jax.lax.dot_general(oh2, gh, (((0,), (0,)), ((), ())))
+    o_ref[...] += upd.reshape(block_f, n_bins, 2)
+
+
+def hist_pallas(bins, grad, hess, n_bins: int, *, block_n: int = 1024,
+                block_f: int = 8, interpret: bool = False):
+    """bins (n, F) int32 in [0, n_bins); grad/hess (n,) -> (F, n_bins, 2)."""
+    n, F = bins.shape
+    block_n = min(block_n, max(n, 1))
+    block_f = min(block_f, F)
+    pad_n = (-n) % block_n
+    pad_f = (-F) % block_f
+    gh = jnp.stack([grad, hess], axis=1).astype(jnp.float32)
+    if pad_n:
+        bins = jnp.pad(bins, ((0, pad_n), (0, 0)))
+        gh = jnp.pad(gh, ((0, pad_n), (0, 0)))     # zero grad -> no effect
+    if pad_f:
+        bins = jnp.pad(bins, ((0, 0), (0, pad_f)))
+    np_, Fp = bins.shape
+    grid = (Fp // block_f, np_ // block_n)
+    out = pl.pallas_call(
+        functools.partial(_hist_kernel, n_bins=n_bins, block_f=block_f,
+                          block_n=block_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, block_f), lambda f, s: (s, f)),
+            pl.BlockSpec((block_n, 2), lambda f, s: (s, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_f, n_bins, 2), lambda f, s: (f, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Fp, n_bins, 2), jnp.float32),
+        interpret=interpret,
+    )(bins, gh)
+    return out[:F]

@@ -1,0 +1,16 @@
+"""Public jit'd wrapper for the GBDT gradient histogram."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.hist.kernel import hist_pallas
+from repro.kernels.hist.ref import hist_ref
+
+
+def gradient_histogram(bins, grad, hess, n_bins: int, *, impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() != "cpu" else "xla"
+    if impl in ("pallas", "pallas_interpret"):
+        return hist_pallas(bins, grad, hess, n_bins,
+                           interpret=(impl == "pallas_interpret"))
+    return hist_ref(bins, grad, hess, n_bins)

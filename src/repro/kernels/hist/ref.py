@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the histogram kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def hist_ref(bins, grad, hess, n_bins: int):
+    """bins (n,F) int32; grad/hess (n,) -> (F, n_bins, 2) fp32."""
+    def per_feature(col):
+        g = jax.ops.segment_sum(grad.astype(jnp.float32), col, n_bins)
+        h = jax.ops.segment_sum(hess.astype(jnp.float32), col, n_bins)
+        return jnp.stack([g, h], axis=-1)
+    return jax.vmap(per_feature, in_axes=1)(bins)

@@ -1,0 +1,18 @@
+"""Public jit'd wrapper for the SSD scan."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd.kernel import ssd_pallas
+from repro.models.ssm import ssd_chunked
+
+
+def ssd(x, dt, a_log, b, c, chunk: int, *, impl: str = "auto",
+        init_state=None):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() != "cpu" else "xla"
+    if impl in ("pallas", "pallas_interpret"):
+        assert init_state is None, "pallas SSD path starts from zero state"
+        return ssd_pallas(x, dt, a_log, b, c, chunk,
+                          interpret=(impl == "pallas_interpret"))
+    return ssd_chunked(x, dt, a_log, b, c, chunk, init_state=init_state)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle: re-exports the model's chunked SSD (itself validated
+against a step-by-step sequential recurrence in tests)."""
+from repro.models.ssm import ssd_chunked as ssd_ref  # noqa: F401
+
+
+def ssd_sequential(x, dt, a_log, b, c):
+    """O(T) sequential recurrence — the ground-truth semantics."""
+    import jax
+    import jax.numpy as jnp
+    B, T, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    f32 = jnp.float32
+    A = -jnp.exp(a_log.astype(f32))
+    dtf = dt.astype(f32)
+    bf = jnp.repeat(b.astype(f32), rep, axis=2)
+    cf = jnp.repeat(c.astype(f32), rep, axis=2)
+    xf = x.astype(f32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        da = jnp.exp(dtt * A)  # (B,H)
+        upd = jnp.einsum("bh,bhn,bhp->bhpn", dtt, bt, xt)
+        state = state * da[:, :, None, None] + upd
+        y = jnp.einsum("bhn,bhpn->bhp", ct, state)
+        return state, y
+
+    s0 = jnp.zeros((B, H, P, N), f32)
+    xs = (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+          bf.transpose(1, 0, 2, 3), cf.transpose(1, 0, 2, 3))
+    final, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), final

@@ -1,0 +1,236 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh),
+record memory/cost/collective analysis for §Dry-run and §Roofline.
+
+The two lines above MUST stay first: jax locks the device count at first
+initialization (system prompt / DESIGN.md).  Never import this module from
+tests — run it as ``python -m repro.launch.dryrun``.
+"""  # noqa: E402
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import registry as R
+from repro.configs.base import INPUT_SHAPES, RunConfig
+from repro.launch import mesh as M
+from repro.launch.hlo_analysis import (fused_memory_bytes,
+                                        parse_collectives, roofline_terms)
+from repro.launch.steps import step_artifacts
+
+
+def _jsonable(x):
+    if isinstance(x, (np.integer,)):
+        return int(x)
+    if isinstance(x, (np.floating,)):
+        return float(x)
+    return x
+
+
+def _reduce_layers(cfg, n: int):
+    over = {"num_layers": n}
+    if cfg.encoder is not None and cfg.encoder.num_layers:
+        over["encoder"] = dataclasses.replace(cfg.encoder, num_layers=n)
+    return dataclasses.replace(cfg, **over)
+
+
+def _lower_compile(cfg, shape, run, mesh):
+    art = step_artifacts(cfg, shape, run, mesh)
+    t0 = time.time()
+    with jax.sharding.set_mesh(mesh):
+        jitted = jax.jit(art["step"], in_shardings=art["in_specs"],
+                         out_shardings=art["out_specs"],
+                         donate_argnums=art["donate"])
+        lowered = jitted.lower(*art["abstract"])
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    return compiled, t_lower, t_compile
+
+
+def _costs(compiled):
+    cost = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    coll = parse_collectives(txt)
+    return {"flops": float(cost.get("flops", 0.0)),
+            "hbm": float(cost.get("bytes accessed", 0.0)),
+            "fused": float(fused_memory_bytes(txt)),
+            "wire": float(coll.wire_bytes),
+            "by_kind": coll.bytes_by_kind,
+            "counts": coll.count_by_kind}
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+               run: Optional[RunConfig] = None, mesh=None,
+               save_dir: str = "results/dryrun", tag: str = "baseline",
+               verbose: bool = True, pad_vocab: bool = False,
+               pad_heads: bool = False) -> Dict:
+    cfg = R.get(arch)
+    shape = INPUT_SHAPES[shape_name]
+    run = run or RunConfig()
+    if getattr(run, "pad_vocab", False) or pad_vocab:
+        cfg = dataclasses.replace(cfg, pad_vocab=True)
+    if pad_heads:
+        cfg = dataclasses.replace(cfg, pad_heads=True)
+    run = dataclasses.replace(run, scan_unroll=False)
+    mesh = mesh or M.make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+
+    # Pass A: rolled scans, FULL depth -> proof-of-compile + memory analysis
+    # (cost_analysis of a rolled scan counts the body ONCE — see DESIGN.md —
+    # so FLOPs/bytes/collectives come from passes B/C below).
+    compiled, t_lower, t_compile = _lower_compile(cfg, shape, run, mesh)
+    try:
+        ma = compiled.memory_analysis()
+        mem = {k: int(getattr(ma, k)) for k in
+               ("argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes")
+               if hasattr(ma, k)}
+    except Exception as e:  # backend may not support it
+        mem = {"error": str(e)}
+
+    # Passes B/C: fully-unrolled 2- and 4-layer variants; per-layer cost is
+    # exactly linear for a homogeneous scanned stack, so
+    #   cost(L) = cost(2) + (L-2)/2 * (cost(4) - cost(2)).
+    run_u = dataclasses.replace(run, scan_unroll=True)
+    cB, *_ = _lower_compile(_reduce_layers(cfg, 2), shape, run_u, mesh)
+    cC, *_ = _lower_compile(_reduce_layers(cfg, 4), shape, run_u, mesh)
+    xB, xC = _costs(cB), _costs(cC)
+    L = cfg.num_layers
+
+    def extrap(b, c):
+        return b + (L - 2) / 2.0 * (c - b)
+
+    flops = extrap(xB["flops"], xC["flops"])
+    hbm_bytes = extrap(xB["hbm"], xC["hbm"])
+    fused_bytes = extrap(xB["fused"], xC["fused"])
+    wire_bytes = extrap(xB["wire"], xC["wire"])
+    by_kind = {k: extrap(xB["by_kind"].get(k, 0), xC["by_kind"].get(k, 0))
+               for k in set(xB["by_kind"]) | set(xC["by_kind"])}
+    counts = {k: extrap(xB["counts"].get(k, 0), xC["counts"].get(k, 0))
+              for k in set(xB["counts"]) | set(xC["counts"])}
+    coll_wire = wire_bytes
+    terms = roofline_terms(
+        flops, hbm_bytes, coll_wire, fused_bytes=fused_bytes,
+        peak_flops=M.PEAK_FLOPS_BF16, hbm_bw=M.HBM_BW, ici_bw=M.ICI_BW)
+
+    n_chips = mesh.size
+    model_flops = (6 * cfg.num_active_params() * shape.global_batch
+                   * shape.seq_len if shape.phase == "train" else
+                   2 * cfg.num_active_params() * shape.global_batch
+                   * (shape.seq_len if shape.phase == "prefill" else 1))
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "phase": shape.phase, "tag": tag,
+        "n_chips": n_chips,
+        "params": cfg.num_params(),
+        "active_params": cfg.num_active_params(),
+        "flops_per_device": flops,
+        "hbm_bytes_per_device": hbm_bytes,
+        "fused_hbm_bytes_per_device": fused_bytes,
+        "collective_wire_bytes": coll_wire,
+        "collective_bytes_by_kind": by_kind,
+        "collective_count_by_kind": counts,
+        "memory_analysis": mem,
+        "roofline": {k: _jsonable(v) for k, v in terms.items()},
+        "model_flops_global": float(model_flops),
+        "model_flops_per_device": float(model_flops / n_chips),
+        "useful_flops_ratio": float(model_flops / n_chips / flops)
+        if flops else 0.0,
+        "lower_s": t_lower, "compile_s": t_compile,
+        "cost_2layer": xB, "cost_4layer": xC,
+        "run_config": dataclasses.asdict(run),
+    }
+    if save_dir:
+        os.makedirs(save_dir, exist_ok=True)
+        fn = f"{save_dir}/{tag}__{mesh_name}__{arch}__{shape_name}.json"
+        with open(fn, "w") as f:
+            json.dump(rec, f, indent=1)
+    if verbose:
+        r = rec["roofline"]
+        print(f"[{mesh_name}] {arch} x {shape_name}: "
+              f"compute {r['compute_s']*1e3:.2f}ms  "
+              f"memory {r.get('memory_fused_s', r['memory_s'])*1e3:.2f}ms"
+              f"(fused; raw {r['memory_s']*1e3:.0f})  "
+              f"collective {r['collective_s']*1e3:.2f}ms  "
+              f"-> {r['dominant']}  "
+              f"(useful-flops {rec['useful_flops_ratio']*100:.0f}%, "
+              f"compile {t_compile:.0f}s)")
+        if "temp_size_in_bytes" in mem:
+            print(f"  memory_analysis: args "
+                  f"{mem.get('argument_size_in_bytes',0)/2**30:.2f}GiB "
+                  f"out {mem.get('output_size_in_bytes',0)/2**30:.2f}GiB "
+                  f"temp {mem.get('temp_size_in_bytes',0)/2**30:.2f}GiB")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all' (LM archs)")
+    ap.add_argument("--shape", default="all",
+                    help="input-shape name or 'all'")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--save-dir", default="results/dryrun")
+    # RunConfig perf levers (§Perf)
+    ap.add_argument("--remat", default="full",
+                    choices=["none", "full", "dots"])
+    ap.add_argument("--causal-block-skip", action="store_true")
+    ap.add_argument("--no-seq-shard", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--moe-impl", default="auto",
+                    choices=["auto", "local", "ep"])
+    ap.add_argument("--attn-kv-chunk", type=int, default=1024)
+    ap.add_argument("--pad-vocab", action="store_true")
+    ap.add_argument("--pad-heads", action="store_true")
+    ap.add_argument("--gqa-broadcast-kv", action="store_true")
+    ap.add_argument("--moe-gather-bf16", action="store_true")
+    args = ap.parse_args()
+
+    run = RunConfig(remat=args.remat,
+                    causal_block_skip=args.causal_block_skip,
+                    seq_shard_activations=not args.no_seq_shard,
+                    fsdp_params=not args.no_fsdp,
+                    moe_impl=args.moe_impl,
+                    attn_kv_chunk=args.attn_kv_chunk,
+                    gqa_broadcast_kv=args.gqa_broadcast_kv,
+                    moe_gather_bf16=args.moe_gather_bf16)
+
+    archs = R.LM_ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = ([False, True] if args.both_meshes
+              else [args.multi_pod])
+    failures = []
+    for mp in meshes:
+        mesh = M.make_production_mesh(multi_pod=mp)
+        for arch in archs:
+            for shape in shapes:
+                try:
+                    dryrun_one(arch, shape, run=run, mesh=mesh,
+                               save_dir=args.save_dir, tag=args.tag,
+                               pad_vocab=args.pad_vocab,
+                               pad_heads=args.pad_heads)
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append((arch, shape, mp, repr(e)))
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nDRY-RUN: all combinations lowered + compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,170 @@
+"""Post-SPMD HLO analysis: collective-bytes extraction + roofline terms.
+
+``cost_analysis`` gives FLOPs and HBM bytes of the per-device partitioned
+module; collective traffic is not in it, so we parse the compiled HLO text
+and sum result-shape bytes of every collective op.
+
+Ring-model byte accounting (documented convention, EXPERIMENTS.md):
+  all-gather / all-to-all / collective-permute : 1 x result bytes
+  reduce-scatter                               : result bytes x (group-1)
+  all-reduce                                   : 2 x result bytes
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "all-to-all", "reduce-scatter",
+                "collective-permute")
+# e.g. "%ar = (f32[8,16], f32[4]) all-reduce(" or "%ag = bf16[2,4] all-gather("
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9\[\],{}: ]*?)\s*"
+    r"(all-reduce|all-gather|all-to-all|reduce-scatter|collective-permute)"
+    r"(?:-start|-done)?\(")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+    wire_bytes: int = 0           # ring-model bytes on the wire per device
+
+    def add(self, kind: str, result_bytes: int, group: int):
+        self.bytes_by_kind[kind] = (self.bytes_by_kind.get(kind, 0)
+                                    + result_bytes)
+        self.count_by_kind[kind] = self.count_by_kind.get(kind, 0) + 1
+        if kind == "all-reduce":
+            wire = 2 * result_bytes
+        elif kind == "reduce-scatter":
+            wire = result_bytes * max(group - 1, 1)
+        else:
+            wire = result_bytes
+        self.wire_bytes += wire
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        if not any(c in line for c in _COLLECTIVES):
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        # async pairs: count -start, skip -done (same transfer)
+        if f"{m.group(2)}-done(" in line:
+            continue
+        result_bytes = _shape_bytes(m.group(1))
+        stats.add(m.group(2), result_bytes, _group_size(line))
+    return stats
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+|[\w.\-]+)\s*=\s*(\([^)]*\)|"
+                     r"[a-z0-9\[\],{}: ]*?)\s*([a-z][a-z0-9\-]*)\(")
+_ARGS_RE = re.compile(r"%[\w.\-]+")
+# ops that genuinely stream HBM on a fused TPU backend
+_HBM_OPS = ("dot", "convolution", "scatter", "gather", "sort",
+            "dynamic-update-slice")
+
+
+def fused_memory_bytes(hlo_text: str) -> int:
+    """TPU-fusion-aware HBM traffic estimate.
+
+    The CPU backend's ``bytes accessed`` counts every elementwise /
+    convert / copy op a TPU backend would fuse away, inflating the memory
+    roofline term ~100x (measured; EXPERIMENTS.md §Methodology).  This
+    estimate counts only tensors that must stream from/to HBM:
+
+      entry parameters (weights/caches read once)
+      + root outputs
+      + dot/conv/scatter/gather/sort operands and results
+      + collective results.
+    """
+    defs: Dict[str, int] = {}
+    total = 0
+    in_entry = False
+    entry_depth = 0
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if line.startswith("ENTRY"):
+            in_entry = True
+            continue
+        if in_entry and line.strip() == "}":
+            in_entry = False
+        if not m:
+            continue
+        name, shape_txt, op = m.group(1), m.group(2), m.group(3)
+        nbytes = _shape_bytes(shape_txt)
+        defs[name.lstrip("%")] = nbytes
+        if in_entry and op == "parameter":
+            total += nbytes
+        if in_entry and ("ROOT" in line):
+            total += nbytes
+        if op in _HBM_OPS:
+            total += nbytes  # result
+            # operands (resolved via the def map; forward refs are rare)
+            tail = line[m.end():]
+            for ref in _ARGS_RE.findall(tail.split("metadata=")[0]):
+                total += defs.get(ref.lstrip("%"), 0)
+        elif any(c in op for c in _COLLECTIVES):
+            total += nbytes
+    return int(total)
+
+
+def roofline_terms(flops: float, hbm_bytes: float, wire_bytes: float,
+                   *, peak_flops: float, hbm_bw: float, ici_bw: float,
+                   n_links: int = 4,
+                   fused_bytes: Optional[float] = None) -> Dict[str, float]:
+    """Per-device step-time lower bounds. n_links: v5e torus links per chip
+    usable concurrently (2D torus -> ~4; we report the 1-link figure too).
+
+    ``memory_s`` uses the raw (unfused, upper-bound) bytes-accessed;
+    ``memory_fused_s`` the fusion-aware estimate — the dominant term is
+    judged on the fused figure when available (EXPERIMENTS.md
+    §Methodology)."""
+    compute_s = flops / peak_flops
+    memory_s = hbm_bytes / hbm_bw
+    coll_s = wire_bytes / (ici_bw * n_links)
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s,
+             "collective_s_1link": wire_bytes / ici_bw}
+    mem_key = "memory_s"
+    if fused_bytes is not None:
+        terms["memory_fused_s"] = fused_bytes / hbm_bw
+        mem_key = "memory_fused_s"
+    dom = max(("compute_s", mem_key, "collective_s"),
+              key=lambda k: terms[k])
+    terms["dominant"] = dom
+    terms["bound_s"] = terms[dom]
+    return terms

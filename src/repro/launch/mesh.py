@@ -1,0 +1,28 @@
+"""Production mesh builders (functions, not module constants — importing
+this module never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16,16) = 256 chips ('data','model').
+    Multi-pod: (2,16,16) = 512 chips ('pod','data','model') — the 'pod'
+    axis is the federation axis (pods = hospitals, DESIGN.md)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (perf experiments / tests)."""
+    return jax.make_mesh(
+        tuple(shape), tuple(axes),
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+# TPU v5e hardware constants (roofline; see EXPERIMENTS.md §Roofline)
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link

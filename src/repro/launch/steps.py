@@ -1,0 +1,176 @@
+"""Step-function builders shared by dryrun / train / serve / fed_train.
+
+Builds jit-able train / prefill / decode steps for any (arch, shape) with
+sharding trees derived from the logical-axis rules, plus abstract
+(ShapeDtypeStruct) input pytrees for compile-only dry-runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.models import api
+from repro.models.params import (ParamDef, abstract_tree, init_tree, is_def,
+                                 pdef, spec_tree)
+from repro.optim import adamw
+from repro.optim.optimizers import OptState
+from repro.sharding.rules import (DECODE_RULES, LONG_DECODE_RULES,
+                                  TRAIN_RULES, Rules, ShardingCtx)
+
+
+def production_rules(mesh, phase: str, shape_name: str = "") -> Rules:
+    """Adapt the base rule tables to the actual mesh axes.
+
+    Multi-pod ('pod' axis present): batch gains the pod axis (pure DP across
+    pods — params replicated per pod, grad all-reduce crosses the pod axis,
+    matching the pods-as-federated-clients deployment); the long_500k cache
+    spreads its sequence over every axis."""
+    if phase == "decode":
+        base = dict(LONG_DECODE_RULES if shape_name == "long_500k"
+                    else DECODE_RULES)
+    else:
+        base = dict(TRAIN_RULES)
+    if mesh is not None and "pod" in mesh.shape:
+        if base.get("batch") == "data":
+            base["batch"] = ("pod", "data")
+        if shape_name == "long_500k":
+            base["cache_seq"] = ("pod", "data", "model")
+    return base
+
+
+def make_ctx(mesh, phase: str, shape_name: str = "",
+             run: Optional[RunConfig] = None) -> ShardingCtx:
+    rules = production_rules(mesh, phase, shape_name)
+    disabled = []
+    if run is not None and not run.fsdp_params:
+        disabled.append("fsdp")
+    if run is not None and not run.seq_shard_activations:
+        disabled.append("act_seq")
+    return ShardingCtx(mesh=mesh, rules=rules, disabled=tuple(disabled))
+
+
+def _cast_defs(defs, dtype):
+    return jax.tree.map(
+        lambda d: ParamDef(d.shape, d.axes, d.init, d.scale, dtype)
+        if jnp.issubdtype(d.dtype, jnp.floating) else d,
+        defs, is_leaf=is_def)
+
+
+def opt_defs(param_defs_tree):
+    """Adam mu/nu ParamDefs matching params (fp32, same sharding)."""
+    f32 = jax.tree.map(
+        lambda d: ParamDef(d.shape, d.axes, "zeros", 1.0, jnp.float32),
+        param_defs_tree, is_leaf=is_def)
+    return {"step": pdef((), (), init="zeros", dtype=jnp.int32),
+            "mu": f32, "nu": f32}
+
+
+# --- step functions -----------------------------------------------------------
+
+def build_train_step(cfg: ModelConfig, run: RunConfig, ctx: ShardingCtx,
+                     lr: float = 3e-4):
+    opt = adamw(weight_decay=0.01)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, metrics = api.train_loss(p, batch, cfg, run, ctx)
+            return loss, metrics
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        state = OptState(opt_state["step"], opt_state["mu"],
+                         opt_state["nu"])
+        new_params, new_state = opt.update(grads, state, params, lr)
+        new_opt = {"step": new_state.step, "mu": new_state.mu,
+                   "nu": new_state.nu}
+        return new_params, new_opt, {"loss": loss, **metrics}
+
+    return train_step
+
+
+def build_prefill_step(cfg, run, ctx, shape: ShapeConfig):
+    window = api.decode_window(cfg, shape)
+
+    def prefill_step(params, batch):
+        return api.prefill(params, batch, cfg, run, ctx, window=window)
+
+    return prefill_step
+
+
+def build_decode_step(cfg, run, ctx, shape: ShapeConfig):
+    window = api.decode_window(cfg, shape)
+
+    def decode_step(params, cache, batch):
+        logits, new_cache = api.decode_step(params, batch, cache, cfg, run,
+                                            ctx, window=window)
+        return logits, new_cache
+
+    return decode_step
+
+
+# --- abstract inputs + shardings ----------------------------------------------
+
+def step_artifacts(cfg: ModelConfig, shape: ShapeConfig, run: RunConfig,
+                   mesh) -> Dict[str, Any]:
+    """Everything needed to lower one (arch, shape): the step fn, abstract
+    args, and in/out sharding trees."""
+    ctx = make_ctx(mesh, shape.phase, shape.name, run)
+    pdefs = api.param_defs(cfg)
+    idefs = api.input_defs(cfg, shape)
+    if shape.phase == "train":
+        odefs = opt_defs(pdefs)
+        step = build_train_step(cfg, run, ctx)
+        abstract = (abstract_tree(ctx, pdefs), abstract_tree(ctx, odefs),
+                    abstract_tree(ctx, idefs))
+        in_specs = (spec_tree(ctx, pdefs), spec_tree(ctx, odefs),
+                    spec_tree(ctx, idefs))
+        out_specs = (spec_tree(ctx, pdefs), spec_tree(ctx, odefs), None)
+        donate = (0, 1)
+    elif shape.phase == "prefill":
+        sp_defs = _cast_defs(pdefs, jnp.bfloat16)  # serving params in bf16
+        cdefs = api.cache_defs(cfg, shape.global_batch, shape.seq_len)
+        step = build_prefill_step(cfg, run, ctx, shape)
+        abstract = (abstract_tree(ctx, sp_defs), abstract_tree(ctx, idefs))
+        in_specs = (spec_tree(ctx, sp_defs), spec_tree(ctx, idefs))
+        out_specs = (None, spec_tree(ctx, cdefs))
+        donate = ()
+    else:  # decode
+        sp_defs = _cast_defs(pdefs, jnp.bfloat16)
+        cdefs = api.cache_defs(cfg, shape.global_batch, shape.seq_len)
+        step = build_decode_step(cfg, run, ctx, shape)
+        abstract = (abstract_tree(ctx, sp_defs), abstract_tree(ctx, cdefs),
+                    abstract_tree(ctx, idefs))
+        in_specs = (spec_tree(ctx, sp_defs), spec_tree(ctx, cdefs),
+                    spec_tree(ctx, idefs))
+        out_specs = (None, spec_tree(ctx, cdefs))
+        donate = (1,)
+    return dict(ctx=ctx, step=step, abstract=abstract, in_specs=in_specs,
+                out_specs=out_specs, donate=donate, param_defs=pdefs)
+
+
+def concrete_inputs(cfg, shape, run, mesh, seed: int = 0):
+    """Materialized (small-config) inputs for smoke tests / real runs."""
+    import numpy as np
+    rng = jax.random.PRNGKey(seed)
+    ctx = make_ctx(mesh, shape.phase, shape.name, run)
+    pdefs = api.param_defs(cfg)
+    params = init_tree(rng, pdefs)
+    idefs = api.input_defs(cfg, shape)
+
+    def materialize(d: ParamDef):
+        if jnp.issubdtype(d.dtype, jnp.integer):
+            if d.shape == ():
+                return jnp.zeros((), d.dtype)
+            return jax.random.randint(rng, d.shape, 0,
+                                      max(cfg.vocab_size, 2), d.dtype)
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, d.dtype)
+        return jax.random.normal(rng, d.shape, jnp.float32).astype(d.dtype)
+
+    batch = jax.tree.map(materialize, idefs, is_leaf=is_def)
+    if "mask" in batch:
+        batch["mask"] = jnp.ones_like(batch["mask"])
+    return ctx, params, batch

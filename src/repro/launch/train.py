@@ -1,0 +1,106 @@
+"""Single-process training driver.
+
+Runs real steps on whatever devices exist (CPU smoke / single host / a real
+slice): ``--arch <id> --smoke`` trains the reduced config for a few hundred
+steps on synthetic corpus data — the end-to-end example driver.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_pytree
+from repro.configs import registry as R
+from repro.configs.base import RunConfig, ShapeConfig
+from repro.data.pipeline import CorpusConfig, SyntheticCorpus, lm_batches
+from repro.launch.steps import (build_train_step, make_ctx, opt_defs,
+                                step_artifacts)
+from repro.models import api
+from repro.models.params import count_params, init_tree
+
+
+def train(arch: str, *, smoke: bool = True, steps: int = 200,
+          batch: int = 8, seq: int = 128, lr: float = 1e-3,
+          log_every: int = 20, ckpt_path: str = "", seed: int = 0,
+          run: RunConfig = None):
+    cfg = R.get_smoke(arch) if smoke else R.get(arch)
+    run = run or RunConfig()
+    ctx = make_ctx(None, "train")   # null ctx on CPU; mesh via caller later
+    shape = ShapeConfig("custom", seq, batch, "train")
+
+    rng = jax.random.PRNGKey(seed)
+    params = init_tree(rng, api.param_defs(cfg))
+    odefs = opt_defs(api.param_defs(cfg))
+    opt_state = init_tree(rng, odefs)
+    n_params = count_params(api.param_defs(cfg))
+    print(f"{cfg.name}: {n_params/1e6:.1f}M params, "
+          f"{steps} steps @ batch {batch} seq {seq}")
+
+    step_fn = jax.jit(build_train_step(cfg, run, ctx, lr=lr))
+    corpus = SyntheticCorpus(CorpusConfig(vocab_size=cfg.vocab_size,
+                                          seed=seed))
+    it = lm_batches(corpus, batch, seq, seed=seed)
+
+    losses = []
+    t0 = time.time()
+    for i in range(steps):
+        b = next(it)
+        b = _adapt_batch(b, cfg, batch, seq)
+        params, opt_state, metrics = step_fn(params, opt_state, b)
+        losses.append(float(metrics["loss"]))
+        if (i + 1) % log_every == 0:
+            dt = time.time() - t0
+            print(f"  step {i+1}: loss {np.mean(losses[-log_every:]):.4f} "
+                  f"({dt/log_every*1e3:.0f} ms/step)")
+            t0 = time.time()
+    if ckpt_path:
+        nbytes = save_pytree(ckpt_path, params)
+        print(f"  checkpoint -> {ckpt_path} ({nbytes/1e6:.1f} MB)")
+    return params, losses
+
+
+def _adapt_batch(b, cfg, batch, seq):
+    """Add stub-frontend inputs for encdec/vlm families."""
+    out = {k: jnp.asarray(v) for k, v in b.items()}
+    if cfg.family == "encdec":
+        out["frames"] = jnp.asarray(
+            np.random.default_rng(0).normal(
+                0, 1, (batch, cfg.encoder.seq_len, cfg.d_model)),
+            jnp.bfloat16)
+    if cfg.family == "vlm":
+        img = cfg.encoder.num_image_tokens
+        out["patches"] = jnp.asarray(
+            np.random.default_rng(0).normal(
+                0, 1, (batch, img, cfg.encoder.frontend_dim)), jnp.bfloat16)
+        out["tokens"] = out["tokens"][:, :seq - img]
+        # image positions don't contribute to the loss
+        mask = np.ones((batch, seq), np.float32)
+        mask[:, :img] = 0.0
+        out["mask"] = jnp.asarray(mask)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--full", action="store_true",
+                    help="full (non-smoke) config — needs a real slice")
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+    params, losses = train(args.arch, smoke=not args.full,
+                           steps=args.steps, batch=args.batch,
+                           seq=args.seq, lr=args.lr, ckpt_path=args.ckpt)
+    print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Unified model API — dispatches by config family.
+
+Every architecture supports:
+  * ``param_defs(cfg)``                      -> ParamDef pytree
+  * ``train_loss / prefill / decode_step``   -> jit-able step fns
+  * ``input_defs(cfg, shape)``               -> ParamDef-style input specs
+  * ``cache_defs(cfg, batch, seq)``          -> decode cache specs
+  * ``decode_window(cfg, shape)``            -> sliding window (long_500k
+    policy, DESIGN.md): None natively sub-quadratic or short decode.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, transformer, vlm
+from repro.models.params import pdef
+
+
+def _mod(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return encdec
+    if cfg.family == "vlm":
+        return vlm
+    return transformer
+
+
+def param_defs(cfg: ModelConfig):
+    return _mod(cfg).model_defs(cfg)
+
+
+def decode_window(cfg: ModelConfig, shape: ShapeConfig) -> Optional[int]:
+    """Sliding-window policy: long_500k runs windowed attention for archs
+    whose native attention is full (dense/moe/vlm/encdec/hybrid-attn-heads);
+    SSM needs nothing (state is O(1))."""
+    if shape.name == "long_500k" and not cfg.attn_free:
+        return cfg.long_context_window
+    return None
+
+
+def train_loss(params, batch, cfg, run, ctx):
+    return _mod(cfg).train_loss(params, batch, cfg, run, ctx)
+
+
+def prefill(params, batch, cfg, run, ctx, window=None):
+    return _mod(cfg).prefill(params, batch, cfg, run, ctx, window=window)
+
+
+def decode_step(params, batch, caches, cfg, run, ctx, window=None):
+    return _mod(cfg).decode_step(params, batch, caches, cfg, run, ctx,
+                                 window=window)
+
+
+def cache_defs(cfg, batch: int, seq: int):
+    return _mod(cfg).cache_defs(cfg, batch, seq)
+
+
+def input_defs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """ParamDef trees for every model input of the given phase
+    (weak-type-correct, shardable, no allocation — dry-run stand-ins)."""
+    B, T = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.phase == "decode":
+        return {"token": pdef((B,), ("batch",), dtype=i32),
+                "pos": pdef((), (), dtype=i32)}
+    toks = T
+    extra: Dict = {}
+    if cfg.family == "encdec":
+        extra["frames"] = pdef(
+            (B, cfg.encoder.seq_len, cfg.d_model),
+            ("batch", "enc_seq", "embed"), dtype=jnp.bfloat16)
+    if cfg.family == "vlm":
+        img = cfg.encoder.num_image_tokens
+        toks = T - img
+        extra["patches"] = pdef(
+            (B, img, cfg.encoder.frontend_dim),
+            ("batch", None, "frontend"), dtype=jnp.bfloat16)
+    specs = dict(extra)
+    specs["tokens"] = pdef((B, toks), ("batch", "act_seq"), dtype=i32)
+    if shape.phase == "train":
+        specs["targets"] = pdef((B, T), ("batch", "act_seq"), dtype=i32)
+        specs["mask"] = pdef((B, T), ("batch", "act_seq"),
+                             dtype=jnp.float32)
+    return specs

@@ -1,0 +1,206 @@
+"""Attention: GQA with RoPE/qk-norm; chunked online-softmax for train &
+prefill (flash-style, bounded memory, pure XLA — the Pallas TPU kernel in
+``repro.kernels.flash_attention`` implements the same contract); masked
+full-cache read for decode.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.params import dense_def, pdef
+
+NEG_INF = -1e30
+
+
+def attention_defs(cfg, cross: bool = False):
+    d, H, K, dh = (cfg.d_model, cfg.padded_num_heads, cfg.num_kv_heads,
+                   cfg.head_dim_)
+    defs = {
+        "wq": pdef((d, H, dh), ("fsdp", "heads", "head_dim"),
+                   init="scaled", scale=d ** -0.5),
+        "wk": pdef((d, K, dh), ("fsdp", "kv_heads", "head_dim"),
+                   init="scaled", scale=d ** -0.5),
+        "wv": pdef((d, K, dh), ("fsdp", "kv_heads", "head_dim"),
+                   init="scaled", scale=d ** -0.5),
+        "wo": pdef((H, dh, d), ("heads", "head_dim", "fsdp"),
+                   init="scaled", scale=(H * dh) ** -0.5),
+    }
+    if cfg.qk_norm and not cross:
+        defs["q_norm"] = pdef((dh,), (None,), init="ones")
+        defs["k_norm"] = pdef((dh,), (None,), init="ones")
+    return defs
+
+
+def _project_qkv(p, x, kv_x, cfg, sin, cos, *, rope: bool = True):
+    dt = x.dtype
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", kv_x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", kv_x, p["wv"].astype(dt))
+    if cfg.qk_norm and "q_norm" in p:
+        q = L.rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = L.rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if rope and sin is not None:
+        q = L.apply_rope(q, sin, cos)
+        k = L.apply_rope(k, sin, cos)
+    return q, k, v
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: Optional[int] = None,
+                      kv_chunk: int = 1024, q_chunk: int = 1024,
+                      block_skip: bool = False, unroll: bool = False,
+                      broadcast_kv: bool = False):
+    """Online-softmax attention.
+
+    q (B,T,H,dh), k/v (B,S,K,dh) with H = G*K (GQA).  Returns (B,T,H,dh).
+
+    ``block_skip``: statically unroll over q chunks so fully-masked kv
+    blocks above the causal diagonal are never computed (halves prefill
+    attention FLOPs; a §Perf lever — the scan path is the baseline).
+    """
+    B, T, H, dh = q.shape
+    S, K = k.shape[1], k.shape[2]
+    if broadcast_kv and K != H:
+        # repeat kv heads to q heads: the (H)->(K,G) reshape below would
+        # split a model-sharded H dim and force per-layer q resharding;
+        # broadcasting kv keeps every einsum local (§Perf lever).
+        k = jnp.repeat(k, H // K, axis=2)
+        v = jnp.repeat(v, H // K, axis=2)
+        K = H
+    G = H // K
+    scale = dh ** -0.5
+    qg = q.reshape(B, T, K, G, dh).astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    if block_skip and causal and T == S:
+        q_chunk = min(q_chunk, T)
+        assert T % q_chunk == 0
+        outs = []
+        for qi in range(T // q_chunk):
+            q_lo, q_hi = qi * q_chunk, (qi + 1) * q_chunk
+            o = _attend_block(qg[:, q_lo:q_hi], kf[:, :q_hi], vf[:, :q_hi],
+                              q_offset=q_lo, causal=True, window=window,
+                              kv_chunk=kv_chunk, unroll=unroll)
+            outs.append(o)
+        out = jnp.concatenate(outs, axis=1)
+    else:
+        out = _attend_block(qg, kf, vf, q_offset=0, causal=causal,
+                            window=window, kv_chunk=kv_chunk, unroll=unroll)
+    return out.reshape(B, T, H, dh).astype(q.dtype)
+
+
+def _attend_block(qg, kf, vf, *, q_offset: int, causal: bool,
+                  window: Optional[int], kv_chunk: int,
+                  unroll: bool = False):
+    """Online-softmax scan over kv chunks. qg (B,Tq,K,G,dh) fp32 pre-scaled."""
+    B, Tq, K, G, dh = qg.shape
+    S = kf.shape[1]
+    kv_chunk = min(kv_chunk, S)
+    pad = (-S) % kv_chunk
+    if pad:
+        kf = jnp.pad(kf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nkv = kf.shape[1] // kv_chunk
+    ks = kf.reshape(B, nkv, kv_chunk, K, dh).transpose(1, 0, 2, 3, 4)
+    vs = vf.reshape(B, nkv, kv_chunk, K, dh).transpose(1, 0, 2, 3, 4)
+
+    q_pos = q_offset + jnp.arange(Tq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        j, kc, vc = inp
+        # logits (B, Tq, K, G, kc)
+        logits = jnp.einsum("btkgd,bskd->btkgs", qg, kc)
+        kv_pos = j * kv_chunk + jnp.arange(kv_chunk)
+        mask = kv_pos[None, :] < S  # padding
+        if causal:
+            mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+        if window is not None:
+            mask = mask & (kv_pos[None, :] > q_pos[:, None] - window)
+        logits = jnp.where(mask[None, :, None, None, :], logits, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum("btkgs,bskd->btkgd", p, vc)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Tq, K, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Tq, K, G), jnp.float32)
+    a0 = jnp.zeros((B, Tq, K, G, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (jnp.arange(nkv), ks, vs),
+        unroll=nkv if unroll else 1)
+    return acc / jnp.maximum(l, 1e-30)[..., None]
+
+
+def decode_attention(q, cache_k, cache_v, pos, *,
+                     window: Optional[int] = None):
+    """Single-token attention against a full cache with position masking.
+
+    q (B,H,dh); cache_k/v (B,S,K,dh); pos () current index (tokens written
+    so far == pos+1 after update).  Masked full-cache read: shardable over
+    cache_seq and memory-roofline-honest (see DESIGN.md long_500k policy).
+    """
+    B, H, dh = q.shape
+    S, K = cache_k.shape[1], cache_k.shape[2]
+    G = H // K
+    qg = (q.reshape(B, K, G, dh).astype(jnp.float32)) * dh ** -0.5
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, cache_k.astype(jnp.float32))
+    kv_pos = jnp.arange(S)
+    mask = kv_pos <= pos
+    if window is not None:
+        mask = mask & (kv_pos > pos - window)
+    logits = jnp.where(mask[None, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, cache_v.astype(jnp.float32))
+    return out.reshape(B, H, dh).astype(q.dtype)
+
+
+def attn_block(p, x, sin, cos, cfg, run, *, causal=True, window=None,
+               kv_x=None, rope=True):
+    """Full attention sub-block (projections + attention + output proj)."""
+    kv_inp = x if kv_x is None else kv_x
+    q, k, v = _project_qkv(p, x, kv_inp, cfg, sin, cos, rope=rope)
+    out = chunked_attention(
+        q, k, v, causal=causal, window=window,
+        kv_chunk=run.attn_kv_chunk, q_chunk=run.attn_q_chunk,
+        block_skip=run.causal_block_skip, unroll=run.scan_unroll,
+        broadcast_kv=run.gqa_broadcast_kv)
+    return jnp.einsum("bthk,hkd->btd", out, p["wo"].astype(x.dtype))
+
+
+def attn_decode_block(p, x, cache_k, cache_v, pos, sin, cos, cfg, *,
+                      window=None, cross=False):
+    """Decode-step attention.
+
+    x (B,1,d). Returns (out (B,1,d), new_k, new_v). For cross attention the
+    cache holds precomputed encoder k/v and is not updated.
+    """
+    dt = x.dtype
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(dt))
+    if cfg.qk_norm and "q_norm" in p:
+        q = L.rmsnorm(q, p["q_norm"], cfg.norm_eps)
+    if not cross:
+        k = jnp.einsum("btd,dhk->bthk", x, p["wk"].astype(dt))
+        v = jnp.einsum("btd,dhk->bthk", x, p["wv"].astype(dt))
+        if cfg.qk_norm and "k_norm" in p:
+            k = L.rmsnorm(k, p["k_norm"], cfg.norm_eps)
+        if sin is not None:
+            q = L.apply_rope(q, sin, cos)
+            k = L.apply_rope(k, sin, cos)
+        cache_k = jax.lax.dynamic_update_slice_in_dim(
+            cache_k, k.astype(cache_k.dtype), pos, axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(
+            cache_v, v.astype(cache_v.dtype), pos, axis=1)
+        att_pos = pos
+    else:
+        att_pos = cache_k.shape[1] - 1  # attend over all encoder states
+        window = None
+    out = decode_attention(q[:, 0], cache_k, cache_v, att_pos, window=window)
+    out = jnp.einsum("bhk,hkd->bd", out, p["wo"].astype(dt))[:, None]
+    return out, cache_k, cache_v

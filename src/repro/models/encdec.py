@@ -1,0 +1,192 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+Frontend carve-out (DESIGN.md): the mel-spectrogram + conv feature extractor
+is a stub — ``input_specs`` supplies pre-embedded audio frames
+(B, enc_seq, d_model). Positional scheme normalized to RoPE (backbone-shape
+faithful; Whisper's learned absolute embeddings don't change the systems
+behaviour). Encoder: bidirectional attention + GELU MLP; decoder: causal
+self-attention + cross-attention + GELU MLP.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.params import pdef, stack_layer_defs
+
+
+def enc_block_defs(cfg):
+    d = cfg.d_model
+    return {
+        "ln1": L.rmsnorm_def(d),
+        "attn": A.attention_defs(cfg),
+        "ln2": L.rmsnorm_def(d),
+        "mlp": T.gelu_mlp_defs(d, cfg.d_ff),
+    }
+
+
+def model_defs(cfg):
+    d = cfg.d_model
+    return {
+        "embed": L.embed_def(cfg.padded_vocab_size, d),
+        "enc_layers": stack_layer_defs(enc_block_defs(cfg),
+                                       cfg.encoder.num_layers),
+        "enc_norm": L.rmsnorm_def(d),
+        "layers": stack_layer_defs(
+            T.block_defs(cfg, cross_attention=True), cfg.num_layers),
+        "final_norm": L.rmsnorm_def(d),
+        "head": pdef((d, cfg.padded_vocab_size), ("fsdp", "vocab"),
+                     init="scaled", scale=d ** -0.5),
+    }
+
+
+def encode(params, frames, cfg, run, ctx):
+    """frames (B, S_enc, d) -> encoder states (B, S_enc, d)."""
+    h = frames.astype(cfg.activation_dtype)
+    h = ctx.constrain(h, "batch", "enc_seq", "embed")
+    S = h.shape[1]
+    sin, cos = L.rope_tables(jnp.arange(S), cfg.head_dim_, cfg.rope_theta)
+
+    def body(hh, layer_p):
+        x = L.rmsnorm(hh, layer_p["ln1"], cfg.norm_eps)
+        attn = A.attn_block(layer_p["attn"], x, sin, cos, cfg, run,
+                            causal=False)
+        hh = hh + attn
+        x = L.rmsnorm(hh, layer_p["ln2"], cfg.norm_eps)
+        hh = hh + T.gelu_mlp(layer_p["mlp"], x)
+        hh = ctx.constrain(hh, "batch", "enc_seq", "embed")
+        return hh, None
+
+    body = T._remat_wrap(body, run)
+    h, _ = jax.lax.scan(body, h, params["enc_layers"],
+                        unroll=cfg.encoder.num_layers
+                        if run.scan_unroll else 1)
+    return L.rmsnorm(h, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_block(p, h, enc_h, sin, cos, enc_sin, enc_cos, cfg, run, ctx, *,
+               collect_kv=False):
+    cache: Dict = {}
+    x = L.rmsnorm(h, p["ln1"], cfg.norm_eps)
+    q, k, v = A._project_qkv(p["attn"], x, x, cfg, sin, cos)
+    attn = A.chunked_attention(q, k, v, causal=True,
+                               kv_chunk=run.attn_kv_chunk,
+                               q_chunk=run.attn_q_chunk,
+                               block_skip=run.causal_block_skip,
+                               unroll=run.scan_unroll)
+    attn = jnp.einsum("bthk,hkd->btd", attn, p["attn"]["wo"].astype(h.dtype))
+    h = h + attn
+    if collect_kv:
+        cache.update({"k": k, "v": v})
+    x = L.rmsnorm(h, p["ln_cross"], cfg.norm_eps)
+    qc, kc, vc = A._project_qkv(p["cross"], x, enc_h, cfg, None, None,
+                                rope=False)
+    cross = A.chunked_attention(qc, kc, vc, causal=False,
+                                kv_chunk=run.attn_kv_chunk,
+                                q_chunk=run.attn_q_chunk,
+                                unroll=run.scan_unroll)
+    cross = jnp.einsum("bthk,hkd->btd", cross,
+                       p["cross"]["wo"].astype(h.dtype))
+    h = h + cross
+    if collect_kv:
+        cache.update({"cross_k": kc, "cross_v": vc})
+    x = L.rmsnorm(h, p["ln2"], cfg.norm_eps)
+    h = h + T.gelu_mlp(p["mlp"], x)
+    h = ctx.constrain(h, "batch", "act_seq", "embed")
+    return h, cache
+
+
+def train_loss(params, batch, cfg, run, ctx):
+    enc_h = encode(params, batch["frames"], cfg, run, ctx)
+    tokens = batch["tokens"]
+    h = L.embed_lookup(params["embed"], tokens, cfg.activation_dtype)
+    h = ctx.constrain(h, "batch", "act_seq", "embed")
+    Tlen = tokens.shape[1]
+    sin, cos = L.rope_tables(jnp.arange(Tlen), cfg.head_dim_, cfg.rope_theta)
+
+    def body(hh, layer_p):
+        hh, _ = _dec_block(layer_p, hh, enc_h, sin, cos, None, None,
+                           cfg, run, ctx)
+        return hh, None
+
+    body = T._remat_wrap(body, run)
+    h, _ = jax.lax.scan(body, h, params["layers"],
+                        unroll=cfg.num_layers if run.scan_unroll else 1)
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    loss, wt = L.cross_entropy_chunked(
+        h, params["head"].astype(h.dtype), batch["targets"], batch["mask"],
+        run.loss_chunk, ctx, unroll=run.scan_unroll,
+        valid_vocab=cfg.vocab_size)
+    return loss, {"ce": loss, "tokens": wt}
+
+
+def prefill(params, batch, cfg, run, ctx, *, window=None):
+    """Encode + run decoder prompt; returns (last logits, caches)."""
+    del window  # prompt-phase windowing not used for the enc-dec backbone
+    enc_h = encode(params, batch["frames"], cfg, run, ctx)
+    tokens = batch["tokens"]
+    h = L.embed_lookup(params["embed"], tokens, cfg.activation_dtype)
+    h = ctx.constrain(h, "batch", "act_seq", "embed")
+    Tlen = tokens.shape[1]
+    sin, cos = L.rope_tables(jnp.arange(Tlen), cfg.head_dim_, cfg.rope_theta)
+
+    def body(hh, layer_p):
+        hh, cache = _dec_block(layer_p, hh, enc_h, sin, cos, None, None,
+                               cfg, run, ctx, collect_kv=True)
+        return hh, cache
+
+    h, caches = jax.lax.scan(body, h, params["layers"],
+                             unroll=cfg.num_layers if run.scan_unroll else 1)
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = h[:, -1] @ params["head"].astype(h.dtype)
+    return logits.astype(jnp.float32)[:, :cfg.vocab_size], caches
+
+
+def decode_step(params, batch, caches, cfg, run, ctx, *, window=None):
+    tok = batch["token"][:, None]
+    pos = batch["pos"]
+    h = L.embed_lookup(params["embed"], tok, cfg.activation_dtype)
+    sin, cos = L.rope_tables(pos[None].astype(jnp.int32), cfg.head_dim_,
+                             cfg.rope_theta)
+
+    def body(hh, xs):
+        layer_p, cache = xs
+        x = L.rmsnorm(hh, layer_p["ln1"], cfg.norm_eps)
+        attn, ck, cv = A.attn_decode_block(
+            layer_p["attn"], x, cache["k"], cache["v"], pos, sin, cos, cfg,
+            window=window)
+        hh = hh + attn
+        x = L.rmsnorm(hh, layer_p["ln_cross"], cfg.norm_eps)
+        cross, _, _ = A.attn_decode_block(
+            layer_p["cross"], x, cache["cross_k"], cache["cross_v"], pos,
+            None, None, cfg, cross=True)
+        hh = hh + cross
+        x = L.rmsnorm(hh, layer_p["ln2"], cfg.norm_eps)
+        hh = hh + T.gelu_mlp(layer_p["mlp"], x)
+        new_cache = {"k": ck, "v": cv, "cross_k": cache["cross_k"],
+                     "cross_v": cache["cross_v"]}
+        return hh, new_cache
+
+    h, new_caches = jax.lax.scan(body, h, (params["layers"], caches),
+                                 unroll=cfg.num_layers
+                                 if run.scan_unroll else 1)
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = h[:, 0] @ params["head"].astype(h.dtype)
+    return logits.astype(jnp.float32)[:, :cfg.vocab_size], new_caches
+
+
+def cache_defs(cfg, batch: int, seq: int):
+    Ldim = cfg.num_layers
+    K, dh = cfg.num_kv_heads, cfg.head_dim_
+    kv = pdef((Ldim, batch, seq, K, dh),
+              (None, "batch", "cache_seq", "kv_heads", "head_dim"),
+              init="zeros", dtype=jnp.bfloat16)
+    ckv = pdef((Ldim, batch, cfg.encoder.seq_len, K, dh),
+               (None, "batch", "enc_seq", "kv_heads", "head_dim"),
+               init="zeros", dtype=jnp.bfloat16)
+    return {"k": kv, "v": kv, "cross_k": ckv, "cross_v": ckv}

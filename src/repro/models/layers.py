@@ -1,0 +1,136 @@
+"""Shared layers: norms, RoPE, SwiGLU MLP, embeddings, losses."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import pdef, dense_def
+
+
+# --- norms ------------------------------------------------------------------
+
+def rmsnorm_def(d: int, axis: Optional[str] = None):
+    return pdef((d,), (axis,), init="ones")
+
+
+def rmsnorm(x, w, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(dt)
+
+
+def layernorm_def(d: int):
+    return {"scale": pdef((d,), (None,), init="ones"),
+            "bias": pdef((d,), (None,), init="zeros")}
+
+
+def layernorm(x, p, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(dt)
+
+
+# --- RoPE -------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def rope_tables(positions, head_dim: int, theta: float):
+    """positions (...,) -> (sin, cos) each (..., head_dim//2) fp32."""
+    freqs = rope_freqs(head_dim, theta)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x, sin, cos):
+    """x (..., T, H, dh); sin/cos (T, dh//2) or broadcastable (..., T, dh//2)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    if sin.ndim == 2:  # (T, dh//2) -> broadcast over batch and heads
+        sin = sin[:, None, :]
+        cos = cos[:, None, :]
+    else:  # (..., T, dh//2) -> add heads dim
+        sin = sin[..., None, :]
+        cos = cos[..., None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(dt)
+
+
+# --- MLP --------------------------------------------------------------------
+
+def swiglu_defs(d: int, d_ff: int, fsdp: Optional[str] = "fsdp"):
+    return {
+        "w_gate": dense_def(d, d_ff, fsdp, "mlp"),
+        "w_up": dense_def(d, d_ff, fsdp, "mlp"),
+        "w_down": dense_def(d_ff, d, "mlp", fsdp),
+    }
+
+
+def swiglu(p, x, dtype=None):
+    dt = dtype or x.dtype
+    g = x @ p["w_gate"].astype(dt)
+    u = x @ p["w_up"].astype(dt)
+    return (jax.nn.silu(g) * u) @ p["w_down"].astype(dt)
+
+
+# --- embedding / head -------------------------------------------------------
+
+def embed_def(vocab: int, d: int):
+    return pdef((vocab, d), ("vocab", "fsdp"), init="normal")
+
+
+def embed_lookup(table, ids, dtype):
+    return jnp.take(table.astype(dtype), ids, axis=0)
+
+
+def cross_entropy_chunked(h, w_head, labels, mask, chunk: int,
+                          ctx=None, unroll: bool = False,
+                          valid_vocab: int = 0):
+    """Next-token CE computed in token chunks to bound live logits.
+
+    h       (B, T, d)  final hidden states
+    w_head  (d, V)
+    labels  (B, T) int32 (next-token targets)
+    mask    (B, T) 1.0 where the position contributes to the loss
+    Returns (mean loss fp32, total weight).
+    """
+    B, T, d = h.shape
+    V = w_head.shape[1]
+    h2 = h.reshape(B * T, d)
+    l2 = labels.reshape(B * T)
+    m2 = mask.reshape(B * T).astype(jnp.float32)
+    n = B * T
+    chunk = min(chunk, n)
+    pad = (-n) % chunk
+    if pad:
+        h2 = jnp.pad(h2, ((0, pad), (0, 0)))
+        l2 = jnp.pad(l2, (0, pad))
+        m2 = jnp.pad(m2, (0, pad))
+    nchunks = h2.shape[0] // chunk
+    h3 = h2.reshape(nchunks, chunk, d)
+    l3 = l2.reshape(nchunks, chunk)
+    m3 = m2.reshape(nchunks, chunk)
+
+    def body(carry, inp):
+        hs, ls, ms = inp
+        logits = (hs @ w_head.astype(hs.dtype)).astype(jnp.float32)
+        if valid_vocab and valid_vocab < logits.shape[-1]:
+            logits = logits[:, :valid_vocab]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ls[:, None], axis=-1)[:, 0]
+        loss = jnp.sum((lse - gold) * ms)
+        tot, wt = carry
+        return (tot + loss, wt + jnp.sum(ms)), None
+
+    (tot, wt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)),
+                                (h3, l3, m3), unroll=nchunks if unroll else 1)
+    return tot / jnp.maximum(wt, 1.0), wt

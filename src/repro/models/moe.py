@@ -1,0 +1,202 @@
+"""Mixture-of-Experts layer: top-k router + capacity-bounded dispatch.
+
+Two implementations of the same math (cross-checked in tests):
+
+* ``local``  — sort-based dispatch in plain jnp. Runs on a single device and
+  under pjit auto-SPMD (expert dim sharded over 'data', XLA inserts the
+  collectives). Used for smoke tests and for long_500k (global_batch=1
+  cannot feed the shard_map grid).
+* ``ep``     — shard_map expert parallelism over ('data','model'): tokens
+  stay sharded over both axes, each cell routes locally, `lax.all_to_all`
+  over 'data' moves token slots to their expert's owner row, expert weights
+  (stored f-sharded over 'model' for FSDP-style memory) are all-gathered
+  per layer, outputs return via the reverse all_to_all.  This is the
+  TPU-native adaptation of the paper's "ship a structured subset" insight:
+  only capacity-bounded token slots travel, never full activations.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+from jax.ad_checkpoint import checkpoint_name
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.params import dense_def, pdef
+
+
+def moe_defs(cfg):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe.num_experts
+    return {
+        "router": pdef((d, e), (None, "experts"), init="scaled",
+                       scale=d ** -0.5),
+        "w_gate": pdef((e, d, f), ("experts", None, "mlp"), init="scaled",
+                       scale=d ** -0.5),
+        "w_up": pdef((e, d, f), ("experts", None, "mlp"), init="scaled",
+                     scale=d ** -0.5),
+        "w_down": pdef((e, f, d), ("experts", "mlp", None), init="scaled",
+                       scale=f ** -0.5),
+    }
+
+
+def _route(p, x, cfg):
+    """x (n, d) -> (weights (n,k), expert_idx (n,k), aux_loss)."""
+    e, k = cfg.moe.num_experts, cfg.moe.top_k
+    logits = (x.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+    # switch-style load-balance aux: E * sum_e f_e * p_e
+    frac = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_i, e, dtype=jnp.float32), axis=1), axis=0)
+    aux = e * jnp.sum(frac * jnp.mean(probs, axis=0)) / k
+    return top_w.astype(x.dtype), top_i, aux
+
+
+def _capacity(n_tokens: int, cfg) -> int:
+    e, k, cf = (cfg.moe.num_experts, cfg.moe.top_k,
+                cfg.moe.capacity_factor)
+    return max(int(n_tokens * k * cf / e + 0.999), 1)
+
+
+def _dispatch_indices(expert_idx, n_experts: int, capacity: int):
+    """Flatten (n,k) assignments into per-expert slots.
+
+    Returns (slot (n*k,), keep (n*k,), token (n*k,)) where slot is the
+    destination index in an (E*C,) buffer; dropped assignments get slot E*C
+    (scattered with mode='drop').
+    """
+    n, k = expert_idx.shape
+    flat_e = expert_idx.reshape(-1)
+    token = jnp.repeat(jnp.arange(n), k)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=n_experts)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(n * k) - starts[sorted_e]
+    keep_sorted = rank < capacity
+    slot_sorted = jnp.where(keep_sorted, sorted_e * capacity + rank,
+                            n_experts * capacity)
+    inv = jnp.argsort(order, stable=True)
+    return slot_sorted[inv], keep_sorted[inv], token
+
+
+def _expert_ffn(w_gate, w_up, w_down, xs):
+    """xs (E, C, d) -> (E, C, d); batched SwiGLU over experts.
+
+    The output carries a named checkpoint ('moe_out') so the
+    remat='moe_save' policy can keep expert outputs across the backward
+    pass — the generic dots policies skip batched (e...) einsums, so full
+    remat would otherwise recompute the whole expert FFN (§Perf).
+    """
+    dt = xs.dtype
+    g = jnp.einsum("ecd,edf->ecf", xs, w_gate.astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", xs, w_up.astype(dt))
+    out = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, w_down.astype(dt))
+    return checkpoint_name(out, "moe_out")
+
+
+def moe_local(p, x, cfg):
+    """Sort-based dispatch on whatever device set pjit gives us.
+
+    x (B, T, d). Returns (out (B,T,d), aux_loss).
+    """
+    B, T, d = x.shape
+    n = B * T
+    xt = x.reshape(n, d)
+    w, idx, aux = _route(p, xt, cfg)
+    e = cfg.moe.num_experts
+    cap = _capacity(n, cfg)
+    slot, keep, token = _dispatch_indices(idx, e, cap)
+    buf = jnp.zeros((e * cap, d), x.dtype).at[slot].set(
+        xt[token], mode="drop")
+    out_buf = _expert_ffn(p["w_gate"], p["w_up"], p["w_down"],
+                          buf.reshape(e, cap, d)).reshape(e * cap, d)
+    gathered = jnp.where(keep[:, None],
+                         out_buf.at[slot].get(mode="fill", fill_value=0.0),
+                         0.0)
+    wf = w.reshape(-1)[:, None].astype(gathered.dtype)
+    out = jnp.zeros((n, d), x.dtype).at[token].add(gathered * wf)
+    return out.reshape(B, T, d), aux
+
+
+def moe_ep(p, x, cfg, ctx, run=None):
+    """shard_map expert-parallel dispatch (see module docstring).
+
+    x (B, T, d) sharded (batch->data, seq->model).
+    """
+    mesh = ctx.mesh
+    dsize = ctx.axis_size("data")
+    e = cfg.moe.num_experts
+    assert e % dsize == 0, (e, dsize)
+    B, T, d = x.shape
+
+    gather_bf16 = run is not None and run.moe_gather_bf16
+
+    def cell(router, w_gate, w_up, w_down, xl):
+        # xl (B_l, T_l, d): this cell's tokens. Weights arrive f-sharded
+        # over 'model' and expert-sharded over 'data' -> gather both so the
+        # cell owns its experts' full matrices (FSDP-style layer gather).
+        if gather_bf16:
+            w_gate = w_gate.astype(jnp.bfloat16)
+            w_up = w_up.astype(jnp.bfloat16)
+            w_down = w_down.astype(jnp.bfloat16)
+        w_gate = jax.lax.all_gather(w_gate, "model", axis=2, tiled=True)
+        w_up = jax.lax.all_gather(w_up, "model", axis=2, tiled=True)
+        w_down = jax.lax.all_gather(w_down, "model", axis=1, tiled=True)
+        router = jax.lax.all_gather(router, "data", axis=1, tiled=True)
+        bl, tl, _ = xl.shape
+        n = bl * tl
+        xt = xl.reshape(n, d)
+        w, idx, aux = _route({"router": router}, xt, cfg)
+        cap = _capacity(n, cfg)
+        slot, keep, token = _dispatch_indices(idx, e, cap)
+        buf = jnp.zeros((e * cap, d), xl.dtype).at[slot].set(
+            xt[token], mode="drop")
+        # (E, cap, d) --all_to_all over data--> (E_l, dsize*cap, d):
+        # each row of the data axis receives the slots bound for its experts.
+        el = e // dsize
+        buf = jax.lax.all_to_all(buf.reshape(e, cap, d), "data",
+                                 split_axis=0, concat_axis=1, tiled=True)
+        out = _expert_ffn(w_gate, w_up, w_down, buf)
+        out = jax.lax.all_to_all(out, "data", split_axis=1, concat_axis=0,
+                                 tiled=True)
+        out = out.reshape(e * cap, d)
+        gathered = jnp.where(
+            keep[:, None], out.at[slot].get(mode="fill", fill_value=0.0), 0.0)
+        wf = w.reshape(-1)[:, None].astype(gathered.dtype)
+        yl = jnp.zeros((n, d), xl.dtype).at[token].add(gathered * wf)
+        aux = jax.lax.pmean(aux, ("data", "model"))
+        return yl.reshape(bl, tl, d), aux
+
+    seq_over_model = x.shape[1] % max(ctx.axis_size("model"), 1) == 0
+    x_spec = P("data", "model" if seq_over_model else None, None)
+    f = jax.shard_map(
+        cell, mesh=mesh,
+        in_specs=(
+            P(None, "data"),            # router (d, E): E over data
+            P("data", None, "model"),   # w_gate (E, d, f)
+            P("data", None, "model"),   # w_up
+            P("data", "model", None),   # w_down (E, f, d)
+            x_spec,                     # x (B, T, d)
+        ),
+        out_specs=(x_spec, P()),
+        check_vma=False)
+    return f(p["router"], p["w_gate"], p["w_up"], p["w_down"], x)
+
+
+def moe_apply(p, x, cfg, run, ctx):
+    impl = run.moe_impl
+    if impl == "auto":
+        use_ep = (ctx.active and "data" in ctx.mesh.shape
+                  and x.shape[0] % ctx.axis_size("data") == 0
+                  and x.shape[1] % ctx.axis_size("model") == 0
+                  and cfg.moe.num_experts % ctx.axis_size("data") == 0
+                  and cfg.d_ff % ctx.axis_size("model") == 0)
+        impl = "ep" if use_ep else "local"
+    if impl == "ep":
+        return moe_ep(p, x, cfg, ctx, run)
+    return moe_local(p, x, cfg)

@@ -1,0 +1,92 @@
+"""Parameter definition trees.
+
+Model code declares parameters as ``ParamDef`` leaves carrying shape,
+initializer, and *logical axis names*; the same tree then yields
+
+  * ``init_tree``   -> concrete parameter pytree,
+  * ``spec_tree``   -> matching pytree of PartitionSpec (via a ShardingCtx),
+  * ``abstract_tree`` -> ShapeDtypeStruct pytree with shardings for dry-runs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]      # logical axis names, len == ndim
+    init: str = "normal"                 # 'normal' | 'zeros' | 'ones' | 'scaled'
+    scale: float = 1.0
+    dtype: jnp.dtype = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def pdef(shape, axes, init="normal", scale=1.0, dtype=jnp.float32) -> ParamDef:
+    return ParamDef(tuple(shape), tuple(axes), init, scale, dtype)
+
+
+def dense_def(d_in: int, d_out: int, ax_in: Optional[str],
+              ax_out: Optional[str], dtype=jnp.float32) -> ParamDef:
+    # fan-in scaled normal init
+    return pdef((d_in, d_out), (ax_in, ax_out), init="scaled",
+                scale=1.0 / np.sqrt(d_in), dtype=dtype)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _init_leaf(key, d: ParamDef):
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    scale = d.scale if d.init == "scaled" else 0.02 * d.scale
+    return (jax.random.normal(key, d.shape, jnp.float32) * scale).astype(d.dtype)
+
+
+def init_tree(key, defs):
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(k, d) for k, d in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def spec_tree(ctx, defs):
+    """Pytree of PartitionSpec matching ``defs``."""
+    return jax.tree.map(
+        lambda d: ctx.spec(d.axes, d.shape), defs, is_leaf=is_def)
+
+
+def sharding_tree(ctx, defs):
+    return jax.tree.map(
+        lambda d: ctx.sharding(d.axes, d.shape), defs, is_leaf=is_def)
+
+
+def abstract_tree(ctx, defs):
+    """ShapeDtypeStruct pytree (dry-run stand-in, no allocation)."""
+    def mk(d: ParamDef):
+        sh = ctx.sharding(d.axes, d.shape) if ctx.active else None
+        return jax.ShapeDtypeStruct(d.shape, d.dtype, sharding=sh)
+    return jax.tree.map(mk, defs, is_leaf=is_def)
+
+
+def count_params(defs) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=is_def)
+    return int(sum(np.prod(d.shape) for d in leaves))
+
+
+def stack_layer_defs(layer_def, num_layers: int):
+    """Scan-over-layers: prepend a 'layers' dim to every leaf."""
+    return jax.tree.map(
+        lambda d: ParamDef((num_layers,) + d.shape, (None,) + d.axes,
+                           d.init, d.scale, d.dtype),
+        layer_def, is_leaf=is_def)

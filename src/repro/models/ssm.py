@@ -1,0 +1,216 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Chunked SSD forward in pure jnp (the Pallas TPU kernel in
+``repro.kernels.ssd`` implements the same contract and is validated against
+``ssd_chunked`` below), causal depthwise conv, gated RMSNorm, and the O(1)
+single-token decode recurrence.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.params import pdef
+
+
+def ssm_dims(cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.num_heads(d)
+    gn = s.num_groups * s.state_size
+    conv_ch = di + 2 * gn
+    in_dim = 2 * di + 2 * gn + nh  # z, x, B, C, dt
+    return di, nh, gn, conv_ch, in_dim
+
+
+def ssm_defs(cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    di, nh, gn, conv_ch, in_dim = ssm_dims(cfg)
+    return {
+        "in_proj": pdef((d, in_dim), ("fsdp", "ssm_heads"), init="scaled",
+                        scale=d ** -0.5),
+        "conv_w": pdef((s.conv_width, conv_ch), (None, "ssm_heads"),
+                       init="scaled", scale=s.conv_width ** -0.5),
+        "conv_b": pdef((conv_ch,), ("ssm_heads",), init="zeros"),
+        "a_log": pdef((nh,), ("ssm_heads",), init="zeros"),
+        "dt_bias": pdef((nh,), ("ssm_heads",), init="zeros"),
+        "d_skip": pdef((nh,), ("ssm_heads",), init="ones"),
+        "gate_norm": pdef((di,), ("ssm_heads",), init="ones"),
+        "out_proj": pdef((di, d), ("ssm_heads", "fsdp"), init="scaled",
+                         scale=di ** -0.5),
+    }
+
+
+def _segsum(x):
+    """x (..., Q) -> (..., Q, Q) lower-triangular cumulative sums:
+    out[i,j] = sum_{j < t <= i} x[t], -inf above diagonal."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a_log, b, c, chunk: int,
+                init_state: Optional[jnp.ndarray] = None,
+                unroll: bool = False):
+    """Chunked SSD scan.
+
+    x  (B, T, H, P)   per-head inputs
+    dt (B, T, H)      softplus-ed timesteps (>0)
+    a_log (H,)        A = -exp(a_log)
+    b, c (B, T, G, N) input/output projections (G groups broadcast over H)
+    Returns (y (B,T,H,P), final_state (B,H,P,N)).
+    """
+    Bsz, T, H, Pd = x.shape
+    G, N = b.shape[2], b.shape[3]
+    assert H % G == 0
+    Q = min(chunk, T)
+    assert T % Q == 0, (T, Q)
+    nc = T // Q
+    f32 = jnp.float32
+    A = -jnp.exp(a_log.astype(f32))  # (H,) negative
+    dtf = dt.astype(f32)
+    da = dtf * A  # (B,T,H) log-decay per step
+
+    xr = (x.astype(f32) * dtf[..., None]).reshape(Bsz, nc, Q, H, Pd)
+    dar = da.reshape(Bsz, nc, Q, H)
+    # broadcast groups -> heads
+    rep = H // G
+    br = jnp.repeat(b.astype(f32), rep, axis=2).reshape(Bsz, nc, Q, H, N)
+    cr = jnp.repeat(c.astype(f32), rep, axis=2).reshape(Bsz, nc, Q, H, N)
+
+    # intra-chunk (quadratic within chunk)
+    Lmat = jnp.exp(_segsum(dar.transpose(0, 1, 3, 2)))  # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bnqhs,bnkhs->bnhqk", cr, br)   # (B,nc,H,Q,Q)
+    y_intra = jnp.einsum("bnhqk,bnhqk,bnkhp->bnqhp", scores, Lmat, xr)
+
+    # chunk-final states: S_n = sum_j exp(sum_{t>j} da) * b_j x_j
+    cum = jnp.cumsum(dar, axis=2)                       # (B,nc,Q,H)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)     # (B,nc,Q,H)
+    S = jnp.einsum("bnqh,bnqhs,bnqhp->bnhps", decay_to_end, br, xr)
+
+    # inter-chunk recurrence over chunks
+    total = jnp.exp(cum[:, :, -1, :])                   # (B,nc,H)
+
+    def step(carry, inp):
+        s_prev = carry
+        s_new, tot = inp
+        s_next = s_prev * tot[:, :, None, None] + s_new
+        return s_next, s_prev
+
+    s0 = (jnp.zeros((Bsz, H, Pd, N), f32) if init_state is None
+          else init_state.astype(f32))
+    final, s_prevs = jax.lax.scan(
+        step, s0, (S.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)),
+        unroll=nc if unroll else 1)
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)          # (B,nc,H,P,N)
+
+    decay_in = jnp.exp(cum)                             # (B,nc,Q,H)
+    y_inter = jnp.einsum("bnqhs,bnqh,bnhps->bnqhp", cr, decay_in, s_prevs)
+    y = (y_intra + y_inter).reshape(Bsz, T, H, Pd)
+    return y.astype(x.dtype), final
+
+
+def causal_conv(x, w, b):
+    """Depthwise causal conv. x (B,T,C), w (W,C), b (C,)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(W))
+    return out + b[None, None, :]
+
+
+def _split_proj(proj, cfg):
+    di, nh, gn, conv_ch, in_dim = ssm_dims(cfg)
+    z = proj[..., :di]
+    xbc = proj[..., di:di + conv_ch]
+    dt = proj[..., di + conv_ch:]
+    return z, xbc, dt
+
+
+def _split_xbc(xbc, cfg):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    gn = s.num_groups * s.state_size
+    return (xbc[..., :di], xbc[..., di:di + gn], xbc[..., di + gn:])
+
+
+def ssm_block(p, h, cfg, run, *, return_state: bool = False,
+              init_state=None, init_conv=None):
+    """Full Mamba2 mixer. h (B,T,d) -> (B,T,d) [, (final_state, conv_tail)]."""
+    s = cfg.ssm
+    di, nh, gn, conv_ch, in_dim = ssm_dims(cfg)
+    dt_ = h.dtype
+    proj = h @ p["in_proj"].astype(dt_)
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+    if init_conv is not None:
+        xbc_in = jnp.concatenate([init_conv.astype(dt_), xbc], axis=1)
+        conv_out = causal_conv(xbc_in, p["conv_w"].astype(dt_),
+                               p["conv_b"].astype(dt_))
+        conv_out = conv_out[:, s.conv_width - 1:, :]
+    else:
+        conv_out = causal_conv(xbc, p["conv_w"].astype(dt_),
+                               p["conv_b"].astype(dt_))
+    xbc_act = jax.nn.silu(conv_out)
+    xs, b, c = _split_xbc(xbc_act, cfg)
+    Bsz, T, _ = h.shape
+    xh = xs.reshape(Bsz, T, nh, s.head_dim)
+    bm = b.reshape(Bsz, T, s.num_groups, s.state_size)
+    cm = c.reshape(Bsz, T, s.num_groups, s.state_size)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    y, final_state = ssd_chunked(xh, dt, p["a_log"], bm, cm, s.chunk_size,
+                                 init_state=init_state,
+                                 unroll=run.scan_unroll)
+    y = y + p["d_skip"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(Bsz, T, di)
+    y = L.rmsnorm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(dt_)
+    if return_state:
+        conv_tail = xbc[:, T - (s.conv_width - 1):, :]
+        return out, (final_state.astype(jnp.float32), conv_tail)
+    return out
+
+
+def ssm_decode_block(p, h, cfg, state, conv_cache):
+    """Single-token recurrence.
+
+    h (B,1,d); state (B,H,P,N) fp32; conv_cache (B,W-1,conv_ch).
+    Returns (out (B,1,d), new_state, new_conv_cache).
+    """
+    s = cfg.ssm
+    di, nh, gn, conv_ch, in_dim = ssm_dims(cfg)
+    dt_ = h.dtype
+    proj = h @ p["in_proj"].astype(dt_)          # (B,1,in_dim)
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+    window = jnp.concatenate([conv_cache.astype(dt_), xbc], axis=1)
+    new_conv = window[:, 1:, :]
+    conv_out = (jnp.sum(window * p["conv_w"].astype(dt_)[None], axis=1)
+                + p["conv_b"].astype(dt_))[:, None, :]
+    xbc_act = jax.nn.silu(conv_out)
+    xs, b, c = _split_xbc(xbc_act, cfg)
+    Bsz = h.shape[0]
+    xh = xs.reshape(Bsz, nh, s.head_dim).astype(jnp.float32)
+    bm = b.reshape(Bsz, s.num_groups, s.state_size).astype(jnp.float32)
+    cm = c.reshape(Bsz, s.num_groups, s.state_size).astype(jnp.float32)
+    rep = nh // s.num_groups
+    bm = jnp.repeat(bm, rep, axis=1)             # (B,H,N)
+    cm = jnp.repeat(cm, rep, axis=1)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,H)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt * A)                         # (B,H)
+    upd = jnp.einsum("bh,bhn,bhp->bhpn", dt, bm, xh)
+    new_state = state * da[:, :, None, None] + upd
+    y = jnp.einsum("bhn,bhpn->bhp", cm, new_state)
+    y = y + p["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(Bsz, 1, di).astype(dt_)
+    y = L.rmsnorm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(dt_)
+    return out, new_state, new_conv

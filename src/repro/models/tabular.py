@@ -1,0 +1,123 @@
+"""The paper's parametric models for tabular CVD prediction.
+
+* Logistic regression — L2(λ=0.01), trained full-batch (L-BFGS in the paper;
+  we use Adam full-batch to the same optimum — convex objective).
+* SVM — the paper says "polynomial kernel of degree 3 ... aggregates
+  gradients", which is only consistent with a *primal* SVM on an explicit
+  degree-3 polynomial feature map (kernel SVMs are non-parametric and not
+  gradient-aggregatable); we implement exactly that (C=1.0 hinge loss).
+  Substitution recorded in DESIGN.md §Changed-assumptions.
+* Neural network — one hidden layer, 16 sigmoid units (trained with FedProx
+  in the federated pipeline).
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --- polynomial feature map (degree 3, with interactions) --------------------
+
+def poly3_indices(n_features: int):
+    pairs = list(itertools.combinations_with_replacement(range(n_features), 2))
+    triples = list(
+        itertools.combinations_with_replacement(range(n_features), 3))
+    return np.array(pairs, np.int32), np.array(triples, np.int32)
+
+
+def poly3_features(x, pairs, triples):
+    """x (n, F) -> (n, F + |pairs| + |triples|)."""
+    xp = x[:, pairs[:, 0]] * x[:, pairs[:, 1]]
+    xt = (x[:, triples[:, 0]] * x[:, triples[:, 1]] * x[:, triples[:, 2]])
+    return jnp.concatenate([x, xp, xt], axis=-1)
+
+
+def poly3_dim(n_features: int) -> int:
+    p, t = poly3_indices(n_features)
+    return n_features + len(p) + len(t)
+
+
+# --- models -------------------------------------------------------------------
+
+def logreg_init(rng, n_features: int):
+    return {"w": jnp.zeros((n_features,), jnp.float32),
+            "b": jnp.zeros((), jnp.float32)}
+
+
+def logreg_logits(params, x):
+    return x @ params["w"] + params["b"]
+
+
+def logreg_loss(params, x, y, l2: float = 0.01):
+    logits = logreg_logits(params, x)
+    ce = jnp.mean(_bce(logits, y))
+    return ce + l2 * jnp.sum(params["w"] ** 2)
+
+
+def svm_init(rng, n_features: int):
+    """n_features is the ALREADY poly-expanded dim (the federated runner
+    applies poly3_features before init)."""
+    w = jax.random.normal(rng, (n_features,), jnp.float32) * 0.01
+    return {"w": w, "b": jnp.zeros((), jnp.float32)}
+
+
+def svm_margin(params, xphi):
+    return xphi @ params["w"] + params["b"]
+
+
+def svm_loss(params, xphi, y, C: float = 1.0):
+    """Primal hinge loss; y in {0,1} mapped to {-1,+1}."""
+    ys = 2.0 * y - 1.0
+    margins = svm_margin(params, xphi)
+    hinge = jnp.mean(jnp.maximum(0.0, 1.0 - ys * margins))
+    return 0.5 * jnp.sum(params["w"] ** 2) / xphi.shape[0] + C * hinge
+
+
+def mlp_init(rng, n_features: int, hidden: int = 16):
+    k1, k2 = jax.random.split(rng)
+    s1 = 1.0 / np.sqrt(n_features)
+    return {
+        "w1": jax.random.normal(k1, (n_features, hidden), jnp.float32) * s1,
+        "b1": jnp.zeros((hidden,), jnp.float32),
+        "w2": jax.random.normal(k2, (hidden,), jnp.float32) / np.sqrt(hidden),
+        "b2": jnp.zeros((), jnp.float32),
+    }
+
+
+def mlp_logits(params, x):
+    h = jax.nn.sigmoid(x @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def mlp_loss(params, x, y):
+    return jnp.mean(_bce(mlp_logits(params, x), y))
+
+
+def _bce(logits, y):
+    # softplus(z) - z*y: numerically stable AND smooth — the max/abs
+    # formulation has a non-differentiable corner exactly at z=0, where
+    # autodiff subgradients come out 0 and zero-initialized models with
+    # one-sided labels never move.
+    return jax.nn.softplus(logits) - logits * y
+
+
+MODELS: Dict[str, Dict] = {
+    "logreg": dict(init=logreg_init, loss=logreg_loss,
+                   predict=lambda p, x: logreg_logits(p, x) > 0,
+                   needs_poly=False),
+    "svm": dict(init=svm_init, loss=svm_loss,
+                predict=lambda p, x: svm_margin(p, x) > 0,
+                needs_poly=True),
+    "mlp": dict(init=mlp_init, loss=mlp_loss,
+                predict=lambda p, x: mlp_logits(p, x) > 0,
+                needs_poly=False),
+}
+
+
+def param_bytes(params) -> int:
+    return int(sum(np.prod(v.shape) * v.dtype.itemsize
+                   for v in jax.tree.leaves(params)))

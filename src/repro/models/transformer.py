@@ -1,0 +1,314 @@
+"""Decoder-only LM covering the dense / moe / ssm / hybrid families.
+
+One scanned block per architecture (homogeneous stacks), full/selectable
+remat, Megatron-SP style boundary sharding constraints, chunked CE loss.
+Exposes train / prefill / decode entry points used by ``models.api``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.params import pdef, stack_layer_defs
+
+
+# --- parameter definitions ---------------------------------------------------
+
+def gelu_mlp_defs(d, d_ff):
+    return {
+        "w_in": pdef((d, d_ff), ("fsdp", "mlp"), init="scaled",
+                     scale=d ** -0.5),
+        "w_out": pdef((d_ff, d), ("mlp", "fsdp"), init="scaled",
+                      scale=d_ff ** -0.5),
+    }
+
+
+def gelu_mlp(p, x):
+    dt = x.dtype
+    return jax.nn.gelu(x @ p["w_in"].astype(dt)) @ p["w_out"].astype(dt)
+
+
+def block_defs(cfg, *, cross_attention: bool = False):
+    d = cfg.d_model
+    defs: Dict = {}
+    fam = cfg.family
+    if fam != "ssm":
+        defs["ln1"] = L.rmsnorm_def(d)
+        defs["attn"] = A.attention_defs(cfg)
+    if fam == "ssm":
+        defs["ln1"] = L.rmsnorm_def(d)
+        defs["ssm"] = S.ssm_defs(cfg)
+        return defs
+    if fam == "hybrid":
+        defs["ssm"] = S.ssm_defs(cfg)
+        defs["attn_out_norm"] = L.rmsnorm_def(d)
+        defs["ssm_out_norm"] = L.rmsnorm_def(d)
+    if cross_attention:
+        defs["ln_cross"] = L.rmsnorm_def(d)
+        defs["cross"] = A.attention_defs(cfg, cross=True)
+    defs["ln2"] = L.rmsnorm_def(d)
+    if cfg.moe is not None:
+        defs["moe"] = M.moe_defs(cfg)
+    elif fam == "encdec":
+        defs["mlp"] = gelu_mlp_defs(d, cfg.d_ff)
+    else:
+        defs["mlp"] = L.swiglu_defs(d, cfg.d_ff)
+    return defs
+
+
+def model_defs(cfg):
+    d = cfg.d_model
+    defs = {
+        "embed": L.embed_def(cfg.padded_vocab_size, d),
+        "layers": stack_layer_defs(block_defs(cfg), cfg.num_layers),
+        "final_norm": L.rmsnorm_def(d),
+    }
+    if not cfg.tie_embeddings:
+        defs["head"] = pdef((d, cfg.padded_vocab_size), ("fsdp", "vocab"),
+                            init="scaled", scale=d ** -0.5)
+    return defs
+
+
+# --- forward blocks ----------------------------------------------------------
+
+def _mixer(p, h, sin, cos, cfg, run, *, window=None, collect_kv=False):
+    """Sequence mixer for train/prefill; returns (out, cache_slice)."""
+    fam = cfg.family
+    cache = {}
+    if fam == "ssm":
+        x = L.rmsnorm(h, p["ln1"], cfg.norm_eps)
+        if collect_kv:
+            out, (state, conv_tail) = S.ssm_block(
+                p["ssm"], x, cfg, run, return_state=True)
+            cache = {"state": state, "conv": conv_tail}
+        else:
+            out = S.ssm_block(p["ssm"], x, cfg, run)
+        return out, cache
+    x = L.rmsnorm(h, p["ln1"], cfg.norm_eps)
+    kv_inp = x
+    q, k, v = A._project_qkv(p["attn"], x, kv_inp, cfg, sin, cos)
+    attn_out = A.chunked_attention(
+        q, k, v, causal=True, window=window,
+        kv_chunk=run.attn_kv_chunk, q_chunk=run.attn_q_chunk,
+        block_skip=run.causal_block_skip, unroll=run.scan_unroll,
+        broadcast_kv=run.gqa_broadcast_kv)
+    attn_out = jnp.einsum("bthk,hkd->btd", attn_out,
+                          p["attn"]["wo"].astype(h.dtype))
+    if collect_kv:
+        cache = {"k": k, "v": v}
+    if fam == "hybrid":
+        ssm_out = S.ssm_block(p["ssm"], x, cfg, run,
+                              return_state=collect_kv)
+        if collect_kv:
+            ssm_out, (state, conv_tail) = ssm_out
+            cache.update({"state": state, "conv": conv_tail})
+        out = 0.5 * (L.rmsnorm(attn_out, p["attn_out_norm"], cfg.norm_eps)
+                     + L.rmsnorm(ssm_out, p["ssm_out_norm"], cfg.norm_eps))
+        return out, cache
+    return attn_out, cache
+
+
+def _channel_mix(p, h, cfg, run, ctx):
+    """MLP / MoE half of the block. Returns (out, aux)."""
+    if cfg.family == "ssm":
+        return jnp.zeros_like(h), jnp.float32(0.0)
+    x = L.rmsnorm(h, p["ln2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        out, aux = M.moe_apply(p["moe"], x, cfg, run, ctx)
+        return out, aux
+    if cfg.family == "encdec":
+        return gelu_mlp(p["mlp"], x), jnp.float32(0.0)
+    return L.swiglu(p["mlp"], x), jnp.float32(0.0)
+
+
+def block_apply(p, h, sin, cos, cfg, run, ctx, *, window=None,
+                collect_kv=False):
+    """Pre-norm residual block. Returns (h, cache_slice, aux)."""
+    mix, cache = _mixer(p, h, sin, cos, cfg, run, window=window,
+                        collect_kv=collect_kv)
+    h = h + mix
+    ch, aux = _channel_mix(p, h, cfg, run, ctx)
+    h = h + ch
+    h = ctx.constrain(h, "batch", "act_seq", "embed")
+    return h, cache, aux
+
+
+def block_decode(p, h, cache, pos, sin, cos, cfg, run, ctx, *, window=None):
+    """Single-token block step. cache: per-layer slice dict."""
+    fam = cfg.family
+    new_cache = {}
+    x = L.rmsnorm(h, p["ln1"], cfg.norm_eps)
+    if fam == "ssm":
+        out, st, cv = S.ssm_decode_block(p["ssm"], x, cfg, cache["state"],
+                                         cache["conv"])
+        h = h + out
+        new_cache = {"state": st, "conv": cv}
+        return h, new_cache
+    attn_out, ck, cvv = A.attn_decode_block(
+        p["attn"], x, cache["k"], cache["v"], pos, sin, cos, cfg,
+        window=window)
+    new_cache.update({"k": ck, "v": cvv})
+    if fam == "hybrid":
+        ssm_out, st, cv = S.ssm_decode_block(p["ssm"], x, cfg,
+                                             cache["state"], cache["conv"])
+        new_cache.update({"state": st, "conv": cv})
+        mix = 0.5 * (L.rmsnorm(attn_out, p["attn_out_norm"], cfg.norm_eps)
+                     + L.rmsnorm(ssm_out, p["ssm_out_norm"], cfg.norm_eps))
+    else:
+        mix = attn_out
+    h = h + mix
+    ch, _ = _channel_mix(p, h, cfg, run, ctx)
+    h = h + ch
+    return h, new_cache
+
+
+# --- stacks ------------------------------------------------------------------
+
+def _remat_wrap(fn, run):
+    if run.remat == "none":
+        return fn
+    if run.remat == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=pol)
+    if run.remat == "moe_save":
+        pol = jax.checkpoint_policies.save_only_these_names("moe_out")
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def run_stack(params, h, sin, cos, cfg, run, ctx, *, window=None,
+              collect_kv=False):
+    """Scan the layer stack. Returns (h, stacked_cache, aux_total)."""
+
+    def body(carry, layer_p):
+        hh, aux = carry
+        hh, cache, a = block_apply(layer_p, hh, sin, cos, cfg, run, ctx,
+                                   window=window, collect_kv=collect_kv)
+        return (hh, aux + a), cache
+
+    body = _remat_wrap(body, run)
+    (h, aux), caches = jax.lax.scan(body, (h, jnp.float32(0.0)),
+                                    params["layers"],
+                                    unroll=cfg.num_layers
+                                    if run.scan_unroll else 1)
+    return h, caches, aux
+
+
+def run_stack_decode(params, h, caches, pos, sin, cos, cfg, run, ctx, *,
+                     window=None):
+    def body(hh, xs):
+        layer_p, cache = xs
+        hh, new_cache = block_decode(layer_p, hh, cache, pos, sin, cos,
+                                     cfg, run, ctx, window=window)
+        return hh, new_cache
+
+    h, new_caches = jax.lax.scan(body, h, (params["layers"], caches),
+                                 unroll=cfg.num_layers
+                                 if run.scan_unroll else 1)
+    return h, new_caches
+
+
+# --- entry points ------------------------------------------------------------
+
+def _rope_for(cfg, positions):
+    if cfg.attn_free:
+        return None, None
+    return L.rope_tables(positions, cfg.head_dim_, cfg.rope_theta)
+
+
+def _head_weight(params, cfg):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["head"]
+
+
+def embed_tokens(params, tokens, cfg, ctx):
+    h = L.embed_lookup(params["embed"], tokens, cfg.activation_dtype)
+    return ctx.constrain(h, "batch", "act_seq", "embed")
+
+
+def train_loss_from_embeds(params, h, targets, mask, cfg, run, ctx, *,
+                           window=None):
+    T = h.shape[1]
+    sin, cos = _rope_for(cfg, jnp.arange(T))
+    h, _, aux = run_stack(params, h, sin, cos, cfg, run, ctx, window=window)
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    loss, wt = L.cross_entropy_chunked(
+        h, _head_weight(params, cfg).astype(h.dtype), targets, mask,
+        run.loss_chunk, ctx, unroll=run.scan_unroll,
+        valid_vocab=cfg.vocab_size)
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.router_aux_weight * aux / cfg.num_layers
+    return loss, {"ce": loss, "aux": aux, "tokens": wt}
+
+
+def train_loss(params, batch, cfg, run, ctx, *, window=None):
+    h = embed_tokens(params, batch["tokens"], cfg, ctx)
+    return train_loss_from_embeds(params, h, batch["targets"],
+                                  batch["mask"], cfg, run, ctx,
+                                  window=window)
+
+
+def prefill_from_embeds(params, h, cfg, run, ctx, *, window=None):
+    """Returns (last-token logits, cache dict with stacked layer caches)."""
+    B, T, _ = h.shape
+    sin, cos = _rope_for(cfg, jnp.arange(T))
+    h, caches, _ = run_stack(params, h, sin, cos, cfg, run, ctx,
+                             window=window, collect_kv=True)
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = (h[:, -1] @ _head_weight(params, cfg).astype(h.dtype))
+    return logits.astype(jnp.float32)[:, :cfg.vocab_size], caches
+
+
+def prefill(params, batch, cfg, run, ctx, *, window=None):
+    h = embed_tokens(params, batch["tokens"], cfg, ctx)
+    return prefill_from_embeds(params, h, cfg, run, ctx, window=window)
+
+
+def decode_step(params, batch, caches, cfg, run, ctx, *, window=None):
+    """batch: {'token': (B,) int32, 'pos': () int32}. One-step decode."""
+    tok = batch["token"][:, None]
+    pos = batch["pos"]
+    h = L.embed_lookup(params["embed"], tok, cfg.activation_dtype)
+    sin, cos = (None, None)
+    if not cfg.attn_free:
+        sin, cos = L.rope_tables(pos[None].astype(jnp.int32),
+                                 cfg.head_dim_, cfg.rope_theta)
+    h, new_caches = run_stack_decode(params, h, caches, pos, sin, cos,
+                                     cfg, run, ctx, window=window)
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = h[:, 0] @ _head_weight(params, cfg).astype(h.dtype)
+    return logits.astype(jnp.float32)[:, :cfg.vocab_size], new_caches
+
+
+# --- cache definitions (for input_specs / dry-run) ---------------------------
+
+def cache_defs(cfg, batch: int, seq: int):
+    """ParamDef tree describing the decode cache (stacked over layers)."""
+    Ldim = cfg.num_layers
+    defs = {}
+    fam = cfg.family
+    if fam != "ssm":
+        K, dh = cfg.num_kv_heads, cfg.head_dim_
+        kv = pdef((Ldim, batch, seq, K, dh),
+                  (None, "batch", "cache_seq", "kv_heads", "head_dim"),
+                  init="zeros", dtype=jnp.bfloat16)
+        defs.update({"k": kv, "v": kv})
+    if fam in ("ssm", "hybrid"):
+        s = cfg.ssm
+        nh = s.num_heads(cfg.d_model)
+        di, _, gn, conv_ch, _ = S.ssm_dims(cfg)
+        defs["state"] = pdef((Ldim, batch, nh, s.head_dim, s.state_size),
+                             (None, "batch", "ssm_heads", None, "ssm_state"),
+                             init="zeros", dtype=jnp.float32)
+        defs["conv"] = pdef((Ldim, batch, s.conv_width - 1, conv_ch),
+                            (None, "batch", None, "conv"),
+                            init="zeros", dtype=jnp.bfloat16)
+    return defs

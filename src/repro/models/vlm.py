@@ -1,0 +1,65 @@
+"""InternVL2-style VLM backbone (arXiv:2404.16821).
+
+Frontend carve-out (DESIGN.md): the InternViT vision tower is a stub —
+``input_specs`` supplies pre-embedded patch features (B, num_image_tokens,
+frontend_dim). The real parts built here: the 2-layer MLP projector and the
+InternLM2-style GQA language model (shared with ``models.transformer``).
+Image embeddings are prepended to the text sequence; loss is masked to text
+positions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.params import pdef
+
+
+def model_defs(cfg):
+    defs = T.model_defs(cfg)
+    f, d = cfg.encoder.frontend_dim, cfg.d_model
+    defs["projector"] = {
+        "w1": pdef((f, d), ("frontend", "fsdp"), init="scaled",
+                   scale=f ** -0.5),
+        "b1": pdef((d,), (None,), init="zeros"),
+        "w2": pdef((d, d), ("fsdp", None), init="scaled", scale=d ** -0.5),
+        "b2": pdef((d,), (None,), init="zeros"),
+    }
+    return defs
+
+
+def project_patches(params, patches, cfg):
+    dt = cfg.activation_dtype
+    p = params["projector"]
+    h = patches.astype(dt) @ p["w1"].astype(dt) + p["b1"].astype(dt)
+    h = jax.nn.gelu(h)
+    return h @ p["w2"].astype(dt) + p["b2"].astype(dt)
+
+
+def _fuse(params, batch, cfg, ctx):
+    """Prepend projected image tokens to embedded text tokens."""
+    img = project_patches(params, batch["patches"], cfg)
+    txt = L.embed_lookup(params["embed"], batch["tokens"],
+                         cfg.activation_dtype)
+    h = jnp.concatenate([img, txt], axis=1)
+    return ctx.constrain(h, "batch", "act_seq", "embed")
+
+
+def train_loss(params, batch, cfg, run, ctx):
+    """batch: patches (B,I,f), tokens (B,T_text), targets/mask (B,I+T_text)
+    with image positions masked out of the loss."""
+    h = _fuse(params, batch, cfg, ctx)
+    return T.train_loss_from_embeds(params, h, batch["targets"],
+                                    batch["mask"], cfg, run, ctx)
+
+
+def prefill(params, batch, cfg, run, ctx, *, window=None):
+    h = _fuse(params, batch, cfg, ctx)
+    return T.prefill_from_embeds(params, h, cfg, run, ctx, window=window)
+
+
+# decode is identical to the text LM: image tokens live in the kv cache.
+decode_step = T.decode_step
+cache_defs = T.cache_defs

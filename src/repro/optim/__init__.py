@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (  # noqa: F401
+    adam, adamw, sgd, OptState, fedprox_grad, cosine_schedule,
+)

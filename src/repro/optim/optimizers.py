@@ -1,0 +1,96 @@
+"""Minimal optimizer library (no optax offline): SGD, Adam, AdamW with
+pytree states, FedProx proximal gradient wrapper, LR schedules.
+
+Each optimizer is (init(params) -> state, update(grads, state, params, lr)
+-> (new_params, new_state)) packaged in a small namespace object.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+def sgd(momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        mu = (jax.tree.map(jnp.zeros_like, params) if momentum else None)
+        return OptState(jnp.zeros((), jnp.int32), mu, None)
+
+    def update(grads, state, params, lr):
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state.mu, grads)
+            upd = mu
+        else:
+            mu, upd = None, grads
+        new = jax.tree.map(lambda p, u: p - lr * u.astype(p.dtype),
+                           params, upd)
+        return new, OptState(state.step + 1, mu, None)
+
+    return Optimizer(init, update)
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        z2 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return OptState(jnp.zeros((), jnp.int32), z, z2)
+
+    def update(grads, state, params, lr):
+        t = state.step + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(m.dtype),
+                          state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(v.dtype)),
+            state.nu, grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(p, m, v):
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+        new = jax.tree.map(upd, params, mu, nu)
+        return new, OptState(t, mu, nu)
+
+    return Optimizer(init, update)
+
+
+def adamw(weight_decay: float = 0.01, **kw) -> Optimizer:
+    return adam(weight_decay=weight_decay, **kw)
+
+
+def fedprox_grad(grads, params, global_params, mu: float):
+    """FedProx: add mu * (theta - theta_global) to the local gradient."""
+    return jax.tree.map(
+        lambda g, p, gp: g + mu * (p.astype(jnp.float32)
+                                   - gp.astype(jnp.float32)),
+        grads, params, global_params)
+
+
+def cosine_schedule(base_lr: float, total_steps: int,
+                    warmup: int = 0) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(
+            total_steps - warmup, 1), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return lr

@@ -1,0 +1,7 @@
+from repro.sharding.rules import (  # noqa: F401
+    ShardingCtx,
+    Rules,
+    TRAIN_RULES,
+    DECODE_RULES,
+    LONG_DECODE_RULES,
+)

@@ -1,0 +1,160 @@
+"""Logical-axis sharding rules with divisibility-aware assignment.
+
+Parameters and activations are annotated with *logical* axis names
+('batch', 'heads', 'mlp', ...).  A ``Rules`` table maps logical names to
+mesh axes; assignment degrades gracefully:
+
+  1. exact divisibility -> use the mapped mesh axis (or axis tuple),
+  2. dim >= mesh-axis size -> still shard (GSPMD pads uneven shards),
+  3. dim <  mesh-axis size -> replicate (sharding would idle devices).
+
+``ShardingCtx`` threads the mesh + rules through model code; the null
+context (CPU smoke tests, single device) turns every annotation into a
+no-op so the same model code runs everywhere.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisTarget = Union[None, str, Tuple[str, ...]]
+Rules = Dict[str, AxisTarget]
+
+# --- rule tables -----------------------------------------------------------
+# train/prefill: batch data-parallel, TP over heads/mlp/vocab, expert
+# parallel over 'data', Megatron-SP style sequence sharding of boundary
+# activations over 'model', FSDP weight sharding over 'data'.
+TRAIN_RULES: Rules = {
+    "batch": "data",
+    "act_seq": "model",        # residual-stream seq at layer boundaries
+    "embed": None,             # d_model dim of activations
+    "heads": "model",
+    "kv_heads": None,          # GQA kv heads replicated (see DESIGN.md)
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "data",         # expert parallelism
+    "vocab": "model",
+    "fsdp": "data",            # extra weight-shard dim for train
+    "ssm_heads": "model",
+    "ssm_state": None,
+    "conv": None,
+    "enc_seq": None,
+    "cache_seq": None,         # no kv cache in train
+    "frontend": None,
+}
+
+# decode_32k: batch over data, kv-cache sequence over model.
+DECODE_RULES: Rules = dict(
+    TRAIN_RULES,
+    batch="data",
+    act_seq=None,              # decode seq is length 1
+    cache_seq="model",
+    fsdp="data",               # weights stay 2-D sharded for serving memory
+)
+
+# long_500k: global_batch=1 -> cache sequence sharded over the full mesh.
+LONG_DECODE_RULES: Rules = dict(
+    DECODE_RULES,
+    batch=None,
+    cache_seq=("data", "model"),
+)
+
+
+def rules_for_phase(phase: str, shape_name: str = "") -> Rules:
+    if phase == "decode":
+        return LONG_DECODE_RULES if shape_name == "long_500k" else DECODE_RULES
+    return TRAIN_RULES
+
+
+def _axis_size(mesh: Mesh, target: AxisTarget) -> int:
+    if target is None:
+        return 1
+    if isinstance(target, str):
+        return mesh.shape[target]
+    n = 1
+    for t in target:
+        n *= mesh.shape[t]
+    return n
+
+
+@dataclass
+class ShardingCtx:
+    """Mesh + rules carrier for model code. ``null()`` disables everything."""
+    mesh: Optional[Mesh] = None
+    rules: Rules = field(default_factory=lambda: dict(TRAIN_RULES))
+    # logical names disabled at runtime (e.g. fsdp off for some perf configs)
+    disabled: Tuple[str, ...] = ()
+
+    @staticmethod
+    def null() -> "ShardingCtx":
+        return ShardingCtx(mesh=None)
+
+    @property
+    def active(self) -> bool:
+        return self.mesh is not None and self.mesh.size > 1
+
+    def axis_size(self, mesh_axis: str) -> int:
+        if not self.active or mesh_axis not in self.mesh.shape:
+            return 1
+        return self.mesh.shape[mesh_axis]
+
+    def _resolve_dim(self, name: Optional[str], dim: int) -> AxisTarget:
+        if name is None or name in self.disabled:
+            return None
+        target = self.rules.get(name)
+        if target is None:
+            return None
+        size = _axis_size(self.mesh, target)
+        if size <= 1:
+            return None
+        # jit argument shardings must divide evenly (GSPMD padding is not
+        # allowed for inputs) -> degrade to divisible sub-targets, else
+        # replicate. (Vocab/head padding to a shardable multiple is a §Perf
+        # lever, not the baseline.)
+        if dim % size == 0:
+            return target
+        if isinstance(target, tuple):
+            for k in range(len(target) - 1, 0, -1):
+                sub = target[:k]
+                s = _axis_size(self.mesh, sub)
+                if s > 1 and dim % s == 0:
+                    return sub if len(sub) > 1 else sub[0]
+        return None
+
+    def spec(self, names: Sequence[Optional[str]],
+             shape: Sequence[int]) -> P:
+        """PartitionSpec for logical axis names given concrete dims."""
+        if not self.active:
+            return P()
+        assert len(names) == len(shape), (names, shape)
+        used = set()
+        parts = []
+        for name, dim in zip(names, shape):
+            tgt = self._resolve_dim(name, dim)
+            # a mesh axis may appear only once in a spec
+            flat = (tgt,) if isinstance(tgt, str) else (tgt or ())
+            if tgt is not None and any(t in used for t in flat):
+                tgt = None
+            else:
+                used.update(flat)
+            parts.append(tgt)
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+    def sharding(self, names: Sequence[Optional[str]],
+                 shape: Sequence[int]) -> Optional[NamedSharding]:
+        if not self.active:
+            return None
+        return NamedSharding(self.mesh, self.spec(names, shape))
+
+    def constrain(self, x, *names: Optional[str]):
+        """with_sharding_constraint by logical names; no-op for null ctx."""
+        if not self.active:
+            return x
+        spec = self.spec(list(names), x.shape)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))

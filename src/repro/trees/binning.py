@@ -1,0 +1,34 @@
+"""Quantile binning for histogram-based tree training.
+
+Bin edges are computed per client on local data; learned split thresholds
+are stored as *raw feature values* so trees transfer across clients/servers
+without sharing the bin edges (required by the paper's tree-shipping
+protocols C2/C3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fit_bins(x, n_bins: int):
+    """x (n, F) -> edges (F, n_bins-1), ascending per feature."""
+    qs = jnp.linspace(0.0, 1.0, n_bins + 1)[1:-1]
+    edges = jnp.quantile(x, qs, axis=0).T  # (F, n_bins-1)
+    return edges
+
+
+def apply_bins(x, edges):
+    """x (n, F), edges (F, n_bins-1) -> bins (n, F) int32 in [0, n_bins)."""
+    def per_feature(col, e):
+        return jnp.searchsorted(e, col, side="left").astype(jnp.int32)
+    return jax.vmap(per_feature, in_axes=(1, 0), out_axes=1)(x, edges)
+
+
+def edge_value(edges, feature, bin_idx):
+    """Raw threshold for 'bin <= bin_idx': the upper edge of bin_idx.
+
+    edges (F, n_bins-1); returns edges[feature, bin_idx] (clamped)."""
+    nb1 = edges.shape[1]
+    idx = jnp.clip(bin_idx, 0, nb1 - 1)
+    return edges[feature, idx]

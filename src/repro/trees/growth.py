@@ -1,0 +1,149 @@
+"""Level-wise histogram tree growth (shared by GBDT and Random Forest).
+
+Dense heap-layout trees: internal node i has children 2i+1 / 2i+2; a tree of
+depth D has 2^D - 1 internal slots and 2^D leaves.  Growth is second-order
+(XGBoost-style): per level, per node, a gradient/hessian histogram
+(``repro.kernels.hist``) and the split gain
+
+    gain = 1/2 [ G_L^2/(H_L+lam) + G_R^2/(H_R+lam) - G^2/(H+lam) ]
+
+Nodes with no positive-gain split store feature = -1 (all samples routed
+right, children inherit the node's value).  Thresholds are stored as raw
+feature values (see ``binning``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hist.ops import gradient_histogram
+from repro.trees import binning
+
+
+class Tree(NamedTuple):
+    """Dense heap tree; all arrays may carry leading 'forest' dims."""
+    feature: jnp.ndarray     # (2^D - 1,) int32, -1 = no split
+    threshold: jnp.ndarray   # (2^D - 1,) f32 raw value, go left if x <= t
+    leaf: jnp.ndarray        # (2^D,) f32 leaf values
+    gain: jnp.ndarray        # (F,) total split gain per feature (importance)
+
+    @property
+    def depth(self) -> int:
+        return int(jnp.log2(self.leaf.shape[-1]))
+
+
+def nbytes(tree: Tree) -> int:
+    """Bytes-on-wire for transmitting this tree/forest (comm accounting)."""
+    return int(sum(x.size * x.dtype.itemsize
+                   for x in [tree.feature, tree.threshold, tree.leaf]))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("depth", "n_bins", "hist_impl"))
+def grow_tree(bins, edges, grad, hess, sample_w, *, depth: int,
+              n_bins: int, lam: float = 1.0, gamma: float = 0.0,
+              min_child_weight: float = 1e-3,
+              feature_mask: Optional[jnp.ndarray] = None,
+              hist_impl: str = "auto") -> Tree:
+    """Grow one tree.
+
+    bins (n, F) int32 pre-binned features; edges (F, n_bins-1);
+    grad/hess (n,) fp32; sample_w (n,) fp32 (bootstrap multiplicities — 0
+    excludes a sample); feature_mask (F,) 1/0 per-tree feature subsample.
+    """
+    n, F = bins.shape
+    n_internal = 2 ** depth - 1
+    n_leaves = 2 ** depth
+
+    grad = grad * sample_w
+    hess = hess * sample_w
+    feats = jnp.full((n_internal,), -1, jnp.int32)
+    thrs = jnp.zeros((n_internal,), jnp.float32)
+    fgain = jnp.zeros((F,), jnp.float32)
+    assign = jnp.zeros((n,), jnp.int32)  # node id within current level
+
+    for level in range(depth):
+        n_nodes = 2 ** level
+        base = n_nodes - 1  # first node index of this level in heap order
+        # one histogram call over the combined (node, bin) index space:
+        # O(n*F) per level regardless of node count, and the same Pallas
+        # kernel serves it (its bin axis is just n_nodes*n_bins wide).
+        combined = assign[:, None] * n_bins + bins     # (n, F)
+        hist = gradient_histogram(combined, grad, hess, n_nodes * n_bins,
+                                  impl=hist_impl)      # (F, nodes*bins, 2)
+        hist = hist.reshape(F, n_nodes, n_bins, 2).transpose(1, 0, 2, 3)
+        g, h = hist[..., 0], hist[..., 1]
+        gl = jnp.cumsum(g, axis=-1)
+        hl = jnp.cumsum(h, axis=-1)
+        gt = gl[..., -1:]
+        ht = hl[..., -1:]
+        gr, hr = gt - gl, ht - hl
+        gain = 0.5 * (gl ** 2 / (hl + lam) + gr ** 2 / (hr + lam)
+                      - gt ** 2 / (ht + lam)) - gamma
+        valid = (hl >= min_child_weight) & (hr >= min_child_weight)
+        # never split on the last bin (empty right child by construction)
+        valid = valid & (jnp.arange(n_bins) < n_bins - 1)
+        if feature_mask is not None:
+            valid = valid & feature_mask.astype(bool)[None, :, None]
+        gain = jnp.where(valid, gain, -jnp.inf)
+        flat = gain.reshape(n_nodes, -1)
+        best = jnp.argmax(flat, axis=-1)
+        best_gain = jnp.take_along_axis(flat, best[:, None], 1)[:, 0]
+        best_f = (best // n_bins).astype(jnp.int32)
+        best_b = (best % n_bins).astype(jnp.int32)
+        do_split = best_gain > 0.0
+        best_f = jnp.where(do_split, best_f, -1)
+        thr = binning.edge_value(edges, jnp.maximum(best_f, 0), best_b)
+        feats = feats.at[base + jnp.arange(n_nodes)].set(best_f)
+        thrs = thrs.at[base + jnp.arange(n_nodes)].set(
+            jnp.where(do_split, thr, 0.0))
+        fgain = fgain.at[jnp.maximum(best_f, 0)].add(
+            jnp.where(do_split, jnp.maximum(best_gain, 0.0), 0.0))
+        # route samples
+        nf = best_f[assign]                            # (n,)
+        nb = best_b[assign]
+        sample_bin = jnp.take_along_axis(
+            bins, jnp.maximum(nf, 0)[:, None], axis=1)[:, 0]
+        go_left = (nf >= 0) & (sample_bin <= nb)
+        assign = assign * 2 + jnp.where(go_left, 0, 1)
+
+    # leaf values: newton step -G/(H+lam)
+    gsum = jax.ops.segment_sum(grad, assign, n_leaves)
+    hsum = jax.ops.segment_sum(hess, assign, n_leaves)
+    leaf = -gsum / (hsum + lam)
+    return Tree(feats, thrs, leaf, fgain)
+
+
+def predict_tree(tree: Tree, x) -> jnp.ndarray:
+    """x (n, F) raw features -> leaf values (n,)."""
+    n = x.shape[0]
+    depth = tree.depth
+    node = jnp.zeros((n,), jnp.int32)
+    for _ in range(depth):
+        f = tree.feature[node]
+        t = tree.threshold[node]
+        xv = jnp.take_along_axis(x, jnp.maximum(f, 0)[:, None], 1)[:, 0]
+        go_left = (f >= 0) & (xv <= t)
+        node = 2 * node + jnp.where(go_left, 1, 2)
+    leaf_idx = node - (2 ** depth - 1)
+    return tree.leaf[leaf_idx]
+
+
+def predict_forest(forest: Tree, x) -> jnp.ndarray:
+    """forest: Tree with leading k dim -> (k, n) per-tree values."""
+    return jax.vmap(lambda t: predict_tree(t, x))(forest)
+
+
+def stack_trees(trees) -> Tree:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def concat_forests(forests) -> Tree:
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *forests)
+
+
+def take_trees(forest: Tree, idx) -> Tree:
+    return jax.tree.map(lambda a: a[idx], forest)

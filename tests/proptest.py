@@ -1,0 +1,54 @@
+"""Tiny property-test driver (the ``hypothesis`` package is not installed
+in this container — DESIGN.md): seeded random case generation + a
+``for_cases`` decorator that runs a test body over every generated case and
+reports the failing case's parameters."""
+from __future__ import annotations
+
+import functools
+import itertools
+from typing import Callable, Dict, Iterable, List
+
+import numpy as np
+
+
+def cases(num: int, seed: int, **space: Callable[[np.random.Generator], object]
+          ) -> List[Dict]:
+    rng = np.random.default_rng(seed)
+    return [{k: gen(rng) for k, gen in space.items()}
+            for _ in range(num)]
+
+
+def grid(**space: Iterable) -> List[Dict]:
+    keys = list(space)
+    return [dict(zip(keys, vals))
+            for vals in itertools.product(*space.values())]
+
+
+def for_cases(case_list: List[Dict]):
+    """Run the test body over every case. (Deliberately does NOT copy the
+    wrapped signature — pytest would treat the parameters as fixtures.)"""
+    def deco(fn):
+        def wrapper():
+            for i, case in enumerate(case_list):
+                try:
+                    fn(**case)
+                except Exception as e:
+                    raise AssertionError(
+                        f"case {i} failed: {case}: {e}") from e
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco
+
+
+# common generators
+def ints(lo, hi):
+    return lambda rng: int(rng.integers(lo, hi + 1))
+
+
+def choice(*opts):
+    return lambda rng: opts[int(rng.integers(0, len(opts)))]
+
+
+def floats(lo, hi):
+    return lambda rng: float(rng.uniform(lo, hi))

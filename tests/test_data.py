@@ -1,0 +1,72 @@
+"""Data pipeline: Framingham twin card-matching, partitioning, LM corpus."""
+import numpy as np
+
+from repro.data import framingham as F
+from repro.data.pipeline import (CorpusConfig, SyntheticCorpus, lm_batches,
+                                 pod_mixtures, sync_mixtures)
+
+
+def test_framingham_matches_dataset_card():
+    ds = F.synthesize()
+    assert ds.x.shape == (4238, 15)
+    assert abs(float(ds.y.mean()) - 0.152) < 0.005
+    assert ds.feature_names == F.FEATURES
+    # standardized features
+    assert np.all(np.abs(ds.x.mean(0)) < 0.05)
+    assert np.all(np.abs(ds.x.std(0) - 1.0) < 0.05)
+    # raw marginals near the published ones
+    raw = {f: ds.raw[:, i] for i, f in enumerate(F.FEATURES)}
+    assert 45 < raw["age"].mean() < 54
+    assert 120 < raw["sysBP"].mean() < 145
+    assert 0.35 < raw["male"].mean() < 0.50
+    # smokers only have cigsPerDay > 0
+    assert np.all(raw["cigsPerDay"][raw["currentSmoker"] == 0] == 0)
+
+
+def test_teacher_importance_ordering():
+    """The twin must induce the paper's Table-1 top features."""
+    import jax.numpy as jnp
+    from repro.trees import gbdt
+    ds = F.synthesize(seed=3)
+    m = gbdt.fit(jnp.asarray(ds.x), jnp.asarray(ds.y), num_rounds=20,
+                 depth=4)
+    imp = np.asarray(gbdt.feature_importance(m))
+    top4 = {ds.feature_names[i] for i in np.argsort(-imp)[:4]}
+    assert len(top4 & {"age", "sysBP", "glucose", "totChol"}) >= 3
+
+
+def test_stratified_partition_is_even_and_balanced():
+    ds = F.synthesize()
+    tr, te = F.train_test_split(ds, 0.8)
+    assert len(tr.y) + len(te.y) == 4238
+    clients = F.partition_clients(tr, 3)
+    sizes = [len(c.y) for c in clients]
+    assert max(sizes) - min(sizes) <= 2
+    rates = [float(c.y.mean()) for c in clients]
+    assert max(rates) - min(rates) < 0.01
+    # disjoint
+    all_idx = np.concatenate([c.x[:, 0] for c in clients])
+    assert len(all_idx) == len(tr.y)
+
+
+def test_dirichlet_partition_skews():
+    ds = F.synthesize()
+    tr, _ = F.train_test_split(ds)
+    clients = F.partition_clients(tr, 3, alpha=0.2, seed=1)
+    rates = [float(c.y.mean()) for c in clients]
+    assert max(rates) - min(rates) > 0.03  # visibly non-IID
+
+
+def test_lm_corpus_and_mixture_sync():
+    corpus = SyntheticCorpus(CorpusConfig(vocab_size=128, n_domains=3))
+    it = lm_batches(corpus, batch=2, seq=64, seed=0)
+    b = next(it)
+    assert b["tokens"].shape == (2, 64)
+    assert b["targets"].shape == (2, 64)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["targets"][:, :-1])
+    assert b["tokens"].max() < 128
+    mixes = pod_mixtures(4, 3, alpha=0.3, seed=0)
+    for m in mixes:
+        np.testing.assert_allclose(m.sum(), 1.0)
+    sync = sync_mixtures(mixes)
+    np.testing.assert_allclose(sync, np.mean(np.stack(mixes), 0))

@@ -1,0 +1,152 @@
+"""Federated-learning core: aggregation math, secure-agg mask cancellation,
+DP calibration, compression + error feedback, tree-subset protocol, fed
+SMOTE statistics, comm ledger."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compression as C
+from repro.core import privacy as PR
+from repro.core.comm import CommLog, pytree_bytes
+from repro.core.metrics import binary_metrics
+from repro.data import framingham as F
+from repro.data import sampling as S
+
+RNG = np.random.default_rng(5)
+
+
+def _tree(seed=0):
+    r = np.random.default_rng(seed)
+    return {"a": jnp.asarray(r.normal(size=(8, 4)), jnp.float32),
+            "b": {"c": jnp.asarray(r.normal(size=(16,)), jnp.float32)}}
+
+
+def test_secure_agg_masks_cancel_exactly():
+    updates = [_tree(i) for i in range(4)]
+    plain_sum = jax.tree.map(lambda *xs: sum(xs), *updates)
+    masked = [PR.mask_update(u, i, 4, round_seed=7)
+              for i, u in enumerate(updates)]
+    # individual masked updates differ from the true ones
+    assert float(jnp.max(jnp.abs(masked[0]["a"] - updates[0]["a"]))) > 0.1
+    masked_sum = PR.secure_sum(masked)
+    for a, b in zip(jax.tree.leaves(plain_sum), jax.tree.leaves(masked_sum)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_dp_sigma_calibration_and_clip():
+    s = PR.gaussian_sigma(0.5, 1e-5, 1.0)
+    assert 9.0 < s < 10.0   # sqrt(2 ln(1.25e5))/0.5 ≈ 9.37
+    t = _tree()
+    clipped, nrm = PR.clip_update(t, 0.5)
+    leaves = jax.tree.leaves(clipped)
+    total = float(jnp.sqrt(sum(jnp.sum(x ** 2) for x in leaves)))
+    assert total <= 0.5 + 1e-5
+    noised = PR.add_dp_noise(t, 0.5, 1e-5, 0.01, seed=3)
+    assert float(jnp.max(jnp.abs(noised["a"] - t["a"]))) > 1e-3
+
+
+def test_topk_compression_error_feedback():
+    """EF invariant: kept + residual == original (+ previous residual);
+    over rounds the residual mass is bounded."""
+    delta = _tree()
+    kept, state, nbytes = C.topk_compress(delta, rho=0.25)
+    recon = jax.tree.map(lambda k, r: k + r, kept, state.residual)
+    for a, b in zip(jax.tree.leaves(recon), jax.tree.leaves(delta)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    # sparsity: at most ceil(rho*n) nonzeros per leaf
+    for k in jax.tree.leaves(kept):
+        nz = int(jnp.sum(k != 0))
+        assert nz <= int(np.ceil(0.25 * k.size))
+    # wire bytes < dense bytes
+    assert nbytes < C.dense_bytes(delta)
+    # repeated compression of a CONSTANT delta: EF releases everything
+    acc = None
+    state = None
+    target = delta
+    shipped_total = jax.tree.map(jnp.zeros_like, delta)
+    for r in range(30):
+        kept, state, _ = C.topk_compress(target, 0.25, state)
+        shipped_total = jax.tree.map(lambda s, k: s + k, shipped_total,
+                                     kept)
+    expect = jax.tree.map(lambda d: d * 30, delta)
+    rel = max(float(jnp.max(jnp.abs(a - b))) / (float(jnp.max(jnp.abs(b)))
+                                                + 1e-9)
+              for a, b in zip(jax.tree.leaves(shipped_total),
+                              jax.tree.leaves(expect)))
+    assert rel < 0.1
+
+
+def test_lowrank_and_int8():
+    delta = _tree()
+    lr, nb = C.lowrank_compress(delta, rank=2)
+    assert nb < C.dense_bytes(delta)
+    q, nbq = C.int8_compress(delta)
+    err = float(jnp.max(jnp.abs(q["a"] - delta["a"])))
+    assert err < 0.05  # int8 quant error bound for unit-scale data
+    assert nbq < C.dense_bytes(delta) / 3
+
+
+def test_fed_smote_statistics_and_balance():
+    ds = F.synthesize(n=1200, seed=1)
+    tr, _ = F.train_test_split(ds)
+    clients = F.partition_clients(tr, 3, alpha=0.4)
+    stats = [S.minority_stats(c.x, c.y) for c in clients]
+    mu_g, var_g = S.aggregate_stats(stats)
+    assert mu_g.shape == (15,) and var_g.shape == (15,)
+    np.testing.assert_allclose(mu_g, np.mean([s[0] for s in stats], 0))
+    x2, y2 = S.fed_smote(clients[0].x, clients[0].y, mu_g, var_g)
+    assert abs(y2.mean() - 0.5) < 0.02          # balanced after synth
+    assert len(y2) > len(clients[0].y)
+    # no raw rows crossed: synthetic rows are not copies of real rows
+    synth = x2[len(clients[0].y):]
+    d = ((synth[:, None, :] - clients[0].x[None, :20, :]) ** 2).sum(-1)
+    assert d.min() > 1e-6
+
+
+def test_local_sampling_strategies_balance():
+    ds = F.synthesize(n=1500, seed=2)
+    for name in ["ros", "rus", "smote"]:
+        x2, y2 = S.apply_strategy(name, ds.x, ds.y, seed=0)
+        assert abs(float(np.mean(y2)) - 0.5) < 0.05, name
+    x3, y3 = S.apply_strategy("none", ds.x, ds.y)
+    assert len(y3) == len(ds.y)
+
+
+def test_comm_ledger():
+    log = CommLog()
+    log.log(0, "c0", "up", 1000, "m")
+    log.log(0, "c1", "up", 2000, "m")
+    log.log(1, "c0", "down", 500, "m")
+    assert log.total_bytes() == 3500
+    assert log.total_bytes("up") == 3000
+    assert abs(log.uplink_mb() - 0.003) < 1e-9
+    assert log.per_round_mb()[0] == 0.003
+    t = _tree()
+    assert pytree_bytes(t) == 8 * 4 * 4 + 16 * 4
+
+
+def test_metrics_known_values():
+    pred = np.array([1, 1, 0, 0, 1])
+    y = np.array([1, 0, 0, 1, 1])
+    m = binary_metrics(pred, y)
+    assert m["tp"] == 2 and m["fp"] == 1 and m["fn"] == 1
+    np.testing.assert_allclose(m["precision"], 2 / 3)
+    np.testing.assert_allclose(m["recall"], 2 / 3)
+    np.testing.assert_allclose(m["f1"], 2 / 3)
+
+
+def test_fedavg_is_mean_of_client_optima():
+    """One-round FedAvg with full local convergence on quadratic losses
+    lands at the mean of local optima (sanity of the aggregation math)."""
+    from repro.core.parametric import FedParametricConfig, train_federated
+    r = np.random.default_rng(0)
+    # two clients with pure-bias logistic problems pulling opposite ways
+    x0 = r.normal(size=(200, 3)).astype(np.float32)
+    clients = [(x0, np.ones(200, np.float32)),
+               (x0, np.zeros(200, np.float32))]
+    cfg = FedParametricConfig(model="logreg", rounds=3, local_steps=60,
+                              lr=0.1, sampling="none")
+    params, comm, hist, _ = train_federated(clients, cfg)
+    # opposing labels -> aggregated bias stays near 0
+    assert abs(float(params["b"])) < 0.5
+    assert comm.total_bytes("up") > 0 and comm.total_bytes("down") > 0

@@ -1,0 +1,74 @@
+"""HLO analysis: collective parsing, byte accounting, roofline terms."""
+import numpy as np
+
+from repro.launch.hlo_analysis import (CollectiveStats, fused_memory_bytes,
+                                       parse_collectives, roofline_terms)
+
+HLO = """
+HloModule jit_step
+
+%fused_computation {
+  %param_0 = f32[128,256]{1,0} parameter(0)
+  ROOT %m = f32[128,256]{1,0} multiply(%param_0, %param_0)
+}
+
+ENTRY %main (p0: f32[128,256], p1: bf16[64]) -> f32[128,256] {
+  %p0 = f32[128,256]{1,0} parameter(0)
+  %p1 = bf16[64]{0} parameter(1)
+  %ag = f32[128,1024]{1,0} all-gather(%p0), replica_groups=[32,4]<=[128], dimensions={1}
+  %ar = f32[128,256]{1,0} all-reduce(%p0), replica_groups={{0,1,2,3}}, to_apply=%add
+  %rs = f32[32,256]{1,0} reduce-scatter(%p0), replica_groups=[2,4]<=[8], dimensions={0}
+  %a2a = bf16[64]{0} all-to-all(%p1), replica_groups=[8,2]<=[16]
+  %cp = bf16[64]{0} collective-permute(%p1), source_target_pairs={{0,1}}
+  %dot.1 = f32[128,128]{1,0} dot(%p0, %p0), lhs_contracting_dims={1}, rhs_contracting_dims={1}
+  ROOT %out = f32[128,256]{1,0} multiply(%p0, %p0)
+}
+"""
+
+
+def test_parse_collectives_kinds_and_bytes():
+    st = parse_collectives(HLO)
+    ag = 128 * 1024 * 4
+    ar = 128 * 256 * 4
+    rs = 32 * 256 * 4
+    a2a = 64 * 2
+    cp = 64 * 2
+    assert st.bytes_by_kind["all-gather"] == ag
+    assert st.bytes_by_kind["all-reduce"] == ar
+    assert st.bytes_by_kind["reduce-scatter"] == rs
+    assert st.bytes_by_kind["all-to-all"] == a2a
+    assert st.bytes_by_kind["collective-permute"] == cp
+    # ring model: ar x2, rs x(group-1)=3, others x1
+    assert st.wire_bytes == ag + 2 * ar + 3 * rs + a2a + cp
+    assert st.count_by_kind["all-reduce"] == 1
+
+
+def test_async_pairs_counted_once():
+    txt = """ENTRY %e {
+  %s = f32[16]{0} all-gather-start(%x), replica_groups=[2,2]<=[4]
+  %d = f32[16]{0} all-gather-done(%s)
+}"""
+    st = parse_collectives(txt)
+    assert st.count_by_kind.get("all-gather", 0) == 1
+
+
+def test_fused_memory_counts_entry_params_once():
+    b = fused_memory_bytes(HLO)
+    # entry params (once, even though the fusion re-declares parameter 0)
+    p = 128 * 256 * 4 + 64 * 2
+    root = 128 * 256 * 4
+    dot = 128 * 128 * 4 + 2 * (128 * 256 * 4)
+    colls = (128 * 1024 * 4 + 128 * 256 * 4 + 32 * 256 * 4 + 128 + 128)
+    assert b == p + root + dot + colls
+
+
+def test_roofline_terms_dominance():
+    t = roofline_terms(1e15, 1e12, 1e11, peak_flops=197e12, hbm_bw=819e9,
+                       ici_bw=50e9, fused_bytes=5e11)
+    assert t["dominant"] == "compute_s"
+    np.testing.assert_allclose(t["compute_s"], 1e15 / 197e12)
+    np.testing.assert_allclose(t["memory_fused_s"], 5e11 / 819e9)
+    t2 = roofline_terms(1e12, 1e12, 1e13, peak_flops=197e12, hbm_bw=819e9,
+                        ici_bw=50e9)
+    assert t2["dominant"] == "collective_s"
+    assert t2["collective_s_1link"] == 4 * t2["collective_s"]

@@ -1,0 +1,115 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles over
+shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from proptest import cases, choice, for_cases, grid, ints
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.hist.kernel import hist_pallas
+from repro.kernels.hist.ref import hist_ref
+from repro.kernels.ssd.kernel import ssd_pallas
+from repro.kernels.ssd.ref import ssd_ref, ssd_sequential
+from repro.models.attention import chunked_attention
+
+RNG = jax.random.PRNGKey(42)
+
+
+FLASH_CASES = grid(
+    shape=[(1, 64, 64, 4, 2, 32), (2, 128, 128, 4, 4, 64),
+           (1, 96, 96, 6, 1, 32),            # unaligned, MQA
+           (1, 32, 160, 2, 2, 32)],          # cross shape
+    causal=[True, False],
+    dtype=[jnp.float32, jnp.bfloat16],
+)
+
+
+@for_cases(FLASH_CASES)
+def test_flash_attention_matches_oracle(shape, causal, dtype):
+    B, T, S, H, K, dh = shape
+    if causal and T != S:
+        return
+    q = jax.random.normal(jax.random.fold_in(RNG, 1), (B, T, H, dh), dtype)
+    k = jax.random.normal(jax.random.fold_in(RNG, 2), (B, S, K, dh), dtype)
+    v = jax.random.normal(jax.random.fold_in(RNG, 3), (B, S, K, dh), dtype)
+    ref = attention_ref(q, k, v, causal=causal)
+    pal = flash_attention(q, k, v, causal=causal, block_q=32, block_kv=32,
+                          interpret=True)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(pal, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_sliding_window():
+    B, T, H, dh = 1, 128, 4, 32
+    q = jax.random.normal(jax.random.fold_in(RNG, 1), (B, T, H, dh))
+    k = jax.random.normal(jax.random.fold_in(RNG, 2), (B, T, H, dh))
+    v = jax.random.normal(jax.random.fold_in(RNG, 3), (B, T, H, dh))
+    for w in (16, 64):
+        ref = attention_ref(q, k, v, causal=True, window=w)
+        pal = flash_attention(q, k, v, causal=True, window=w, block_q=32,
+                              block_kv=32, interpret=True)
+        np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                                   atol=1e-5, rtol=1e-5)
+        xla = chunked_attention(q, k, v, causal=True, window=w,
+                                kv_chunk=32)
+        np.testing.assert_allclose(np.asarray(xla), np.asarray(ref),
+                                   atol=1e-5, rtol=1e-5)
+
+
+SSD_CASES = grid(
+    dims=[(1, 64, 4, 32, 1, 16, 16), (2, 64, 8, 32, 2, 32, 32),
+          (1, 96, 4, 64, 4, 8, 32)],
+)
+
+
+@for_cases(SSD_CASES)
+def test_ssd_kernel_matches_sequential(dims):
+    B, T, H, P, G, N, Q = dims
+    ks = [jax.random.fold_in(RNG, i) for i in range(5)]
+    x = jax.random.normal(ks[0], (B, T, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H)))
+    a_log = jax.random.normal(ks[2], (H,)) * 0.5
+    b = jax.random.normal(ks[3], (B, T, G, N)) * 0.3
+    c = jax.random.normal(ks[4], (B, T, G, N)) * 0.3
+    y_seq, s_seq = ssd_sequential(x, dt, a_log, b, c)
+    y_chk, s_chk = ssd_ref(x, dt, a_log, b, c, Q)
+    y_pal, s_pal = ssd_pallas(x, dt, a_log, b, c, Q, interpret=True)
+    scale = float(jnp.max(jnp.abs(y_seq))) + 1e-6
+    assert float(jnp.max(jnp.abs(y_chk - y_seq))) / scale < 1e-4
+    assert float(jnp.max(jnp.abs(y_pal - y_seq))) / scale < 1e-4
+    np.testing.assert_allclose(np.asarray(s_pal), np.asarray(s_seq),
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(s_chk), np.asarray(s_seq),
+                               atol=1e-3)
+
+
+HIST_CASES = cases(6, seed=7, n=ints(64, 3000), F=ints(1, 24),
+                   nb=choice(16, 64, 128))
+
+
+@for_cases(HIST_CASES)
+def test_hist_kernel_matches_oracle(n, F, nb):
+    ks = [jax.random.fold_in(RNG, i) for i in range(3)]
+    bins = jax.random.randint(ks[0], (n, F), 0, nb)
+    g = jax.random.normal(ks[1], (n,))
+    h = jax.random.uniform(ks[2], (n,))
+    r = hist_ref(bins, g, h, nb)
+    p = hist_pallas(bins, g, h, nb, block_n=256, block_f=4, interpret=True)
+    np.testing.assert_allclose(np.asarray(p), np.asarray(r), atol=2e-4)
+
+
+def test_hist_mass_conservation():
+    """Property: total grad mass is preserved per feature."""
+    n, F, nb = 512, 5, 32
+    bins = jax.random.randint(jax.random.fold_in(RNG, 0), (n, F), 0, nb)
+    g = jax.random.normal(jax.random.fold_in(RNG, 1), (n,))
+    h = jnp.abs(g)
+    out = hist_pallas(bins, g, h, nb, interpret=True)
+    np.testing.assert_allclose(np.asarray(jnp.sum(out[:, :, 0], axis=1)),
+                               float(jnp.sum(g)) * np.ones(F), rtol=1e-4,
+                               atol=1e-3)

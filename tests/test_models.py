@@ -1,0 +1,162 @@
+"""Model semantics: decode-vs-prefill equivalence, sliding windows, MoE
+dispatch invariants, SSD chunk-size invariance, loss chunking, RoPE."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry as R
+from repro.configs.base import RunConfig
+from repro.models import api, layers as L, moe as M
+from repro.models.attention import chunked_attention, decode_attention
+from repro.models.params import init_tree
+from repro.models.ssm import ssd_chunked
+from repro.sharding import ShardingCtx
+
+RUN = RunConfig()
+CTX = ShardingCtx.null()
+RNG = jax.random.PRNGKey(0)
+
+
+def _hi_cap(cfg):
+    if cfg.moe is None:
+        return cfg
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+
+
+@pytest.mark.parametrize("arch", ["qwen3_4b", "yi_34b", "mamba2_13b",
+                                  "hymba_15b", "phi35_moe",
+                                  "whisper_medium", "internvl2_2b"])
+def test_decode_matches_prefill(arch):
+    """Autoregressive consistency: decoding token T on a prefix cache must
+    reproduce the full-prefill logits at T (capacity drops disabled)."""
+    cfg = _hi_cap(R.get_smoke(arch))
+    params = init_tree(RNG, api.param_defs(cfg))
+    B, T = 2, 12
+    toks = jax.random.randint(RNG, (B, T + 1), 0, cfg.vocab_size)
+    extra = {}
+    if cfg.family == "encdec":
+        extra["frames"] = jax.random.normal(
+            RNG, (B, cfg.encoder.seq_len, cfg.d_model))
+    if cfg.family == "vlm":
+        extra["patches"] = jax.random.normal(
+            RNG, (B, cfg.encoder.num_image_tokens,
+                  cfg.encoder.frontend_dim))
+    lg_full, _ = api.prefill(params, {"tokens": toks, **extra}, cfg, RUN,
+                             CTX)
+    _, cache = api.prefill(params, {"tokens": toks[:, :T], **extra}, cfg,
+                           RUN, CTX)
+    cache = {k: (jnp.pad(v, ((0, 0), (0, 0), (0, 4), (0, 0), (0, 0)))
+                 if k in ("k", "v") else v) for k, v in cache.items()}
+    pos = T + (cfg.encoder.num_image_tokens if cfg.family == "vlm" else 0)
+    lg_dec, _ = api.decode_step(params, {"token": toks[:, T],
+                                         "pos": jnp.int32(pos)},
+                                cache, cfg, RUN, CTX)
+    scale = float(jnp.max(jnp.abs(lg_full))) + 1e-6
+    assert float(jnp.max(jnp.abs(lg_dec - lg_full))) / scale < 2e-2, arch
+
+
+def test_chunk_size_invariance():
+    """Attention and SSD results must not depend on chunk sizes."""
+    B, T, H, dh = 2, 96, 4, 32
+    q = jax.random.normal(jax.random.fold_in(RNG, 1), (B, T, H, dh))
+    k = jax.random.normal(jax.random.fold_in(RNG, 2), (B, T, H, dh))
+    v = jax.random.normal(jax.random.fold_in(RNG, 3), (B, T, H, dh))
+    outs = [chunked_attention(q, k, v, causal=True, kv_chunk=c)
+            for c in (16, 32, 96)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(o), np.asarray(outs[0]),
+                                   atol=1e-5)
+    # block-skip path == scan path
+    bs = chunked_attention(q, k, v, causal=True, kv_chunk=16, q_chunk=32,
+                           block_skip=True)
+    np.testing.assert_allclose(np.asarray(bs), np.asarray(outs[0]),
+                               atol=1e-5)
+
+    x = jax.random.normal(jax.random.fold_in(RNG, 4), (B, T, H, dh))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(RNG, 5),
+                                           (B, T, H)))
+    a = jax.random.normal(jax.random.fold_in(RNG, 6), (H,)) * 0.5
+    bb = jax.random.normal(jax.random.fold_in(RNG, 7), (B, T, 1, 16)) * 0.3
+    cc = jax.random.normal(jax.random.fold_in(RNG, 8), (B, T, 1, 16)) * 0.3
+    y1, s1 = ssd_chunked(x, dt, a, bb, cc, 16)
+    y2, s2 = ssd_chunked(x, dt, a, bb, cc, 48)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=2e-4)
+
+
+def test_decode_attention_window_masks_history():
+    B, S, H, dh = 1, 64, 2, 16
+    q = jax.random.normal(jax.random.fold_in(RNG, 1), (B, H, dh))
+    ck = jax.random.normal(jax.random.fold_in(RNG, 2), (B, S, H, dh))
+    cv = jax.random.normal(jax.random.fold_in(RNG, 3), (B, S, H, dh))
+    pos = 40
+    full = decode_attention(q, ck, cv, pos)
+    w8 = decode_attention(q, ck, cv, pos, window=8)
+    # windowed must equal attention over only the last 8 positions
+    ck2 = ck[:, pos - 7:pos + 1]
+    cv2 = cv[:, pos - 7:pos + 1]
+    ref = decode_attention(q, ck2, cv2, 7)
+    np.testing.assert_allclose(np.asarray(w8), np.asarray(ref), atol=1e-5)
+    assert float(jnp.max(jnp.abs(w8 - full))) > 1e-4  # actually different
+
+
+def test_moe_weights_sum_and_capacity():
+    cfg = R.get_smoke("dbrx_132b")  # 4 experts top-2 reduced
+    p = init_tree(RNG, M.moe_defs(cfg))
+    x = jax.random.normal(RNG, (64, cfg.d_model))
+    w, idx, aux = M._route({"router": p["router"]}, x, cfg)
+    np.testing.assert_allclose(np.asarray(jnp.sum(w, -1)), 1.0, atol=1e-5)
+    assert int(jnp.max(idx)) < cfg.moe.num_experts
+    assert float(aux) >= 1.0 - 1e-3  # >= 1 by Cauchy-Schwarz, = 1 balanced
+    slot, keep, token = M._dispatch_indices(idx, cfg.moe.num_experts, 8)
+    # no slot collisions among kept assignments
+    kept = np.asarray(slot)[np.asarray(keep)]
+    assert len(set(kept.tolist())) == len(kept)
+
+
+def test_moe_local_zero_capacity_drops():
+    """With capacity 0ish tokens drop to zero output, not NaN."""
+    cfg = dataclasses.replace(
+        R.get_smoke("phi35_moe"),
+        moe=dataclasses.replace(R.get_smoke("phi35_moe").moe,
+                                capacity_factor=0.01))
+    p = init_tree(RNG, M.moe_defs(cfg))
+    x = jax.random.normal(RNG, (2, 16, cfg.d_model))
+    y, aux = M.moe_local(p, x, cfg)
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_cross_entropy_chunking_invariant():
+    B, T, d, V = 2, 24, 16, 50
+    h = jax.random.normal(jax.random.fold_in(RNG, 1), (B, T, d))
+    w = jax.random.normal(jax.random.fold_in(RNG, 2), (d, V))
+    labels = jax.random.randint(jax.random.fold_in(RNG, 3), (B, T), 0, V)
+    mask = (jax.random.uniform(jax.random.fold_in(RNG, 4), (B, T))
+            > 0.3).astype(jnp.float32)
+    losses = [L.cross_entropy_chunked(h, w, labels, mask, c)[0]
+              for c in (6, 16, 48, 1000)]
+    for x in losses[1:]:
+        np.testing.assert_allclose(float(x), float(losses[0]), rtol=1e-5)
+
+
+def test_rope_preserves_norm_and_relativity():
+    T, H, dh = 16, 2, 32
+    x = jax.random.normal(RNG, (1, T, H, dh))
+    sin, cos = L.rope_tables(jnp.arange(T), dh, 10000.0)
+    y = L.apply_rope(x, sin, cos)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-4)
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jax.random.normal(jax.random.fold_in(RNG, 9), (1, 1, 1, dh))
+    k = jax.random.normal(jax.random.fold_in(RNG, 10), (1, 1, 1, dh))
+    def dot_at(i, j):
+        si, ci = L.rope_tables(jnp.arange(i, i + 1), dh, 10000.0)
+        sj, cj = L.rope_tables(jnp.arange(j, j + 1), dh, 10000.0)
+        return float(jnp.sum(L.apply_rope(q, si, ci)
+                             * L.apply_rope(k, sj, cj)))
+    assert abs(dot_at(5, 3) - dot_at(9, 7)) < 1e-3

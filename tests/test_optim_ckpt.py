@@ -1,0 +1,65 @@
+"""Optimizers, FedProx, schedules, checkpoint roundtrip."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_pytree, save_pytree
+from repro.optim import adam, adamw, cosine_schedule, fedprox_grad, sgd
+
+
+def _quadratic_converges(opt, lr, steps=300):
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    for _ in range(steps):
+        grads = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        params, state = opt.update(grads, state, params, lr)
+    return float(jnp.max(jnp.abs(params["w"] - target)))
+
+
+def test_optimizers_converge_on_quadratic():
+    assert _quadratic_converges(sgd(), 0.1) < 1e-3
+    assert _quadratic_converges(sgd(momentum=0.9), 0.02) < 1e-3
+    assert _quadratic_converges(adam(), 0.1) < 1e-2
+    assert _quadratic_converges(adamw(weight_decay=0.0), 0.1) < 1e-2
+
+
+def test_fedprox_pulls_towards_global():
+    params = {"w": jnp.asarray([2.0])}
+    glob = {"w": jnp.asarray([0.0])}
+    g0 = {"w": jnp.asarray([0.0])}
+    g = fedprox_grad(g0, params, glob, mu=0.5)
+    assert float(g["w"][0]) == 1.0  # mu * (theta - theta_g)
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, 100, warmup=10)
+    assert float(lr(0)) == 0.0
+    np.testing.assert_allclose(float(lr(10)), 1.0, atol=0.02)
+    assert float(lr(100)) < 0.01
+    assert float(lr(55)) > float(lr(90))
+
+
+def test_checkpoint_roundtrip_and_validation():
+    tree = {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": {"c": jnp.asarray([1, 2, 3], jnp.int32),
+                  "d": jnp.asarray(2.5, jnp.bfloat16)}}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ck.msgpack.zst")
+        nb = save_pytree(path, tree)
+        assert nb > 0
+        out = load_pytree(path, tree)
+        for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+        # shape-mismatch template rejected
+        bad = {"a": jnp.zeros((4, 3)), "b": tree["b"]}
+        try:
+            load_pytree(path, bad)
+            raise AssertionError("expected shape mismatch")
+        except ValueError:
+            pass

@@ -1,0 +1,102 @@
+"""Sharding rules engine: divisibility degradation, axis uniqueness,
+null-ctx no-ops, production rule tables. (Pure logic — no 512-device init;
+the real-mesh path is exercised by launch/dryrun.py.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from proptest import grid, for_cases
+
+from repro.launch.steps import production_rules
+from repro.sharding.rules import (DECODE_RULES, LONG_DECODE_RULES,
+                                  TRAIN_RULES, ShardingCtx)
+
+
+def _mesh22():
+    n = jax.device_count()
+    if n < 4:
+        pytest.skip("needs >= 4 host devices")
+    return jax.make_mesh((2, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def test_null_ctx_noops():
+    ctx = ShardingCtx.null()
+    assert not ctx.active
+    x = jnp.ones((4, 4))
+    assert ctx.constrain(x, "batch", "embed") is x
+    assert ctx.spec(["batch", "embed"], (4, 4)) == P()
+
+
+def test_divisible_sharding_assignment():
+    mesh = _mesh22()
+    ctx = ShardingCtx(mesh=mesh, rules=dict(TRAIN_RULES))
+    # divisible -> sharded
+    assert ctx.spec(["batch", "mlp"], (8, 8)) == P("data", "model")
+    # not divisible -> replicated
+    assert ctx.spec(["batch", "mlp"], (7, 8)) == P(None, "model")
+    assert ctx.spec(["mlp"], (9,)) == P()
+    # dim smaller than axis -> replicated
+    assert ctx.spec(["batch"], (1,)) == P()
+
+
+def test_axis_used_once_per_spec():
+    mesh = _mesh22()
+    ctx = ShardingCtx(mesh=mesh,
+                      rules={"a": "model", "b": "model", "c": "data"})
+    spec = ctx.spec(["a", "b", "c"], (4, 4, 4))
+    flat = [s for s in spec if s is not None]
+    assert len(flat) == len(set(flat)) == 2  # 'model' used once only
+
+
+def test_tuple_target_degrades_to_divisible_prefix():
+    mesh = _mesh22()
+    ctx = ShardingCtx(mesh=mesh, rules={"seq": ("data", "model")})
+    assert ctx.spec(["seq"], (8,)) == P(("data", "model"))
+    # 6 % 4 != 0 but 6 % 2 == 0 -> degrade to ('data',)
+    assert ctx.spec(["seq"], (6,)) == P("data")
+    assert ctx.spec(["seq"], (5,)) == P()
+
+
+def test_disabled_names():
+    mesh = _mesh22()
+    ctx = ShardingCtx(mesh=mesh, rules=dict(TRAIN_RULES),
+                      disabled=("fsdp",))
+    assert ctx.spec(["fsdp", "mlp"], (8, 8)) == P(None, "model")
+
+
+RULES_CASES = grid(phase=["train", "prefill", "decode"],
+                   shape=["train_4k", "prefill_32k", "decode_32k",
+                          "long_500k"])
+
+
+@for_cases(RULES_CASES)
+def test_production_rules_tables(phase, shape):
+    class FakeMesh:
+        shape = {"pod": 2, "data": 16, "model": 16}
+    rules = production_rules(FakeMesh(), phase, shape)
+    if phase == "decode":
+        if shape == "long_500k":
+            assert rules["cache_seq"] == ("pod", "data", "model")
+            assert rules["batch"] is None
+        else:
+            assert rules["cache_seq"] == "model"
+            assert rules["batch"] == ("pod", "data")
+    else:
+        assert rules["batch"] == ("pod", "data")
+        assert rules["experts"] == "data"
+
+
+def test_constrain_under_mesh_runs():
+    mesh = _mesh22()
+    ctx = ShardingCtx(mesh=mesh, rules=dict(TRAIN_RULES))
+
+    @jax.jit
+    def f(x):
+        return ctx.constrain(x * 2, "batch", None, "embed")
+
+    with jax.sharding.set_mesh(mesh):
+        y = f(jnp.ones((4, 3, 8)))
+    np.testing.assert_allclose(np.asarray(y), 2.0)

@@ -1,0 +1,99 @@
+"""End-to-end behaviour of the system (integration tests).
+
+1. Federated Framingham pipeline improves over chance and the tree-subset
+   protocol holds Theorem 1's bound at small scale.
+2. Federated LM training (pods-as-clients) reduces loss; top-k update
+   compression cuts uplink while staying within a loss tolerance.
+3. Training/serving drivers run end to end on reduced configs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import RunConfig
+from repro.core import feature_extract as FE
+from repro.core import parametric as P
+from repro.core import tree_subset as TS
+from repro.data import framingham as F
+
+
+def _small_setup(seed=0):
+    ds = F.synthesize(n=900, seed=seed)
+    tr, te = F.train_test_split(ds)
+    clients = [(c.x, c.y) for c in F.partition_clients(tr, 3, seed)]
+    return tr, te, clients
+
+
+def test_fed_parametric_end_to_end():
+    tr, te, clients = _small_setup()
+    cfg = P.FedParametricConfig(model="logreg", rounds=8, local_steps=30,
+                                lr=0.05, sampling="ros")
+    params, comm, hist, timer = P.train_federated(clients, cfg,
+                                                  test=(te.x, te.y))
+    assert hist[-1]["f1"] > 0.40                  # well above chance
+    assert comm.total_bytes("up") > 0
+    # DP + secure-agg variant still learns (noisier)
+    cfg2 = P.FedParametricConfig(model="logreg", rounds=8, local_steps=30,
+                                 lr=0.05, sampling="ros", secure_agg=True,
+                                 dp_epsilon=8.0, dp_clip=5.0)
+    _, _, hist2, _ = P.train_federated(clients, cfg2, test=(te.x, te.y))
+    assert hist2[-1]["f1"] > 0.30
+
+
+def test_fed_rf_tree_subset_theorem1_smallscale():
+    tr, te, clients = _small_setup()
+    full = TS.FedForestConfig(trees_per_client=25, subset=25, depth=6,
+                              sampling="smote")
+    sub = TS.FedForestConfig(trees_per_client=25, subset=5, depth=6,
+                             sampling="smote")
+    m_full, c_full, _ = TS.train_federated_rf(clients, full)
+    m_sub, c_sub, _ = TS.train_federated_rf(clients, sub)
+    f_full = TS.evaluate_rf(m_full, te.x, te.y)["f1"]
+    f_sub = TS.evaluate_rf(m_sub, te.x, te.y)["f1"]
+    # comm scales with subset size exactly
+    np.testing.assert_allclose(c_sub.total_bytes("up")
+                               / c_full.total_bytes("up"), 5 / 25,
+                               rtol=1e-6)
+    # bounded degradation (paper: |dF1| <= 0.03; small-scale slack 0.08)
+    assert abs(f_full - f_sub) < 0.08
+
+
+def test_fed_xgb_feature_extraction_comm_cut():
+    tr, te, clients = _small_setup()
+    cfg = FE.FedXGBConfig(num_rounds=15, depth=4, shallow_depth=3,
+                          top_features=8, sampling="smote")
+    dense, c_dense, _ = FE.train_federated_xgb(clients, cfg)
+    fe, c_fe, _ = FE.train_federated_xgb_fe(clients, cfg)
+    f_dense = FE.evaluate_fed_xgb(dense, te.x, te.y)["f1"]
+    f_fe = FE.evaluate_fe(fe, te.x, te.y)["f1"]
+    assert c_fe.total_bytes("up") < c_dense.total_bytes("up") / 3
+    assert f_fe > 0.45 and f_dense > 0.45
+
+
+def test_fed_lm_pods_and_compression():
+    from repro.launch.fed_train import simulate
+    dense = simulate("qwen3_4b", n_pods=2, rounds=3, local_steps=4,
+                     batch=2, seq=64, verbose=False, seed=0)
+    comp = simulate("qwen3_4b", n_pods=2, rounds=3, local_steps=4,
+                    batch=2, seq=64, compression="topk", rho=0.05,
+                    verbose=False, seed=0)
+    assert dense["loss_history"][-1] < dense["loss_history"][0]
+    assert comp["uplink_mb"] < dense["uplink_mb"] * 0.3
+    # compressed run still trains
+    assert comp["loss_history"][-1] < comp["loss_history"][0] + 0.1
+
+
+def test_train_driver_loss_decreases():
+    from repro.launch.train import train
+    params, losses = train("phi3_mini", smoke=True, steps=30, batch=4,
+                           seq=64, lr=2e-3, log_every=1000)
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.3
+
+
+def test_serve_driver_runs():
+    from repro.launch.serve import serve
+    gen = serve("mamba2_13b", smoke=True, batch=2, prompt_len=8,
+                gen_len=6)
+    assert gen.shape == (2, 6)
+    assert gen.dtype in (np.int32, np.int64)

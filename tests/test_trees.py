@@ -1,0 +1,130 @@
+"""Tree library: growth invariants, learning power, importance, binning."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from proptest import cases, for_cases, ints
+
+from repro.trees import binning, forest, gbdt
+from repro.trees.growth import grow_tree, nbytes, predict_tree
+
+RNG = np.random.default_rng(3)
+
+
+def _data(n=600, F=8, sep=2.0):
+    X = RNG.normal(size=(n, F)).astype(np.float32)
+    y = (X[:, 0] + 0.5 * X[:, 1] * X[:, 2] + RNG.normal(size=n) / sep
+         > 0).astype(np.float32)
+    return jnp.asarray(X), jnp.asarray(y)
+
+
+def test_binning_roundtrip_monotone():
+    x, _ = _data()
+    edges = binning.fit_bins(x, 32)
+    b = binning.apply_bins(x, edges)
+    assert int(jnp.min(b)) >= 0 and int(jnp.max(b)) < 32
+    # monotone: larger value -> bin index >= smaller value's bin
+    col = np.asarray(x[:, 0])
+    order = np.argsort(col)
+    bins_sorted = np.asarray(b[:, 0])[order]
+    assert np.all(np.diff(bins_sorted) >= 0)
+
+
+def test_tree_consistency_train_vs_raw_thresholds():
+    """Tree routing via raw thresholds must reproduce the training-time
+    bin routing (threshold = upper bin edge)."""
+    x, y = _data()
+    edges = binning.fit_bins(x, 32)
+    bins = binning.apply_bins(x, edges)
+    p = jnp.full_like(y, 0.5)
+    tree = grow_tree(bins, edges, p - y, p * (1 - p), jnp.ones_like(y),
+                     depth=3, n_bins=32)
+    vals = predict_tree(tree, x)
+    # every training sample's prediction equals its leaf's fitted value ->
+    # predictions take at most 2^depth distinct values
+    assert len(np.unique(np.asarray(vals).round(6))) <= 8
+
+
+def test_gbdt_reduces_train_loss_monotonically_ish():
+    x, y = _data()
+    m = gbdt.fit(x, y, num_rounds=15, depth=3, learning_rate=0.4)
+    margins = [m.base_margin * jnp.ones(len(y))]
+    from repro.trees.growth import predict_forest
+    vals = predict_forest(m.forest, x)
+    losses = []
+    acc = margins[0]
+    for t in range(vals.shape[0]):
+        acc = acc + m.learning_rate * vals[t]
+        p = jax.nn.sigmoid(acc)
+        eps = 1e-7
+        losses.append(float(-jnp.mean(
+            y * jnp.log(p + eps) + (1 - y) * jnp.log(1 - p + eps))))
+    assert losses[-1] < losses[0] * 0.8
+    assert losses[-1] == min(losses)
+
+
+def test_gbdt_learns_and_importance_finds_signal():
+    x, y = _data(n=800)
+    m = gbdt.fit(x, y, num_rounds=25, depth=4)
+    pred = gbdt.predict(m, x)
+    acc = float(jnp.mean(pred == (y > 0.5)))
+    assert acc > 0.9
+    imp = np.asarray(gbdt.feature_importance(m))
+    np.testing.assert_allclose(imp.sum(), 1.0, atol=1e-5)
+    assert imp[0] == imp.max()          # x0 is the dominant feature
+
+
+def test_rf_vote_and_bytes():
+    x, y = _data()
+    rf = forest.fit(x, y, num_trees=10, depth=4)
+    votes = forest.predict_votes(rf, x)
+    proba = forest.predict_proba(rf, x)
+    assert votes.shape == (len(y),)
+    assert float(jnp.min(proba)) >= 0 and float(jnp.max(proba)) <= 1
+    # nbytes is linear in the number of trees
+    from repro.trees.growth import take_trees
+    b10 = nbytes(rf.forest)
+    b5 = nbytes(take_trees(rf.forest, jnp.arange(5)))
+    assert b10 == 2 * b5
+
+
+PROP_CASES = cases(4, seed=11, depth=ints(2, 5), nb=ints(8, 64))
+
+
+@for_cases(PROP_CASES)
+def test_grow_tree_properties(depth, nb):
+    x, y = _data(n=300, F=5)
+    edges = binning.fit_bins(x, nb)
+    bins = binning.apply_bins(x, edges)
+    p = jnp.full_like(y, 0.5)
+    w = jnp.ones_like(y)
+    tree = grow_tree(bins, edges, p - y, p * (1 - p), w, depth=depth,
+                     n_bins=nb)
+    assert tree.feature.shape == (2 ** depth - 1,)
+    assert tree.leaf.shape == (2 ** depth,)
+    # features are valid indices or -1
+    f = np.asarray(tree.feature)
+    assert np.all((f >= -1) & (f < 5))
+    # leaf values bounded by the newton step |G|/(H+lam) <= 0.5n/(0.25n)
+    assert float(jnp.max(jnp.abs(tree.leaf))) <= 2.0 + 1e-6
+    # gains non-negative
+    assert float(jnp.min(tree.gain)) >= 0.0
+
+
+def test_rf_excluded_samples_dont_matter():
+    """Zero bootstrap weight = excluded: growing with w=0 for some rows
+    equals growing on the subset."""
+    x, y = _data(n=200, F=4)
+    edges = binning.fit_bins(x, 16)
+    bins = binning.apply_bins(x, edges)
+    p = jnp.full_like(y, 0.5)
+    g, h = p - y, p * (1 - p)
+    w = jnp.asarray((RNG.random(200) > 0.4).astype(np.float32))
+    t1 = grow_tree(bins, edges, g, h, w, depth=3, n_bins=16)
+    keep = np.asarray(w) > 0
+    t2 = grow_tree(bins[keep], edges, g[keep], h[keep],
+                   jnp.ones(int(keep.sum())), depth=3, n_bins=16)
+    np.testing.assert_array_equal(np.asarray(t1.feature),
+                                  np.asarray(t2.feature))
+    np.testing.assert_allclose(np.asarray(t1.leaf), np.asarray(t2.leaf),
+                               atol=1e-5)
