@@ -1,0 +1,45 @@
+"""Federated-engine benchmark: sequential per-pod loop vs the batched
+vmapped client-parallel round, plus a strategy / wire-format sweep.
+
+Each row is ``(name, us_per_round, derived)`` in the harness CSV shape.
+Engine rows time local training only (``round_s`` from ``simulate``,
+first jitted round included), so the vmap speedup is end-to-end honest.
+
+Run standalone:  PYTHONPATH=src python -m benchmarks.fed_engine_bench
+"""
+from __future__ import annotations
+
+from repro.launch.fed_train import simulate
+
+ARCH = "qwen3_4b"
+COMMON = dict(n_pods=4, rounds=3, local_steps=4, batch=2, seq=64,
+              verbose=False, seed=0)
+
+
+def run(arch: str = ARCH) -> list:
+    rows = []
+    for engine in ("sequential", "vmap"):
+        out = simulate(arch, engine=engine, **COMMON)
+        rows.append((f"fed_engine/{engine}",
+                     out["round_s"] / COMMON["rounds"] * 1e6,
+                     f"loss={out['loss_history'][-1]:.3f};"
+                     f"pods={COMMON['n_pods']}"))
+    for strategy in ("fedavg", "fedavg_weighted", "fedavgm", "fedadam"):
+        out = simulate(arch, strategy=strategy, **COMMON)
+        rows.append((f"fed_strategy/{strategy}",
+                     out["round_s"] / COMMON["rounds"] * 1e6,
+                     f"loss={out['loss_history'][-1]:.3f}"))
+    dense_mb = None
+    for wf in ("none", "topk", "int8_sr"):
+        out = simulate(arch, compression=wf, rho=0.05, **COMMON)
+        dense_mb = dense_mb or out["uplink_mb"]
+        rows.append((f"fed_wire/{wf}", 0.0,
+                     f"uplink_mb={out['uplink_mb']:.3f};"
+                     f"vs_dense={dense_mb/max(out['uplink_mb'],1e-9):.1f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_round,derived")
+    for r in run():
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")

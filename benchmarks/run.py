@@ -2,7 +2,8 @@
 benchmarks + roofline readout. Prints ``name,us_per_call,derived`` CSV.
 
 Modes:
-  python -m benchmarks.run             # full: paper tables + kernels + roofline
+  python -m benchmarks.run             # full: paper tables + kernels +
+                                       # roofline + federated engine sweep
   python -m benchmarks.run --quick     # kernels + roofline only (no FL runs)
 """
 from __future__ import annotations
@@ -69,6 +70,10 @@ def main() -> None:
               "no dry-run artifacts; run python -m repro.launch.dryrun")
 
     if not args.quick:
+        from benchmarks import fed_engine_bench
+        for row in fed_engine_bench.run():
+            _emit(*row)
+
         cache = "results/paper/tables.json"
         if os.path.exists(cache):
             with open(cache) as f:

@@ -43,6 +43,15 @@ def main():
               f"R={m['recall']:.3f}  comm={comm.total_mb():.2f}MB "
               f"agg={timer.total_s*1e3:.0f}ms")
 
+    print("\n-- aggregation strategies (registry) on logreg/ROS --")
+    for strat in ["fedavg", "fedavg_weighted", "fedavgm", "fedadam"]:
+        cfg = P.FedParametricConfig(model="logreg", rounds=n_rounds,
+                                    local_steps=40, lr=0.05,
+                                    sampling="ros", strategy=strat)
+        _, _, hist, _ = P.train_federated(clients, cfg, test=test)
+        print(f"  {strat:15s}: F1={hist[-1]['f1']:.3f} "
+              f"R={hist[-1]['recall']:.3f}")
+
     print("\n-- parametric + secure aggregation + DP(eps=0.5) --")
     cfg = P.FedParametricConfig(model="logreg", rounds=n_rounds,
                                 local_steps=40, lr=0.05, sampling="ros",

@@ -1,14 +1,18 @@
 """Federated LM training across pods (hospitals) — the paper's protocols
 applied to the assigned architectures.
 
-Compares three aggregation regimes on non-IID pod data:
-  dense FedAvg | top-k update-subset (Theorem-1 analog) | top-k + sampler
-  sync (fed-SMOTE analog: pods share domain-mixture statistics).
+Compares aggregation regimes on non-IID pod data:
+  dense FedAvg | top-k update-subset (Theorem-1 analog) | int8 stochastic
+  rounding | top-k + sampler sync (fed-SMOTE analog: pods share
+  domain-mixture statistics) — plus any server strategy from the
+  registry via --strategy (fedavg, fedavg_weighted, fedprox, fedavgm,
+  fedadam).
 
 Run:  PYTHONPATH=src python examples/fed_llm_pods.py [--arch qwen3_4b]
 """
 import argparse
 
+from repro.core.strategies import STRATEGIES
 from repro.launch.fed_train import simulate
 
 
@@ -18,11 +22,14 @@ def main():
     ap.add_argument("--pods", type=int, default=3)
     ap.add_argument("--rounds", type=int, default=6)
     ap.add_argument("--local-steps", type=int, default=6)
+    ap.add_argument("--strategy", default="fedavg",
+                    choices=sorted(STRATEGIES))
     args = ap.parse_args()
 
     common = dict(n_pods=args.pods, rounds=args.rounds,
                   local_steps=args.local_steps, batch=2, seq=128,
-                  non_iid_alpha=0.3, verbose=False, seed=0)
+                  non_iid_alpha=0.3, verbose=False, seed=0,
+                  strategy=args.strategy)
 
     print(f"=== {args.arch} (reduced), {args.pods} pods, "
           f"{args.rounds} rounds x {args.local_steps} local steps ===\n")
@@ -35,6 +42,11 @@ def main():
           f"{topk['loss_history'][-1]:.3f}, "
           f"uplink {topk['uplink_mb']:.2f} MB "
           f"({dense['uplink_mb']/topk['uplink_mb']:.1f}x less)")
+    q8 = simulate(args.arch, compression="int8_sr", **common)
+    print(f"int8 stoch. round : loss {q8['loss_history'][0]:.3f} -> "
+          f"{q8['loss_history'][-1]:.3f}, "
+          f"uplink {q8['uplink_mb']:.2f} MB "
+          f"({dense['uplink_mb']/q8['uplink_mb']:.1f}x less)")
     synced = simulate(args.arch, compression="topk", rho=0.05,
                       sync_sampler=True, **common)
     print(f"top-k + sync      : loss {synced['loss_history'][0]:.3f} -> "

@@ -1,20 +1,35 @@
-"""Pytree checkpoints: msgpack + zstd, with structure-validated restore.
+"""Pytree checkpoints: msgpack + zstd (zlib fallback), with
+structure-validated restore.
 
 Arrays are serialized as (dtype, shape, raw bytes); the tree structure is
 round-tripped through flatten-with-path so restore can validate against a
 template (and re-shard: pass ``shardings`` matching the template to place
 leaves on a mesh at load time).
+
+``zstandard`` is an optional dependency: when absent, checkpoints are
+framed with a ``RPZL`` magic prefix + zlib payload instead of a raw zstd
+frame.  Load sniffs the leading bytes, so either framing restores on any
+machine that can decompress it (zstd checkpoints still require
+``zstandard`` at load time).
 """
 from __future__ import annotations
 
 import os
+import zlib
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:          # optional dep — fall back to zlib framing
+    zstandard = None
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"   # standard zstd frame header
+_ZLIB_MAGIC = b"RPZL"               # our zlib-fallback frame header
 
 
 def _key_str(path) -> str:
@@ -32,7 +47,10 @@ def save_pytree(path: str, tree: Any, *, level: int = 3) -> int:
             "data": arr.tobytes(),
         }
     raw = msgpack.packb(payload, use_bin_type=True)
-    comp = zstandard.ZstdCompressor(level=level).compress(raw)
+    if zstandard is not None:
+        comp = zstandard.ZstdCompressor(level=level).compress(raw)
+    else:
+        comp = _ZLIB_MAGIC + zlib.compress(raw, min(level, 9))
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     with open(path, "wb") as f:
         f.write(comp)
@@ -42,7 +60,17 @@ def save_pytree(path: str, tree: Any, *, level: int = 3) -> int:
 def load_pytree(path: str, template: Any,
                 shardings: Optional[Any] = None) -> Any:
     with open(path, "rb") as f:
-        raw = zstandard.ZstdDecompressor().decompress(f.read())
+        comp = f.read()
+    if comp.startswith(_ZLIB_MAGIC):
+        raw = zlib.decompress(comp[len(_ZLIB_MAGIC):])
+    elif comp.startswith(_ZSTD_MAGIC):
+        if zstandard is None:
+            raise ImportError(
+                f"{path} is a zstd checkpoint but 'zstandard' is not "
+                "installed; install it or re-save with the zlib fallback")
+        raw = zstandard.ZstdDecompressor().decompress(comp)
+    else:
+        raise ValueError(f"{path}: unrecognized checkpoint framing")
     payload = msgpack.unpackb(raw, raw=False)
     flat, treedef = jax.tree_util.tree_flatten_with_path(template)
     shard_flat = (jax.tree.leaves(shardings) if shardings is not None

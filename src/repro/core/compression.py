@@ -7,14 +7,20 @@ models the analogous structured subset of a model *delta* is:
   accumulation (keeps the bias bounded the way |ΔF1|<=0.03 bounds C2);
 * ``lowrank`` — rank-r sketch of every 2-D delta (the analog of C3's
   "train a small model on the top-p important directions");
-* ``int8``    — per-tensor affine quantization.
+* ``int8``    — per-tensor affine quantization (round-to-nearest);
+* ``int8_sr`` — per-tensor int8 with *stochastic rounding*: unbiased
+  (E[dequant] == input), so quantization error averages out across
+  clients/rounds instead of accumulating.
 
-``compressed_bytes`` gives exact wire size for the comm ledger.
+Every format reports its exact wire size so the ``CommLog`` ledger (and
+the 3.2x-style claims) stay measured, never asserted.  Engines select a
+format by name through :data:`WIRE_FORMATS` / :func:`compress_update`,
+which normalizes all formats to one stateful interface.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -79,7 +85,10 @@ def lowrank_compress(delta, rank: int):
 
 
 def int8_compress(delta):
-    """Per-tensor affine int8 quant/dequant. Returns (approx, bytes)."""
+    """Per-tensor affine int8 quant/dequant (round-to-nearest).
+
+    delta: pytree of float arrays.  Returns (approx, wire_bytes) where
+    wire_bytes = 1 byte/element + 4 bytes/tensor for the fp32 scale."""
     def one(x):
         amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
         scale = amax / 127.0
@@ -95,6 +104,93 @@ def int8_compress(delta):
     return jax.tree.unflatten(treedef, outs), int(nb)
 
 
+def int8_sr_compress(delta, seed: int = 0):
+    """Per-tensor int8 quantization with *stochastic rounding*.
+
+    ``x/scale`` is rounded to ``floor(x/scale) + Bernoulli(frac)`` so the
+    dequantized value is unbiased: ``E[q * scale] == x`` exactly (the
+    round-to-nearest variant has a deterministic bias up to scale/2 per
+    element).  Per-element max error stays < 1 quantization step
+    (amax/127).
+
+    delta: pytree of float arrays; seed: int controlling the rounding
+    draws (engines should vary it per round/client).  Returns
+    (approx, wire_bytes); wire bytes match :func:`int8_compress`
+    (1 byte/element + 4 bytes/tensor scale)."""
+    key = jax.random.PRNGKey(seed)
+
+    def one(x, k):
+        amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
+        scale = amax / 127.0
+        scaled = x / scale
+        lo = jnp.floor(scaled)
+        frac = scaled - lo
+        up = jax.random.uniform(k, x.shape) < frac
+        q = jnp.clip(lo + up.astype(x.dtype), -127, 127).astype(jnp.int8)
+        return (q.astype(x.dtype) * scale).astype(x.dtype), x.size + 4
+
+    leaves, treedef = jax.tree.flatten(delta)
+    outs, nb = [], 0
+    for i, x in enumerate(leaves):
+        a, b = one(x, jax.random.fold_in(key, i))
+        outs.append(a)
+        nb += b
+    return jax.tree.unflatten(treedef, outs), int(nb)
+
+
 def dense_bytes(tree) -> int:
+    """Exact uncompressed wire size of a pytree, in bytes."""
     return int(sum(np.asarray(x).size * np.asarray(x).dtype.itemsize
                    for x in jax.tree.leaves(tree)))
+
+
+# --- wire-format registry -----------------------------------------------------
+
+def _wf_none(delta, state, *, rho, rank, seed):
+    return delta, state, dense_bytes(delta)
+
+
+def _wf_topk(delta, state, *, rho, rank, seed):
+    return topk_compress(delta, rho, state)
+
+
+def _wf_lowrank(delta, state, *, rho, rank, seed):
+    approx, nb = lowrank_compress(delta, rank)
+    return approx, state, nb
+
+
+def _wf_int8(delta, state, *, rho, rank, seed):
+    approx, nb = int8_compress(delta)
+    return approx, state, nb
+
+
+def _wf_int8_sr(delta, state, *, rho, rank, seed):
+    approx, nb = int8_sr_compress(delta, seed)
+    return approx, state, nb
+
+
+#: name -> fn(delta, state, *, rho, rank, seed) -> (approx, state', bytes).
+#: ``state`` is per-client (error-feedback residuals for topk; None
+#: elsewhere) and must be threaded round-to-round by the engine.
+WIRE_FORMATS: Dict[str, Callable] = {
+    "none": _wf_none,
+    "topk": _wf_topk,
+    "lowrank": _wf_lowrank,
+    "int8": _wf_int8,
+    "int8_sr": _wf_int8_sr,
+}
+
+
+def compress_update(name: str, delta, state=None, *, rho: float = 0.05,
+                    rank: int = 8, seed: int = 0
+                    ) -> Tuple[Any, Any, int]:
+    """Apply wire format ``name`` to one client's update pytree.
+
+    Returns (approx_delta, new_state, wire_bytes).  ``wire_bytes`` is
+    what the ``CommLog`` ledger should record for the uplink; the
+    returned delta is the dense dequantized/densified representation the
+    server aggregates.  Raises KeyError listing valid formats."""
+    if name not in WIRE_FORMATS:
+        raise KeyError(f"unknown wire format {name!r}; "
+                       f"available: {sorted(WIRE_FORMATS)}")
+    return WIRE_FORMATS[name](delta, state, rho=rho, rank=rank, seed=seed)

@@ -38,6 +38,8 @@ class FedXGBConfig:
     n_bins: int = 64
     learning_rate: float = 0.3
     sampling: str = "none"
+    hist_impl: str = "auto"      # histogram kernel routing: auto | pallas
+    # | pallas_interpret | xla (see repro.kernels.hist.ops)
     seed: int = 0
 
     @property
@@ -67,7 +69,8 @@ def train_federated_xgb_fe(clients: Sequence[Tuple[np.ndarray, np.ndarray]],
         xs, ys = jnp.asarray(xs), jnp.asarray(ys)
         local = gbdt.fit(xs, ys, num_rounds=cfg.num_rounds, depth=cfg.depth,
                          n_bins=cfg.n_bins,
-                         learning_rate=cfg.learning_rate)
+                         learning_rate=cfg.learning_rate,
+                         hist_impl=cfg.hist_impl)
         phi = np.asarray(gbdt.feature_importance(local))
         top = np.argsort(-phi)[:cfg.top_features]
         mask = np.zeros(x.shape[1], np.float32)
@@ -75,7 +78,8 @@ def train_federated_xgb_fe(clients: Sequence[Tuple[np.ndarray, np.ndarray]],
         shallow = gbdt.fit(xs, ys, num_rounds=cfg.shallow_rounds_,
                            depth=cfg.shallow_depth, n_bins=cfg.n_bins,
                            learning_rate=cfg.learning_rate,
-                           feature_mask=jnp.asarray(mask))
+                           feature_mask=jnp.asarray(mask),
+                           hist_impl=cfg.hist_impl)
         comm.log(0, f"c{i}", "up",
                  nbytes(shallow.forest) + 4 + 4 * len(top), "shallow-gbdt")
         trees.append(shallow)
@@ -127,7 +131,8 @@ def train_federated_xgb(clients, cfg: FedXGBConfig, fed_stats=None):
         local = gbdt.fit(jnp.asarray(xs), jnp.asarray(ys),
                          num_rounds=cfg.num_rounds, depth=cfg.depth,
                          n_bins=cfg.n_bins,
-                         learning_rate=cfg.learning_rate)
+                         learning_rate=cfg.learning_rate,
+                         hist_impl=cfg.hist_impl)
         comm.log(0, f"c{i}", "up", nbytes(local.forest), "gbdt")
         models.append(local)
         weights.append(sizes[i] / total)

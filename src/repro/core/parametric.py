@@ -14,6 +14,7 @@ import numpy as np
 from repro.core import privacy
 from repro.core.comm import CommLog, Timer, pytree_bytes
 from repro.core.metrics import binary_metrics
+from repro.core.strategies import get_strategy
 from repro.data import sampling as S
 from repro.models import tabular
 from repro.optim import adam, fedprox_grad
@@ -26,7 +27,9 @@ class FedParametricConfig:
     local_steps: int = 40
     lr: float = 0.05
     sampling: str = "none"           # none | ros | rus | smote | fed_smote
-    fedprox_mu: float = 0.0          # >0 -> FedProx (paper: NN)
+    strategy: str = "fedavg"         # repro.core.strategies.STRATEGIES name
+    fedprox_mu: float = 0.0          # >0 -> FedProx (paper: NN); overrides
+    # the strategy's client_mu when set
     secure_agg: bool = False
     dp_epsilon: float = 0.0          # >0 -> DP noise on the aggregate
     dp_delta: float = 1e-5
@@ -81,17 +84,31 @@ def _fed_sampling(clients, strategy, seed, comm: CommLog, round_idx=0):
 def train_federated(clients: Sequence[Tuple[np.ndarray, np.ndarray]],
                     cfg: FedParametricConfig,
                     test: Optional[Tuple[np.ndarray, np.ndarray]] = None):
-    """Returns (global_params, comm: CommLog, history, agg_timer)."""
+    """Federated training of one tabular model.
+
+    Aggregation follows ``cfg.strategy`` (see
+    ``repro.core.strategies.STRATEGIES``).  Weighted strategies fold the
+    normalized client weight into each update *before* secure-agg
+    masking, so the masked sum still cancels; server-side optimizers
+    (FedAvgM/FedAdam) act on the averaged — and, under DP, noised —
+    update.  DP noise sensitivity is ``dp_clip * max(weight)``, which
+    reduces to the classic ``dp_clip / n_clients`` for uniform weights.
+
+    Returns (global_params, comm: CommLog, history, agg_timer)."""
     comm = CommLog()
     timer = Timer()
     spec = tabular.MODELS[cfg.model]
+    strat = get_strategy(cfg.strategy)
+    mu = cfg.fedprox_mu if cfg.fedprox_mu > 0 else strat.client_mu
     clients = [(_prep(cfg.model, x), y) for x, y in clients]
     if test is not None:
         test = (_prep(cfg.model, test[0]), test[1])
     clients, _ = _fed_sampling(clients, cfg.sampling, cfg.seed, comm)
+    ws = strat.norm_weights([len(y) for _, y in clients])
     n_feat = clients[0][0].shape[1]
     rng = jax.random.PRNGKey(cfg.seed)
     global_params = spec["init"](rng, n_feat)
+    server_state = strat.init_state(global_params)
     history = []
     for r in range(cfg.rounds):
         updates = []
@@ -100,11 +117,14 @@ def train_federated(clients: Sequence[Tuple[np.ndarray, np.ndarray]],
                      "model")
             local = _local_train(cfg.model, global_params, x, y,
                                  cfg.local_steps, cfg.lr,
-                                 global_params=global_params,
-                                 mu=cfg.fedprox_mu)
+                                 global_params=global_params, mu=mu)
             update = jax.tree.map(lambda a, b: a - b, local, global_params)
             if cfg.dp_epsilon > 0:
                 update, _ = privacy.clip_update(update, cfg.dp_clip)
+            if strat.weighted:  # fold weight in pre-masking (sum of
+                # masked, weighted updates == weighted sum)
+                w = ws[i] * len(clients)
+                update = jax.tree.map(lambda t: t * w, update)
             if cfg.secure_agg:
                 update = privacy.mask_update(update, i, len(clients),
                                              cfg.seed * 7919 + r)
@@ -116,7 +136,9 @@ def train_federated(clients: Sequence[Tuple[np.ndarray, np.ndarray]],
             if cfg.dp_epsilon > 0:
                 mean_update = privacy.add_dp_noise(
                     mean_update, cfg.dp_epsilon, cfg.dp_delta,
-                    cfg.dp_clip / len(clients), cfg.seed * 31 + r)
+                    cfg.dp_clip * max(ws), cfg.seed * 31 + r)
+            mean_update, server_state = strat.server_update(server_state,
+                                                            mean_update)
             global_params = jax.tree.map(lambda g, u: g + u, global_params,
                                          mean_update)
         if test is not None:

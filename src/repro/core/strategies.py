@@ -1,0 +1,148 @@
+"""Server aggregation strategies — a registry so federated engines pick
+aggregation by name, not by code.
+
+A :class:`Strategy` splits a federated round's server side into two
+halves that compose with secure aggregation and DP:
+
+* ``combine(deltas, sizes)`` — weighted mean of client update pytrees
+  (uniform for plain FedAvg, |D_i|-proportional for the weighted
+  variants).  Runs *before* DP noise is added.
+* ``server_update(state, avg)`` — the server-side optimizer applied to
+  the (possibly noised) average delta: identity for FedAvg/FedProx,
+  heavy-ball momentum for FedAvgM, Adam for FedAdam (Reddi et al. 2021,
+  "Adaptive Federated Optimization").
+
+``client_mu > 0`` marks a strategy as FedProx: engines add the proximal
+gradient ``mu * (theta - theta_global)`` during *local* training; the
+server side is identical to FedAvg.
+
+All pytrees share the structure of the model params; deltas and the
+returned update are in parameter units (the engine applies
+``params + update``).  Use :func:`get_strategy` to resolve a name from
+:data:`STRATEGIES`, optionally overriding hyperparameters::
+
+    strat = get_strategy("fedadam", server_lr=0.05)
+    state = strat.init_state(global_params)
+    update, state = strat.aggregate(state, deltas, sizes)
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Strategy:
+    """One server aggregation rule. Frozen — override via ``replace``.
+
+    Attributes:
+      name: registry key.
+      client_mu: FedProx proximal coefficient; >0 means engines must add
+        ``mu * (theta - theta_global)`` to local gradients.
+      weighted: weight client deltas by sample count instead of uniformly.
+      server_lr: scale applied to the server-side update (eta in FedOpt).
+      momentum: heavy-ball coefficient for FedAvgM (0 disables).
+      adam: use server-side Adam (FedAdam); overrides ``momentum``.
+      beta1/beta2/eps: FedAdam moment coefficients / stability term
+        (eps is Reddi et al.'s tau, in delta units).
+    """
+    name: str
+    client_mu: float = 0.0
+    weighted: bool = False
+    server_lr: float = 1.0
+    momentum: float = 0.0
+    adam: bool = False
+    beta1: float = 0.9
+    beta2: float = 0.99
+    eps: float = 1e-3
+
+    # -- state ------------------------------------------------------------
+
+    def init_state(self, global_params) -> Optional[Dict[str, Any]]:
+        """Server optimizer state: None for stateless strategies, else a
+        dict of pytrees shaped like ``global_params`` (all zeros)."""
+        if self.adam:
+            z = jax.tree.map(jnp.zeros_like, global_params)
+            return {"m": z, "v": jax.tree.map(jnp.zeros_like, global_params)}
+        if self.momentum > 0:
+            return {"m": jax.tree.map(jnp.zeros_like, global_params)}
+        return None
+
+    # -- round halves -----------------------------------------------------
+
+    def norm_weights(self, sizes: Sequence[float]) -> List[float]:
+        """Per-client combine weights, summing to 1.
+
+        sizes: per-client sample counts (any consistent unit)."""
+        n = len(sizes)
+        if not self.weighted:
+            return [1.0 / n] * n
+        total = float(sum(sizes))
+        if total <= 0:
+            return [1.0 / n] * n
+        return [float(s) / total for s in sizes]
+
+    def combine(self, deltas: Sequence[Any], sizes: Sequence[float]):
+        """Weighted mean of client delta pytrees (parameter units)."""
+        if len(deltas) == 0:
+            raise ValueError("combine() needs at least one client delta")
+        ws = self.norm_weights(sizes)
+        return jax.tree.map(
+            lambda *xs: sum(w * x for w, x in zip(ws, xs)), *deltas)
+
+    def server_update(self, state, avg) -> Tuple[Any, Optional[Dict]]:
+        """Map the averaged delta through the server optimizer.
+
+        Returns (update, new_state); update is what the engine adds to
+        the global params."""
+        if self.adam:
+            m = jax.tree.map(lambda m, g: self.beta1 * m
+                             + (1 - self.beta1) * g, state["m"], avg)
+            v = jax.tree.map(lambda v, g: self.beta2 * v
+                             + (1 - self.beta2) * g * g, state["v"], avg)
+            upd = jax.tree.map(
+                lambda m, v: self.server_lr * m / (jnp.sqrt(v) + self.eps),
+                m, v)
+            return upd, {"m": m, "v": v}
+        if self.momentum > 0:
+            m = jax.tree.map(lambda m, g: self.momentum * m + g,
+                             state["m"], avg)
+            return jax.tree.map(lambda m: self.server_lr * m, m), {"m": m}
+        return jax.tree.map(lambda g: self.server_lr * g, avg), state
+
+    def aggregate(self, state, deltas: Sequence[Any],
+                  sizes: Sequence[float]) -> Tuple[Any, Optional[Dict]]:
+        """combine + server_update in one call (no secure-agg / DP path).
+
+        Returns (update, new_state)."""
+        return self.server_update(state, self.combine(deltas, sizes))
+
+
+STRATEGIES: Dict[str, Strategy] = {
+    "fedavg": Strategy("fedavg"),
+    "fedavg_weighted": Strategy("fedavg_weighted", weighted=True),
+    "fedprox": Strategy("fedprox", client_mu=0.01),
+    "fedavgm": Strategy("fedavgm", momentum=0.9),
+    "fedadam": Strategy("fedadam", adam=True, server_lr=0.1),
+}
+
+
+def register(strategy: Strategy) -> Strategy:
+    """Add a strategy to the registry (name collision overwrites)."""
+    STRATEGIES[strategy.name] = strategy
+    return strategy
+
+
+def get_strategy(name: str, **overrides) -> Strategy:
+    """Resolve a strategy by name; kwargs override hyperparameters.
+
+    Raises KeyError listing valid names for an unknown strategy."""
+    if name not in STRATEGIES:
+        raise KeyError(f"unknown strategy {name!r}; "
+                       f"available: {sorted(STRATEGIES)}")
+    s = STRATEGIES[name]
+    return dataclasses.replace(s, **overrides) if overrides else s

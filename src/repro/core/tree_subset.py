@@ -32,6 +32,8 @@ class FedForestConfig:
     n_bins: int = 64
     sampling: str = "none"
     feature_frac: float = 0.8
+    hist_impl: str = "auto"           # histogram kernel routing: auto |
+    # pallas | pallas_interpret | xla (see repro.kernels.hist.ops)
     seed: int = 0
 
 
@@ -65,6 +67,7 @@ def train_federated_rf(clients: Sequence[Tuple[np.ndarray, np.ndarray]],
                        num_trees=cfg.trees_per_client, depth=cfg.depth,
                        n_bins=cfg.n_bins,
                        feature_frac=cfg.feature_frac,
+                       hist_impl=cfg.hist_impl,
                        rng=jax.random.PRNGKey(cfg.seed + 17 * i))
         sel, _ = _select(local.forest, xs, ys, s, cfg.selection,
                          cfg.seed + i)

@@ -40,7 +40,26 @@ def _hist_kernel(bins_ref, gh_ref, o_ref, *, n_bins: int, block_f: int,
 
 def hist_pallas(bins, grad, hess, n_bins: int, *, block_n: int = 1024,
                 block_f: int = 8, interpret: bool = False):
-    """bins (n, F) int32 in [0, n_bins); grad/hess (n,) -> (F, n_bins, 2)."""
+    """Pallas gradient/hessian histogram.
+
+    Usage contract:
+      * bins (n, F) int32 with values in [0, n_bins); out-of-range bins
+        contribute nothing (the one-hot comparison never matches).
+      * grad / hess (n,) float; cast to f32 inside the kernel.
+      * Inputs are zero-padded up to block multiples: padded samples
+        carry grad = hess = 0 (bin 0 receives zero mass — no effect) and
+        padded feature columns are sliced off the output, so padding is
+        invisible to callers.
+      * The (block_n, block_f, n_bins) one-hot lives in VMEM: keep
+        block_n * block_f * n_bins * 4B within the VMEM budget (shrink
+        block_f for wide level-combined histograms).
+      * interpret=True runs the same kernel in the Pallas interpreter —
+        the CPU fallback used when no TPU/GPU is present (see
+        ``repro.kernels.hist.ops.gradient_histogram``).
+
+    Returns (F, n_bins, 2) float32: grad sums in [..., 0], hess sums in
+    [..., 1].
+    """
     n, F = bins.shape
     block_n = min(block_n, max(n, 1))
     block_f = min(block_f, F)

@@ -8,9 +8,29 @@ from repro.kernels.hist.ref import hist_ref
 
 
 def gradient_histogram(bins, grad, hess, n_bins: int, *, impl: str = "auto"):
+    """Per-feature gradient/hessian histogram (the tree-growth hot path).
+
+    Args:
+      bins: (n, F) int32, values in [0, n_bins); out-of-range bins are
+        silently dropped (the one-hot match never fires).
+      grad/hess: (n,) float, per-sample first/second-order gradients.
+      n_bins: histogram width (tree growth passes n_nodes * n_bins to
+        histogram a whole level in one call).
+      impl: "auto" routes to the Pallas TPU kernel on accelerators and
+        the XLA segment-sum reference on CPU.  "pallas" forces the
+        kernel; on CPU it degrades to ``interpret=True`` (the Pallas
+        interpreter — same kernel program, no Mosaic compile) instead of
+        failing, so the federated tree pipelines run the identical code
+        path everywhere.  "pallas_interpret" forces interpreter mode;
+        "xla" forces the reference.
+
+    Returns (F, n_bins, 2) float32: [..., 0] = sum of grad, [..., 1] =
+    sum of hess per (feature, bin).
+    """
     if impl == "auto":
         impl = "pallas" if jax.default_backend() != "cpu" else "xla"
     if impl in ("pallas", "pallas_interpret"):
-        return hist_pallas(bins, grad, hess, n_bins,
-                           interpret=(impl == "pallas_interpret"))
+        interpret = (impl == "pallas_interpret"
+                     or jax.default_backend() == "cpu")
+        return hist_pallas(bins, grad, hess, n_bins, interpret=interpret)
     return hist_ref(bins, grad, hess, n_bins)

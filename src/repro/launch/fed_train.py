@@ -1,24 +1,31 @@
 """Federated LM training — the paper's aggregation protocols at pod scale.
 
 Pods = hospitals (DESIGN.md): each pod runs H local steps on its own
-(non-IID) data mixture, then a cross-pod FedAvg round.  The paper's
-tree-subset sampling generalizes to update-subset sampling: only a top-k
-(density rho) magnitude subset of each pod's delta crosses the pod axis,
-with error-feedback residuals (``repro.core.compression``).
+(non-IID) data mixture, then a cross-pod aggregation round.  The paper's
+tree-subset sampling generalizes to update-subset sampling: only a
+compressed wire format of each pod's delta crosses the pod axis
+(``repro.core.compression.WIRE_FORMATS``), and the server applies a
+named aggregation rule (``repro.core.strategies.STRATEGIES``).
 
 Two entry points:
   * ``simulate`` — runnable federated training of a reduced arch on CPU:
-    N virtual pods, real FedAvg/FedProx + compression + comm ledger.
+    N virtual pods, vmapped client-parallel local training, strategy
+    registry aggregation, wire-format compression, full comm ledger.
   * ``build_fed_round`` — the multi-pod dry-run artifact: params carry a
     leading pod dimension sharded over the 'pod' mesh axis; the local step
     is vmapped over it and the aggregation mean is a real cross-pod
     collective in the lowered HLO.
+
+The round engine is batched end-to-end: client params are stacked with a
+leading ``(n_pods, ...)`` axis, local steps run as a ``jax.lax.scan``
+inside ``jax.vmap`` over that axis, and one jitted call advances every
+pod.  ``engine="sequential"`` keeps the per-pod Python loop as a
+reference implementation (the parity test in ``tests/test_fed_engine.py``
+checks both paths agree on losses and final params).
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import time
 from typing import Dict, List, Optional
 
 import jax
@@ -27,8 +34,9 @@ import numpy as np
 
 from repro.configs import registry as R
 from repro.configs.base import RunConfig, ShapeConfig
-from repro.core.comm import CommLog, pytree_bytes
-from repro.core.compression import TopKState, dense_bytes, topk_compress
+from repro.core.comm import CommLog, Timer, pytree_bytes
+from repro.core.compression import WIRE_FORMATS, compress_update
+from repro.core.strategies import STRATEGIES, get_strategy
 from repro.data.pipeline import (CorpusConfig, SyntheticCorpus, lm_batches,
                                  pod_mixtures, sync_mixtures)
 from repro.launch.steps import build_train_step, make_ctx, opt_defs
@@ -36,21 +44,102 @@ from repro.models import api
 from repro.models.params import init_tree
 
 
+# --- batched client-parallel engine -------------------------------------------
+
+def _stack_round_batches(iters, local_steps: int) -> Dict[str, jnp.ndarray]:
+    """Prefetch one round of batches from every pod's iterator.
+
+    Returns a dict of arrays with leading ``(n_pods, local_steps)`` axes
+    (e.g. tokens ``(n_pods, local_steps, batch, seq)`` int32).  Both
+    engines consume these same arrays, so data order is identical."""
+    per_pod = []
+    for it in iters:
+        steps = [next(it) for _ in range(local_steps)]
+        per_pod.append({k: np.stack([s[k] for s in steps])
+                        for k in steps[0]})
+    return {k: jnp.asarray(np.stack([p[k] for p in per_pod]))
+            for k in per_pod[0]}
+
+
+def _build_parallel_round(step_fn, n_pods: int):
+    """One jitted call = one federated round of local training, all pods.
+
+    ``step_fn(params, opt, batch, ref) -> (params, opt, metrics)`` is the
+    single-pod train step; the returned ``round_fn(global_params,
+    stacked_opt, stacked_batches)`` broadcasts the global params to a
+    leading ``(n_pods, ...)`` axis, scans ``local_steps`` steps per pod
+    under ``jax.vmap``, and returns ``(deltas, losses)`` with shapes
+    ``(n_pods, *param)`` / ``(n_pods, local_steps)``."""
+    def local(params, opt_state, batches, ref):
+        def body(carry, b):
+            p, o = carry
+            p, o, m = step_fn(p, o, b, ref)
+            return (p, o), m["loss"]
+        (params, _), losses = jax.lax.scan(body, (params, opt_state),
+                                           batches)
+        return params, losses
+
+    def round_fn(global_params, stacked_opt, stacked_batches):
+        pod_params = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n_pods,) + x.shape),
+            global_params)
+        new_p, losses = jax.vmap(local, in_axes=(0, 0, 0, None))(
+            pod_params, stacked_opt, stacked_batches, global_params)
+        deltas = jax.tree.map(lambda n, g: n - g[None], new_p,
+                              global_params)
+        return deltas, losses
+
+    return jax.jit(round_fn)
+
+
+def _pod_slice(tree, i: int):
+    """Select pod ``i`` from a pytree with a leading pod axis."""
+    return jax.tree.map(lambda x: x[i], tree)
+
+
 # --- runnable simulation (CPU, reduced configs) -------------------------------
 
 def simulate(arch: str, *, n_pods: int = 3, rounds: int = 10,
              local_steps: int = 10, batch: int = 4, seq: int = 128,
              lr: float = 1e-3, compression: str = "none",
-             rho: float = 0.05, non_iid_alpha: float = 0.5,
+             rho: float = 0.05, rank: int = 8,
+             non_iid_alpha: float = 0.5,
              sync_sampler: bool = False, seed: int = 0,
-             run: Optional[RunConfig] = None, verbose: bool = True):
-    """Returns dict with loss history and comm ledger (dense vs shipped)."""
+             run: Optional[RunConfig] = None, verbose: bool = True,
+             strategy: str = "fedavg", engine: str = "vmap"):
+    """Federated training of the reduced ``arch`` across virtual pods.
+
+    Args:
+      arch: architecture id from ``repro.configs.registry``.
+      n_pods/rounds/local_steps/batch/seq: federation shape; every local
+        step consumes a ``(batch, seq)`` int32 token batch.
+      lr: local Adam learning rate.
+      compression: wire format name from ``WIRE_FORMATS``
+        ("none" | "topk" | "lowrank" | "int8" | "int8_sr").
+      rho: top-k density (fraction of delta entries kept).
+      rank: lowrank sketch rank (2-D leaves only).
+      strategy: aggregation rule name from ``STRATEGIES`` ("fedavg" |
+        "fedavg_weighted" | "fedprox" | "fedavgm" | "fedadam").
+      engine: "vmap" (default; batched client-parallel, one jitted call
+        per round) or "sequential" (reference per-pod Python loop).
+      non_iid_alpha: Dirichlet concentration of per-pod domain mixtures.
+      sync_sampler: synchronize pod samplers (fed-SMOTE analog).
+
+    Returns a dict with ``loss_history`` (per-round mean loss),
+    ``comm`` (CommLog, exact bytes up/down per pod per round),
+    ``uplink_mb``, ``final_params``, and ``round_s`` (engine wall time).
+    """
+    if engine not in ("vmap", "sequential"):
+        raise ValueError(f"unknown engine {engine!r}; "
+                         "use 'vmap' or 'sequential'")
     cfg = R.get_smoke(arch)
     run = run or RunConfig()
     ctx = make_ctx(None, "train")
+    strat = get_strategy(strategy)
     rng = jax.random.PRNGKey(seed)
     global_params = init_tree(rng, api.param_defs(cfg))
-    step_fn = jax.jit(build_train_step(cfg, run, ctx, lr=lr))
+    step_fn = build_train_step(cfg, run, ctx, lr=lr,
+                               prox_mu=strat.client_mu)
     odefs = opt_defs(api.param_defs(cfg))
 
     corpus = SyntheticCorpus(CorpusConfig(vocab_size=cfg.vocab_size,
@@ -63,40 +152,71 @@ def simulate(arch: str, *, n_pods: int = 3, rounds: int = 10,
     iters = [lm_batches(corpus, batch, seq, mixture=mixtures[i],
                         seed=seed + i) for i in range(n_pods)]
 
+    if engine == "vmap":
+        round_fn = _build_parallel_round(step_fn, n_pods)
+    else:
+        step_jit = jax.jit(step_fn)
+
     comm = CommLog()
-    ef_states: List[Optional[TopKState]] = [None] * n_pods
+    timer = Timer()
+    ef_states: List[Optional[object]] = [None] * n_pods
+    server_state = strat.init_state(global_params)
+    sizes = [local_steps * batch * seq] * n_pods  # tokens seen per round
     history = []
     for r in range(rounds):
-        deltas = []
-        round_losses = []
+        batches = _stack_round_batches(iters, local_steps)
+        opt_states = [init_tree(jax.random.fold_in(rng, r * 100 + i),
+                                odefs)  # fresh local opt each round
+                      for i in range(n_pods)]
         for i in range(n_pods):
-            params = global_params
-            opt_state = init_tree(jax.random.fold_in(rng, r * 100 + i),
-                                  odefs)  # fresh local opt (FedAvg)
             comm.log(r, f"pod{i}", "down", pytree_bytes(global_params),
                      "model")
-            for s in range(local_steps):
-                b = {k: jnp.asarray(v) for k, v in next(iters[i]).items()}
-                params, opt_state, metrics = step_fn(params, opt_state, b)
-                round_losses.append(float(metrics["loss"]))
-            delta = jax.tree.map(lambda a, b: a - b, params, global_params)
-            if compression == "topk":
-                delta, ef_states[i], wire = topk_compress(delta, rho,
-                                                          ef_states[i])
+
+        with timer:
+            if engine == "vmap":
+                stacked_opt = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                           *opt_states)
+                deltas, losses = round_fn(global_params, stacked_opt,
+                                          batches)
+                pod_deltas = [_pod_slice(deltas, i) for i in range(n_pods)]
             else:
-                wire = dense_bytes(delta)
+                pod_deltas, loss_rows = [], []
+                for i in range(n_pods):
+                    params, opt_state = global_params, opt_states[i]
+                    row = []
+                    for s in range(local_steps):
+                        b = {k: v[i, s] for k, v in batches.items()}
+                        params, opt_state, metrics = step_jit(
+                            params, opt_state, b, global_params)
+                        row.append(metrics["loss"])
+                    pod_deltas.append(jax.tree.map(
+                        lambda a, b: a - b, params, global_params))
+                    loss_rows.append(jnp.stack(row))
+                losses = jnp.stack(loss_rows)
+            # JAX dispatch is async: force completion so round_s times
+            # the training compute, not the enqueue
+            jax.block_until_ready((pod_deltas, losses))
+
+        shipped = []
+        for i in range(n_pods):
+            d, ef_states[i], wire = compress_update(
+                compression, pod_deltas[i], ef_states[i], rho=rho,
+                rank=rank, seed=seed * 100003 + r * 1000 + i)
             comm.log(r, f"pod{i}", "up", wire, "delta")
-            deltas.append(delta)
-        mean_delta = jax.tree.map(lambda *xs: sum(xs) / len(xs), *deltas)
-        global_params = jax.tree.map(lambda g, d: g + d, global_params,
-                                     mean_delta)
-        history.append(float(np.mean(round_losses)))
+            shipped.append(d)
+        update, server_state = strat.aggregate(server_state, shipped,
+                                               sizes)
+        global_params = jax.tree.map(lambda g, u: g + u, global_params,
+                                     update)
+        history.append(float(jnp.mean(losses)))
         if verbose:
             print(f"  round {r+1}/{rounds}: loss {history[-1]:.4f} "
                   f"(uplink so far {comm.total_mb('up'):.2f} MB)")
     return {"loss_history": history, "comm": comm,
             "uplink_mb": comm.total_mb("up"),
-            "final_params": global_params}
+            "final_params": global_params,
+            "strategy": strat.name, "engine": engine,
+            "round_s": timer.total_s}
 
 
 # --- multi-pod dry-run artifact -----------------------------------------------
@@ -141,16 +261,26 @@ def main():
     ap.add_argument("--rounds", type=int, default=5)
     ap.add_argument("--local-steps", type=int, default=5)
     ap.add_argument("--compression", default="none",
-                    choices=["none", "topk"])
+                    choices=sorted(WIRE_FORMATS))
     ap.add_argument("--rho", type=float, default=0.05)
+    ap.add_argument("--rank", type=int, default=8,
+                    help="lowrank wire-format sketch rank")
+    ap.add_argument("--strategy", default="fedavg",
+                    choices=sorted(STRATEGIES))
+    ap.add_argument("--engine", default="vmap",
+                    choices=["vmap", "sequential"])
     ap.add_argument("--sync-sampler", action="store_true")
     args = ap.parse_args()
     out = simulate(args.arch, n_pods=args.pods, rounds=args.rounds,
                    local_steps=args.local_steps,
                    compression=args.compression, rho=args.rho,
+                   rank=args.rank,
+                   strategy=args.strategy, engine=args.engine,
                    sync_sampler=args.sync_sampler)
     print(f"final round loss {out['loss_history'][-1]:.4f}, "
-          f"uplink {out['uplink_mb']:.2f} MB")
+          f"uplink {out['uplink_mb']:.2f} MB, "
+          f"{out['round_s']:.2f}s in local training "
+          f"({args.engine} engine, {args.strategy})")
 
 
 if __name__ == "__main__":

@@ -16,7 +16,7 @@ from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
 from repro.models import api
 from repro.models.params import (ParamDef, abstract_tree, init_tree, is_def,
                                  pdef, spec_tree)
-from repro.optim import adamw
+from repro.optim import adamw, fedprox_grad
 from repro.optim.optimizers import OptState
 from repro.sharding.rules import (DECODE_RULES, LONG_DECODE_RULES,
                                   TRAIN_RULES, Rules, ShardingCtx)
@@ -72,15 +72,23 @@ def opt_defs(param_defs_tree):
 # --- step functions -----------------------------------------------------------
 
 def build_train_step(cfg: ModelConfig, run: RunConfig, ctx: ShardingCtx,
-                     lr: float = 3e-4):
+                     lr: float = 3e-4, prox_mu: float = 0.0):
+    """Build the jit-able train step.
+
+    With ``prox_mu > 0`` the step accepts an optional 4th argument
+    ``ref_params`` (the round's global params) and adds the FedProx
+    proximal gradient ``mu * (params - ref_params)`` before the
+    optimizer update; existing 3-arg call sites are unaffected."""
     opt = adamw(weight_decay=0.01)
 
-    def train_step(params, opt_state, batch):
+    def train_step(params, opt_state, batch, ref_params=None):
         def loss_fn(p):
             loss, metrics = api.train_loss(p, batch, cfg, run, ctx)
             return loss, metrics
         (loss, metrics), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(params)
+        if prox_mu > 0 and ref_params is not None:
+            grads = fedprox_grad(grads, params, ref_params, prox_mu)
         state = OptState(opt_state["step"], opt_state["mu"],
                          opt_state["nu"])
         new_params, new_state = opt.update(grads, state, params, lr)

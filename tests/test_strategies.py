@@ -1,0 +1,134 @@
+"""Aggregation-strategy registry: combine math, server optimizers,
+registry resolution, and integration with the parametric FL pipeline
+(incl. secure-agg compatibility of weighted averaging)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.strategies import STRATEGIES, Strategy, get_strategy
+
+
+def _deltas(seed=0, n=3):
+    r = np.random.default_rng(seed)
+    return [{"w": jnp.asarray(r.normal(size=(4, 2)), jnp.float32),
+             "b": jnp.asarray(r.normal(size=(5,)), jnp.float32)}
+            for _ in range(n)]
+
+
+def test_registry_resolution_and_overrides():
+    assert {"fedavg", "fedavg_weighted", "fedprox", "fedavgm",
+            "fedadam"} <= set(STRATEGIES)
+    s = get_strategy("fedadam", server_lr=0.5)
+    assert s.server_lr == 0.5 and s.adam
+    assert STRATEGIES["fedadam"].server_lr == 0.1  # original untouched
+    try:
+        get_strategy("nope")
+        raise AssertionError("expected KeyError")
+    except KeyError as e:
+        assert "fedavg" in str(e)
+
+
+def test_fedavg_is_uniform_mean():
+    s = get_strategy("fedavg")
+    ds = _deltas()
+    upd, state = s.aggregate(s.init_state(ds[0]), ds, [10, 20, 30])
+    manual = jax.tree.map(lambda *xs: sum(xs) / 3, *ds)
+    assert state is None
+    for a, b in zip(jax.tree.leaves(upd), jax.tree.leaves(manual)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_weighted_fedavg_weights_by_sample_count():
+    s = get_strategy("fedavg_weighted")
+    sizes = [10, 20, 70]
+    assert np.allclose(s.norm_weights(sizes), [0.1, 0.2, 0.7])
+    ds = _deltas()
+    upd, _ = s.aggregate(None, ds, sizes)
+    manual = jax.tree.map(
+        lambda a, b, c: 0.1 * a + 0.2 * b + 0.7 * c, *ds)
+    for a, b in zip(jax.tree.leaves(upd), jax.tree.leaves(manual)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_fedprox_is_clientside_only():
+    s = get_strategy("fedprox")
+    assert s.client_mu > 0
+    ds = _deltas()
+    upd, _ = s.aggregate(s.init_state(ds[0]), ds, [1, 1, 1])
+    avg, _ = get_strategy("fedavg").aggregate(None, ds, [1, 1, 1])
+    for a, b in zip(jax.tree.leaves(upd), jax.tree.leaves(avg)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_fedavgm_momentum_accumulates():
+    s = get_strategy("fedavgm", momentum=0.5, server_lr=1.0)
+    g = {"w": jnp.ones((2,))}
+    state = s.init_state(g)
+    u1, state = s.server_update(state, g)
+    u2, state = s.server_update(state, g)
+    np.testing.assert_allclose(np.asarray(u1["w"]), 1.0)
+    np.testing.assert_allclose(np.asarray(u2["w"]), 1.5)   # 0.5*1 + 1
+    np.testing.assert_allclose(np.asarray(state["m"]["w"]), 1.5)
+
+
+def test_fedadam_matches_manual_step():
+    s = get_strategy("fedadam", beta1=0.9, beta2=0.99, eps=1e-3,
+                     server_lr=0.1)
+    g = {"w": jnp.asarray([0.2, -0.4])}
+    state = s.init_state(g)
+    upd, state = s.server_update(state, g)
+    m = 0.1 * np.asarray([0.2, -0.4])
+    v = 0.01 * np.asarray([0.2, -0.4]) ** 2
+    np.testing.assert_allclose(np.asarray(upd["w"]),
+                               0.1 * m / (np.sqrt(v) + 1e-3), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(state["v"]["w"]), v, rtol=1e-5)
+
+
+def test_custom_strategy_registration():
+    from repro.core.strategies import register
+    register(Strategy("half_avg", server_lr=0.5))
+    try:
+        s = get_strategy("half_avg")
+        upd, _ = s.aggregate(None, _deltas(), [1, 1, 1])
+        avg, _ = get_strategy("fedavg").aggregate(None, _deltas(),
+                                                  [1, 1, 1])
+        for a, b in zip(jax.tree.leaves(upd), jax.tree.leaves(avg)):
+            np.testing.assert_allclose(np.asarray(a), 0.5 * np.asarray(b),
+                                       rtol=1e-6)
+    finally:
+        STRATEGIES.pop("half_avg", None)
+
+
+def test_parametric_weighted_secure_agg_equivalence():
+    """Pre-masking weighting must keep secure-agg mask cancellation:
+    the run with masks on equals the run with masks off exactly."""
+    from repro.core.parametric import FedParametricConfig, train_federated
+    r = np.random.default_rng(3)
+    clients = [(r.normal(size=(n, 4)).astype(np.float32),
+                (r.uniform(size=n) > 0.5).astype(np.float32))
+               for n in (60, 120, 240)]
+    base = dict(model="logreg", rounds=2, local_steps=10, lr=0.05,
+                sampling="none", strategy="fedavg_weighted", seed=0)
+    p_plain, *_ = train_federated(clients,
+                                  FedParametricConfig(**base))
+    p_masked, *_ = train_federated(clients,
+                                   FedParametricConfig(secure_agg=True,
+                                                       **base))
+    for a, b in zip(jax.tree.leaves(p_plain), jax.tree.leaves(p_masked)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_parametric_server_optimizers_run():
+    from repro.core.parametric import FedParametricConfig, train_federated
+    r = np.random.default_rng(4)
+    x = r.normal(size=(150, 4)).astype(np.float32)
+    y = (x[:, 0] > 0).astype(np.float32)
+    clients = [(x[:75], y[:75]), (x[75:], y[75:])]
+    for name in ("fedavgm", "fedadam", "fedprox"):
+        cfg = FedParametricConfig(model="logreg", rounds=3, local_steps=15,
+                                  lr=0.05, strategy=name, seed=0)
+        params, comm, _, _ = train_federated(clients, cfg,
+                                             test=(x, y))
+        assert all(np.isfinite(np.asarray(l)).all()
+                   for l in jax.tree.leaves(params)), name
+        assert comm.total_bytes("up") > 0

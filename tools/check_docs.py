@@ -1,0 +1,79 @@
+"""Docs import-smoke: every module, attribute, and file path referenced
+in README.md and docs/*.md must actually exist.
+
+Checks three reference kinds:
+  * dotted names (``repro.core.strategies.STRATEGIES``,
+    ``benchmarks.run``) — the longest importable prefix is imported and
+    any remaining parts are resolved with getattr;
+  * ``python -m <module>`` commands — the module must import;
+  * repo-relative file paths (``examples/quickstart.py``,
+    ``docs/ARCHITECTURE.md``) — the file must exist.
+
+Run:  PYTHONPATH=src python tools/check_docs.py
+Exits non-zero listing every broken reference.
+"""
+from __future__ import annotations
+
+import glob
+import importlib
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOC_GLOBS = ["README.md", "docs/*.md"]
+DOTTED = re.compile(r"\b((?:repro|benchmarks)(?:\.\w+)+)")
+# only resolve repo-local modules: third-party tools invoked via -m
+# (e.g. pytest) are not part of the docs import-smoke contract
+PY_M = re.compile(r"python\s+-m\s+((?:repro|benchmarks)(?:\.\w+)*)")
+PATH = re.compile(
+    r"\b((?:src|examples|benchmarks|docs|tests|tools)/[\w/.-]+\.(?:py|md))")
+
+
+def check_dotted(name: str) -> str:
+    """Import the longest module prefix, getattr the rest. '' if ok."""
+    parts = name.split(".")
+    for cut in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:cut]))
+        except ImportError:
+            continue
+        try:
+            for attr in parts[cut:]:
+                obj = getattr(obj, attr)
+        except AttributeError:
+            return f"{name}: module {'.'.join(parts[:cut])} has no " \
+                   f"attribute path {'.'.join(parts[cut:])}"
+        return ""
+    return f"{name}: no importable prefix"
+
+
+def main() -> int:
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    sys.path.insert(0, ROOT)  # for benchmarks.*
+    docs = sorted(p for g in DOC_GLOBS
+                  for p in glob.glob(os.path.join(ROOT, g)))
+    if not docs:
+        print("no docs found", file=sys.stderr)
+        return 1
+    errors = []
+    for doc in docs:
+        rel = os.path.relpath(doc, ROOT)
+        text = open(doc).read()
+        refs = set(DOTTED.findall(text)) | set(PY_M.findall(text))
+        for name in sorted(refs):
+            err = check_dotted(name.rstrip("."))
+            if err:
+                errors.append(f"{rel}: {err}")
+        for path in sorted(set(PATH.findall(text))):
+            if not os.path.exists(os.path.join(ROOT, path)):
+                errors.append(f"{rel}: missing file {path}")
+    for e in errors:
+        print(f"BROKEN  {e}", file=sys.stderr)
+    print(f"checked {len(docs)} docs: "
+          f"{'FAIL' if errors else 'ok'} ({len(errors)} broken refs)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
