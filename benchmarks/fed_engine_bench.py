@@ -1,19 +1,61 @@
 """Federated-engine benchmark: sequential per-pod loop vs the batched
-vmapped client-parallel round, plus a strategy / wire-format sweep.
+vmapped client-parallel round, plus a strategy / wire-format sweep and
+the tree engines (client-batched RF rounds, ``fed_hist`` GBDT).
 
 Each row is ``(name, us_per_round, derived)`` in the harness CSV shape.
 Engine rows time local training only (``round_s`` from ``simulate``,
-first jitted round included), so the vmap speedup is end-to-end honest.
+first jitted round included), so the vmap speedup is end-to-end honest;
+tree rows time local forest growth / server tree growth the same way and
+carry bytes-per-round from the CommLog ledger.
 
 Run standalone:  PYTHONPATH=src python -m benchmarks.fed_engine_bench
 """
 from __future__ import annotations
 
-from repro.launch.fed_train import simulate
+from repro.launch.fed_train import simulate, simulate_fed_hist
 
 ARCH = "qwen3_4b"
 COMMON = dict(n_pods=4, rounds=3, local_steps=4, batch=2, seq=64,
               verbose=False, seed=0)
+TREE_COMMON = dict(n_clients=4, rounds=8, depth=4, n_bins=32,
+                   n_records=1200, verbose=False, seed=0)
+
+
+def _tree_engine_rows() -> list:
+    """Batched vs sequential tree training, timed on the same shards."""
+    import time
+
+    from repro.core import tree_subset as TS
+    from repro.data import framingham as F
+
+    ds = F.synthesize(n=TREE_COMMON["n_records"], seed=0)
+    tr, _ = F.train_test_split(ds)
+    clients = [(c.x, c.y) for c in F.partition_clients(
+        tr, TREE_COMMON["n_clients"])]
+    rows = []
+    for engine in ("sequential", "batched"):
+        cfg = TS.FedForestConfig(trees_per_client=16, subset=16, depth=4,
+                                 n_bins=32, engine=engine, seed=0)
+        t0 = time.perf_counter()
+        _, comm, _ = TS.train_federated_rf(clients, cfg)
+        dt = time.perf_counter() - t0
+        rows.append((f"tree_engine/rf_{engine}", dt * 1e6,
+                     f"uplink_mb={comm.uplink_mb():.3f};"
+                     f"clients={TREE_COMMON['n_clients']}"))
+    return rows
+
+
+def _fed_hist_rows() -> list:
+    rows = []
+    for engine in ("sequential", "batched"):
+        out = simulate_fed_hist(engine=engine, **TREE_COMMON)
+        per_round = (out["comm"].total_bytes("up")
+                     / TREE_COMMON["rounds"] / 1e6)
+        rows.append((f"fed_hist/{engine}",
+                     out["round_s"] / TREE_COMMON["rounds"] * 1e6,
+                     f"f1={out['metrics']['f1']:.3f};"
+                     f"up_mb_per_round={per_round:.3f}"))
+    return rows
 
 
 def run(arch: str = ARCH) -> list:
@@ -36,6 +78,8 @@ def run(arch: str = ARCH) -> list:
         rows.append((f"fed_wire/{wf}", 0.0,
                      f"uplink_mb={out['uplink_mb']:.3f};"
                      f"vs_dense={dense_mb/max(out['uplink_mb'],1e-9):.1f}x"))
+    rows.extend(_tree_engine_rows())
+    rows.extend(_fed_hist_rows())
     return rows
 
 

@@ -1,4 +1,4 @@
-"""Render EXPERIMENTS.md sections from results artifacts.
+"""Render docs/EXPERIMENTS.md sections from results artifacts.
 
   python -m benchmarks.report dryrun    # §Dry-run summary table
   python -m benchmarks.report roofline  # §Roofline table

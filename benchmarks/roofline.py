@@ -1,5 +1,5 @@
 """Roofline report: reads results/dryrun/*.json (written by
-``repro.launch.dryrun``) and renders the §Roofline table for EXPERIMENTS.md.
+``repro.launch.dryrun``) and renders the §Roofline table for docs/EXPERIMENTS.md.
 """
 from __future__ import annotations
 

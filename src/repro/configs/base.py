@@ -80,7 +80,7 @@ class ModelConfig:
     # padded count stays divisible by num_kv_heads) so attention shards
     # over 'model' instead of replicating — yi-34b's 56 heads otherwise
     # replicate 16x. Adds initially-dead heads (model surgery; documented
-    # in EXPERIMENTS.md §Perf).
+    # in docs/EXPERIMENTS.md §Perf).
     pad_heads: bool = False
     dtype: str = "bfloat16"
     # citation for the shape (hf model card or arXiv id)

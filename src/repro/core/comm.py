@@ -42,6 +42,15 @@ class CommLog:
             out[e["round"]] = out.get(e["round"], 0.0) + e["bytes"] / 1e6
         return out
 
+    def per_what_bytes(self) -> Dict[str, int]:
+        """Ledger breakdown by payload kind (e.g. 'quantile-sketch',
+        'grad-hess-histograms', 'trees') — the comm-vs-accuracy tables
+        cite these, never constants."""
+        out: Dict[str, int] = {}
+        for e in self.events:
+            out[e["what"]] = out.get(e["what"], 0) + e["bytes"]
+        return out
+
 
 @dataclass
 class Timer:

@@ -4,11 +4,19 @@ train a small shallow-tree ensemble on the top-p features, and ship only
 that. The server predicts by data-size-weighted voting:
 f(x) = sum |D_i|/|D| T_i(x).  (The paper's own comm table — 6.9 MB shipped
 vs 22.3 MB dense, 3.2x — implies the shallow model is a reduced ensemble,
-not a single tree; see EXPERIMENTS.md.)
+not a single tree; see docs/EXPERIMENTS.md.)
 
 A dense federated-XGBoost baseline (every boosted tree shipped, clients'
 margins averaged) is implemented alongside so the 3.2x reduction is a
 measured before/after.
+
+Local boosting runs under two engines (``FedXGBConfig.engine``):
+``"batched"`` (default) pads client shards to a common length and boosts
+every client in lockstep through ``gbdt.fit_batched`` — one vmapped
+``grow_tree`` per round, client-batched histograms — while
+``"sequential"`` keeps the per-client ``gbdt.fit`` loop as the parity
+reference.  For *exact* federated GBDT over shared bins (histograms
+shipped instead of trees) see ``repro.core.fed_hist``.
 """
 from __future__ import annotations
 
@@ -22,7 +30,7 @@ import numpy as np
 from repro.core.comm import CommLog, Timer
 from repro.core.metrics import binary_metrics
 from repro.data import sampling as S
-from repro.trees import gbdt
+from repro.trees import binning, gbdt
 from repro.trees.growth import nbytes
 
 
@@ -40,11 +48,69 @@ class FedXGBConfig:
     sampling: str = "none"
     hist_impl: str = "auto"      # histogram kernel routing: auto | pallas
     # | pallas_interpret | xla (see repro.kernels.hist.ops)
+    engine: str = "batched"      # 'batched' (client-axis vmap) |
+    # 'sequential' (per-client loop — the parity reference)
     seed: int = 0
 
     @property
     def shallow_rounds_(self) -> int:
         return self.shallow_rounds or max(self.num_rounds // 3, 1)
+
+
+def _prep_batched(sampled, n_bins: int):
+    """Per-client local bins + padding onto the client axis, computed
+    once per training run (the full-depth and shallow passes reuse it)."""
+    n_max = max(len(ys) for _, ys in sampled)
+    x_l, y_l, bins_l, edges_l, w_l = [], [], [], [], []
+    for xs, ys in sampled:
+        xs = jnp.asarray(xs, jnp.float32)
+        n = len(ys)
+        edges = binning.fit_bins(xs, n_bins)
+        pad = n_max - n
+        x_l.append(jnp.pad(xs, ((0, pad), (0, 0))))
+        y_l.append(jnp.pad(jnp.asarray(ys, jnp.float32), (0, pad)))
+        bins_l.append(jnp.pad(binning.apply_bins(xs, edges),
+                              ((0, pad), (0, 0))))
+        edges_l.append(edges)
+        w_l.append(jnp.pad(jnp.ones(n, jnp.float32), (0, pad)))
+    return tuple(jnp.stack(a) for a in (x_l, y_l, bins_l, edges_l, w_l))
+
+
+def _fit_clients(sampled, cfg: FedXGBConfig, *, num_rounds: int,
+                 depth: int,
+                 feature_masks: Optional[List[np.ndarray]] = None,
+                 prepped=None) -> List[gbdt.GBDT]:
+    """Fit one local GBDT per client under the configured engine.
+
+    Both engines see identical per-client (edges, bins); the batched
+    path pads shards to a common length (pad rows carry zero sample
+    weight, via ``prepped`` = ``_prep_batched(sampled, ...)``) and
+    boosts all clients in lockstep."""
+    if cfg.engine == "sequential":
+        out = []
+        for i, (xs, ys) in enumerate(sampled):
+            fm = (None if feature_masks is None
+                  else jnp.asarray(feature_masks[i]))
+            out.append(gbdt.fit(jnp.asarray(xs), jnp.asarray(ys),
+                                num_rounds=num_rounds, depth=depth,
+                                n_bins=cfg.n_bins,
+                                learning_rate=cfg.learning_rate,
+                                feature_mask=fm,
+                                hist_impl=cfg.hist_impl))
+        return out
+    if cfg.engine != "batched":
+        raise ValueError(f"unknown engine {cfg.engine!r}; "
+                         "use 'batched' or 'sequential'")
+    x_c, y_c, bins_c, edges_c, w_c = (prepped if prepped is not None
+                                      else _prep_batched(sampled,
+                                                         cfg.n_bins))
+    fm = (None if feature_masks is None
+          else jnp.asarray(np.stack(feature_masks)))
+    return gbdt.fit_batched(x_c, y_c, bins_c, edges_c, w_c,
+                            num_rounds=num_rounds,
+                            depth=depth, n_bins=cfg.n_bins,
+                            learning_rate=cfg.learning_rate,
+                            feature_mask=fm, hist_impl=cfg.hist_impl)
 
 
 @dataclass
@@ -60,32 +126,34 @@ def train_federated_xgb_fe(clients: Sequence[Tuple[np.ndarray, np.ndarray]],
     """Returns (ensemble, comm, timer)."""
     comm = CommLog()
     timer = Timer()
-    trees, weights, bases, tops = [], [], [], []
     sizes = [len(y) for _, y in clients]
     total = sum(sizes)
-    for i, (x, y) in enumerate(clients):
-        xs, ys = S.apply_strategy(cfg.sampling, x, y, cfg.seed + i,
-                                  fed_stats=fed_stats)
-        xs, ys = jnp.asarray(xs), jnp.asarray(ys)
-        local = gbdt.fit(xs, ys, num_rounds=cfg.num_rounds, depth=cfg.depth,
-                         n_bins=cfg.n_bins,
-                         learning_rate=cfg.learning_rate,
-                         hist_impl=cfg.hist_impl)
+    sampled = [S.apply_strategy(cfg.sampling, x, y, cfg.seed + i,
+                                fed_stats=fed_stats)
+               for i, (x, y) in enumerate(clients)]
+    prepped = (_prep_batched(sampled, cfg.n_bins)
+               if cfg.engine == "batched" else None)
+    locals_ = _fit_clients(sampled, cfg, num_rounds=cfg.num_rounds,
+                           depth=cfg.depth, prepped=prepped)
+    masks, tops = [], []
+    for (xs, _), local in zip(sampled, locals_):
         phi = np.asarray(gbdt.feature_importance(local))
         top = np.argsort(-phi)[:cfg.top_features]
-        mask = np.zeros(x.shape[1], np.float32)
+        mask = np.zeros(xs.shape[1], np.float32)
         mask[top] = 1.0
-        shallow = gbdt.fit(xs, ys, num_rounds=cfg.shallow_rounds_,
-                           depth=cfg.shallow_depth, n_bins=cfg.n_bins,
-                           learning_rate=cfg.learning_rate,
-                           feature_mask=jnp.asarray(mask),
-                           hist_impl=cfg.hist_impl)
+        masks.append(mask)
+        tops.append(top)
+    shallows = _fit_clients(sampled, cfg, num_rounds=cfg.shallow_rounds_,
+                            depth=cfg.shallow_depth, feature_masks=masks,
+                            prepped=prepped)
+    trees, weights, bases = [], [], []
+    for i, shallow in enumerate(shallows):
         comm.log(0, f"c{i}", "up",
-                 nbytes(shallow.forest) + 4 + 4 * len(top), "shallow-gbdt")
+                 nbytes(shallow.forest) + 4 + 4 * len(tops[i]),
+                 "shallow-gbdt")
         trees.append(shallow)
         weights.append(sizes[i] / total)
         bases.append(shallow.base_margin)
-        tops.append(top)
     ens = FeatureExtractEnsemble(trees, weights, bases, tops)
     with timer:
         pass  # aggregation is a concat; vote happens at predict time
@@ -122,19 +190,16 @@ def train_federated_xgb(clients, cfg: FedXGBConfig, fed_stats=None):
     (data-size weighted). The paper's 'Federated XGBoost' rows."""
     comm = CommLog()
     timer = Timer()
-    models, weights = [], []
     sizes = [len(y) for _, y in clients]
     total = sum(sizes)
-    for i, (x, y) in enumerate(clients):
-        xs, ys = S.apply_strategy(cfg.sampling, x, y, cfg.seed + i,
-                                  fed_stats=fed_stats)
-        local = gbdt.fit(jnp.asarray(xs), jnp.asarray(ys),
-                         num_rounds=cfg.num_rounds, depth=cfg.depth,
-                         n_bins=cfg.n_bins,
-                         learning_rate=cfg.learning_rate,
-                         hist_impl=cfg.hist_impl)
+    sampled = [S.apply_strategy(cfg.sampling, x, y, cfg.seed + i,
+                                fed_stats=fed_stats)
+               for i, (x, y) in enumerate(clients)]
+    models = _fit_clients(sampled, cfg, num_rounds=cfg.num_rounds,
+                          depth=cfg.depth)
+    weights = []
+    for i, local in enumerate(models):
         comm.log(0, f"c{i}", "up", nbytes(local.forest), "gbdt")
-        models.append(local)
         weights.append(sizes[i] / total)
     with timer:
         pass

@@ -1,0 +1,178 @@
+"""Histogram-aggregation federated GBDT — the ``fed_hist`` mode.
+
+Unlike the tree-shipping protocols (C2 ships tree subsets, C3 ships
+shallow feature-extracted ensembles), ``fed_hist`` never ships trees up:
+after one federated-binning round fixes shared bin edges
+(``repro.trees.binning.fed_fit_bins``), every boosting round has clients
+ship their per-level (F, 2^level * n_bins, 2) grad/hess histograms and
+the server grows the tree from the sum.  Because all clients bin with the
+same edges, the summed histogram equals the histogram of the union of
+shards — so federated training is **exactly** centralized GBDT on the
+pooled data (tested to numerical tolerance), at a communication cost that
+depends on (F, n_bins, depth) but **not** on the number of samples.
+
+Privacy hooks mirror the parametric pipeline (``core/privacy.py``):
+
+* ``secure_agg=True`` simulates Bonawitz-style pairwise masking on the
+  shipped histograms — ring masks m_i - m_{i+1} cancel in the server's
+  sum, so the server only sees the aggregate (HE stand-in, DESIGN.md
+  §Changed-assumptions).
+* ``dp_epsilon > 0`` adds Gaussian noise calibrated by
+  ``privacy.gaussian_sigma(eps, delta, sensitivity)`` to the aggregated
+  histogram of every level (per-histogram sensitivity = the max
+  grad/hess contribution of one sample).
+
+Every byte crossing a client boundary — sketches, histograms, the
+broadcast trees — goes through the CommLog ledger.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.comm import CommLog, Timer
+from repro.core.metrics import binary_metrics
+from repro.core.privacy import gaussian_sigma
+from repro.data import sampling as S
+from repro.trees import binning, gbdt
+from repro.trees.growth import (fed_hist_bytes, grow_tree_fed, nbytes,
+                                predict_tree, stack_trees)
+
+
+@dataclass
+class FedHistConfig:
+    num_rounds: int = 50
+    depth: int = 6
+    n_bins: int = 64
+    learning_rate: float = 0.3
+    lam: float = 1.0
+    sketch_size: int = 128       # federated-binning sketch points/feature
+    sampling: str = "none"
+    hist_impl: str = "auto"      # histogram kernel routing: auto | pallas
+    # | pallas_interpret | xla (see repro.kernels.hist.ops)
+    engine: str = "batched"      # 'batched' (client-axis kernel) |
+    # 'sequential' (per-client loop inside growth — the parity reference)
+    secure_agg: bool = False
+    dp_epsilon: float = 0.0      # 0 -> no DP noise
+    dp_delta: float = 1e-5
+    dp_sensitivity: float = 1.0
+    seed: int = 0
+
+
+def _masked_noisy_sum(hists, key, *, sigma: float, secure: bool):
+    """Aggregate per-client histograms: optional ring-mask secure agg
+    (masks cancel in the sum) + optional Gaussian DP noise on the sum."""
+    ks, kn = (jax.random.split(key) if key is not None else (None, None))
+    if secure:
+        scale = jnp.std(hists) + 1e-3
+        m = jax.random.normal(ks, hists.shape, hists.dtype) * scale
+        hists = hists + m - jnp.roll(m, -1, axis=0)
+    total = jnp.sum(hists, axis=0)
+    if sigma > 0.0:
+        total = total + jax.random.normal(kn, total.shape,
+                                          total.dtype) * sigma
+    return total
+
+
+def _pad_stack(arrs, n_max: int):
+    def pad(a):
+        width = [(0, n_max - a.shape[0])] + [(0, 0)] * (a.ndim - 1)
+        return jnp.pad(jnp.asarray(a), width)
+    return jnp.stack([pad(a) for a in arrs])
+
+
+def stack_client_shards(clients: Sequence[Tuple[np.ndarray, np.ndarray]],
+                        edges):
+    """Bin each shard with the shared edges and pad-stack to (C, n_max).
+
+    Returns (x (C,n,F), y (C,n), bins (C,n,F), valid_w (C,n)) with
+    valid_w = 0 marking pad rows (excluded from growth by weight)."""
+    n_max = max(len(y) for _, y in clients)
+    xs = [jnp.asarray(x, jnp.float32) for x, _ in clients]
+    x_c = _pad_stack(xs, n_max)
+    y_c = _pad_stack([jnp.asarray(y, jnp.float32) for _, y in clients],
+                     n_max)
+    bins_c = _pad_stack([binning.apply_bins(x, edges) for x in xs], n_max)
+    w_c = _pad_stack([jnp.ones(len(y), jnp.float32) for _, y in clients],
+                     n_max)
+    return x_c, y_c, bins_c, w_c
+
+
+def train_federated_xgb_hist(clients: Sequence[Tuple[np.ndarray,
+                                                     np.ndarray]],
+                             cfg: FedHistConfig, fed_stats=None):
+    """Histogram-aggregation federated GBDT.  Returns (model, comm, timer).
+
+    The returned model is one global ``gbdt.GBDT`` (the server's trees) —
+    identical on every client after the final broadcast.
+    """
+    if cfg.engine not in ("batched", "sequential"):
+        raise ValueError(f"unknown engine {cfg.engine!r}; "
+                         "use 'batched' or 'sequential'")
+    comm = CommLog()
+    timer = Timer()
+    sampled = [S.apply_strategy(cfg.sampling, x, y, cfg.seed + i,
+                                fed_stats=fed_stats)
+               for i, (x, y) in enumerate(clients)]
+    C = len(sampled)
+    F = sampled[0][0].shape[1]
+
+    # round 0: federated binning — sketches up, shared edges down
+    edges = binning.fed_fit_bins([x for x, _ in sampled], cfg.n_bins,
+                                 sketch_size=cfg.sketch_size, comm=comm)
+    x_c, y_c, bins_c, w_c = stack_client_shards(sampled, edges)
+
+    # base margin from global label counts (two scalars per client)
+    n_pos = sum(float(np.sum(y)) for _, y in sampled)
+    n_tot = sum(len(y) for _, y in sampled)
+    for i in range(C):
+        comm.log(0, f"c{i}", "up", 8, "label-counts")
+    pos = float(np.clip(n_pos / n_tot, 1e-4, 1 - 1e-4))
+    base = float(np.log(pos / (1 - pos)))
+
+    hist_agg = None
+    if cfg.secure_agg or cfg.dp_epsilon > 0:
+        sigma = (gaussian_sigma(cfg.dp_epsilon, cfg.dp_delta,
+                                cfg.dp_sensitivity)
+                 if cfg.dp_epsilon > 0 else 0.0)
+        # functools.partial first so sigma/secure stay Python constants
+        # (trace-time branches); tree_util.Partial makes it a jit-able arg
+        hist_agg = jax.tree_util.Partial(
+            functools.partial(_masked_noisy_sum, sigma=sigma,
+                              secure=cfg.secure_agg))
+    key = jax.random.PRNGKey(cfg.seed)
+
+    margin = jnp.full(y_c.shape, base, jnp.float32)
+    up_per_tree = fed_hist_bytes(F, cfg.n_bins, cfg.depth)
+    trees = []
+    for r in range(cfg.num_rounds):
+        p = jax.nn.sigmoid(margin)
+        grad = p - y_c
+        hess = p * (1 - p)
+        with timer:
+            tree = grow_tree_fed(
+                bins_c, edges, grad, hess, w_c, depth=cfg.depth,
+                n_bins=cfg.n_bins, lam=cfg.lam, hist_impl=cfg.hist_impl,
+                hist_agg=hist_agg, agg_key=jax.random.fold_in(key, r),
+                batch_clients=(cfg.engine == "batched"))
+            margin = margin + cfg.learning_rate * jax.vmap(
+                predict_tree, in_axes=(None, 0))(tree, x_c)
+            jax.block_until_ready(margin)
+        trees.append(tree)
+        down = nbytes(tree)
+        for i in range(C):
+            comm.log(r + 1, f"c{i}", "up", up_per_tree,
+                     "grad-hess-histograms")
+            comm.log(r + 1, f"c{i}", "down", down, "tree")
+    model = gbdt.GBDT(stack_trees(trees), cfg.learning_rate, base)
+    return model, comm, timer
+
+
+def evaluate_fed_hist(model: gbdt.GBDT, x, y):
+    return binary_metrics(np.asarray(gbdt.predict(model, jnp.asarray(x))),
+                          y)

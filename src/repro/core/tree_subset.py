@@ -5,6 +5,14 @@ ensemble is the union, predicting by majority vote.  Comm drops from
 O(N*k) to O(N*s); with s = floor(sqrt(k)) this is the Theorem-1 rate, and
 the in-repo baseline (s = k, FedTree-style full shipping) is measured by
 the same ledger so the 70 % claim is a real before/after.
+
+Local training runs under two engines: ``engine="batched"`` (default)
+stacks client shards on a leading client axis, draws each client's
+bootstrap with its own rng *before* padding, and grows every client's
+forest in one ``vmap(clients) ∘ vmap(trees)`` call — the histogram hot
+path runs client-batched through ``repro.kernels.hist``.
+``engine="sequential"`` keeps the per-client Python loop as the parity
+reference (identical forests; ``tests/test_fed_hist.py``).
 """
 from __future__ import annotations
 
@@ -18,6 +26,7 @@ import numpy as np
 from repro.core.comm import CommLog, Timer
 from repro.core.metrics import binary_metrics
 from repro.data import sampling as S
+from repro.trees import binning
 from repro.trees import forest as RF
 from repro.trees.growth import (Tree, concat_forests, nbytes, predict_forest,
                                 take_trees)
@@ -34,6 +43,8 @@ class FedForestConfig:
     feature_frac: float = 0.8
     hist_impl: str = "auto"           # histogram kernel routing: auto |
     # pallas | pallas_interpret | xla (see repro.kernels.hist.ops)
+    engine: str = "batched"           # 'batched' (client-axis vmap) |
+    # 'sequential' (per-client loop — the parity reference)
     seed: int = 0
 
 
@@ -51,6 +62,46 @@ def _select(forest: Tree, x, y, s: int, how: str, seed: int):
     return take_trees(forest, jnp.asarray(np.sort(idx))), idx
 
 
+def _local_forests(sampled, cfg: FedForestConfig) -> List[RF.RandomForest]:
+    """Train each client's local forest under the configured engine.
+
+    Both engines consume identical per-client (edges, bins, bootstrap
+    weights, feature masks) — the batched path only pads shards to a
+    common length (pad rows carry zero bootstrap weight) and vmaps the
+    growth over the client axis."""
+    if cfg.engine == "sequential":
+        return [RF.fit(jnp.asarray(xs), jnp.asarray(ys),
+                       num_trees=cfg.trees_per_client, depth=cfg.depth,
+                       n_bins=cfg.n_bins, feature_frac=cfg.feature_frac,
+                       hist_impl=cfg.hist_impl,
+                       rng=jax.random.PRNGKey(cfg.seed + 17 * i))
+                for i, (xs, ys) in enumerate(sampled)]
+    if cfg.engine != "batched":
+        raise ValueError(f"unknown engine {cfg.engine!r}; "
+                         "use 'batched' or 'sequential'")
+    F = sampled[0][0].shape[1]
+    n_max = max(len(ys) for _, ys in sampled)
+    bins_l, edges_l, y_l, w_l, fm_l = [], [], [], [], []
+    for i, (xs, ys) in enumerate(sampled):
+        xs = jnp.asarray(xs)
+        n = len(ys)
+        edges = binning.fit_bins(xs, cfg.n_bins)
+        bins = binning.apply_bins(xs, edges)
+        w, fm = RF.bootstrap_masks(jax.random.PRNGKey(cfg.seed + 17 * i),
+                                   cfg.trees_per_client, n, F,
+                                   cfg.feature_frac)
+        pad = n_max - n
+        bins_l.append(jnp.pad(bins, ((0, pad), (0, 0))))
+        edges_l.append(edges)
+        y_l.append(jnp.pad(jnp.asarray(ys, jnp.float32), (0, pad)))
+        w_l.append(jnp.pad(w, ((0, 0), (0, pad))))
+        fm_l.append(fm)
+    return RF.fit_batched(jnp.stack(bins_l), jnp.stack(edges_l),
+                          jnp.stack(y_l), jnp.stack(w_l), jnp.stack(fm_l),
+                          depth=cfg.depth, n_bins=cfg.n_bins,
+                          hist_impl=cfg.hist_impl)
+
+
 def train_federated_rf(clients: Sequence[Tuple[np.ndarray, np.ndarray]],
                        cfg: FedForestConfig,
                        fed_stats=None):
@@ -59,16 +110,12 @@ def train_federated_rf(clients: Sequence[Tuple[np.ndarray, np.ndarray]],
     comm = CommLog()
     timer = Timer()
     s = cfg.subset or int(np.floor(np.sqrt(cfg.trees_per_client)))
+    sampled = [S.apply_strategy(cfg.sampling, x, y, cfg.seed + i,
+                                fed_stats=fed_stats)
+               for i, (x, y) in enumerate(clients)]
+    locals_ = _local_forests(sampled, cfg)
     subsets: List[Tree] = []
-    for i, (x, y) in enumerate(clients):
-        xs, ys = S.apply_strategy(cfg.sampling, x, y, cfg.seed + i,
-                                  fed_stats=fed_stats)
-        local = RF.fit(jnp.asarray(xs), jnp.asarray(ys),
-                       num_trees=cfg.trees_per_client, depth=cfg.depth,
-                       n_bins=cfg.n_bins,
-                       feature_frac=cfg.feature_frac,
-                       hist_impl=cfg.hist_impl,
-                       rng=jax.random.PRNGKey(cfg.seed + 17 * i))
+    for i, ((xs, ys), local) in enumerate(zip(sampled, locals_)):
         sel, _ = _select(local.forest, xs, ys, s, cfg.selection,
                          cfg.seed + i)
         comm.log(0, f"c{i}", "up", nbytes(sel), "trees")

@@ -76,7 +76,7 @@ def synthesize(n: int = 4238, positive_rate: float = 0.152,
     w = np.array([IMPORTANCE[f] for f in FEATURES])
     sign = np.ones(len(FEATURES))
     sign[FEATURES.index("education")] = -1.0
-    # calibration (EXPERIMENTS.md §Methodology): LIN_SCALE/NONLIN_SCALE/
+    # calibration (docs/EXPERIMENTS.md §Methodology): LIN_SCALE/NONLIN_SCALE/
     # noise are set so that on the twin, centralized XGBoost lands at the
     # paper's F1=0.78 while linear models trail trees as in the paper.
     lin = LIN_SCALE * (z @ (w * sign))

@@ -10,6 +10,11 @@ turns the scatter into an MXU contraction per (sample-block, feature-block):
 
 The sample-block grid axis is sequential; the (F_b, B_bins, 2) output block
 stays resident in VMEM and accumulates across sample blocks.
+
+Client-batched builds (the federated tree engine) add a leading *client*
+grid axis: bins ``(C, n, F)`` runs as grid ``(C, F_blocks, N_blocks)`` with
+one VMEM-resident output block per (client, feature-block) — every client
+shard is histogrammed by the same kernel program in one ``pallas_call``.
 """
 from __future__ import annotations
 
@@ -22,20 +27,20 @@ from jax.experimental import pallas as pl
 
 def _hist_kernel(bins_ref, gh_ref, o_ref, *, n_bins: int, block_f: int,
                  block_n: int):
-    si = pl.program_id(1)
+    si = pl.program_id(2)
 
     @pl.when(si == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    bins = bins_ref[...]                       # (block_n, block_f) int32
-    gh = gh_ref[...].astype(jnp.float32)       # (block_n, 2)
+    bins = bins_ref[0]                         # (block_n, block_f) int32
+    gh = gh_ref[0].astype(jnp.float32)         # (block_n, 2)
     iota = jax.lax.broadcasted_iota(jnp.int32,
                                     (block_n, block_f, n_bins), 2)
     onehot = (bins[:, :, None] == iota).astype(jnp.float32)
     oh2 = onehot.reshape(block_n, block_f * n_bins)
     upd = jax.lax.dot_general(oh2, gh, (((0,), (0,)), ((), ())))
-    o_ref[...] += upd.reshape(block_f, n_bins, 2)
+    o_ref[...] += upd.reshape(1, block_f, n_bins, 2)
 
 
 def hist_pallas(bins, grad, hess, n_bins: int, *, block_n: int = 1024,
@@ -44,8 +49,11 @@ def hist_pallas(bins, grad, hess, n_bins: int, *, block_n: int = 1024,
 
     Usage contract:
       * bins (n, F) int32 with values in [0, n_bins); out-of-range bins
-        contribute nothing (the one-hot comparison never matches).
-      * grad / hess (n,) float; cast to f32 inside the kernel.
+        contribute nothing (the one-hot comparison never matches).  A
+        leading client axis is accepted: bins (C, n, F) with grad/hess
+        (C, n) returns (C, F, n_bins, 2) — one histogram per client
+        shard, built by the same kernel over a (C, F_blk, N_blk) grid.
+      * grad / hess (n,) or (C, n) float; cast to f32 inside the kernel.
       * Inputs are zero-padded up to block multiples: padded samples
         carry grad = hess = 0 (bin 0 receives zero mass — no effect) and
         padded feature columns are sliced off the output, so padding is
@@ -57,32 +65,37 @@ def hist_pallas(bins, grad, hess, n_bins: int, *, block_n: int = 1024,
         the CPU fallback used when no TPU/GPU is present (see
         ``repro.kernels.hist.ops.gradient_histogram``).
 
-    Returns (F, n_bins, 2) float32: grad sums in [..., 0], hess sums in
-    [..., 1].
+    Returns (F, n_bins, 2) — or (C, F, n_bins, 2) for client-stacked
+    input — float32: grad sums in [..., 0], hess sums in [..., 1].
     """
-    n, F = bins.shape
+    squeeze = bins.ndim == 2
+    if squeeze:
+        bins, grad, hess = bins[None], grad[None], hess[None]
+    C, n, F = bins.shape
     block_n = min(block_n, max(n, 1))
     block_f = min(block_f, F)
     pad_n = (-n) % block_n
     pad_f = (-F) % block_f
-    gh = jnp.stack([grad, hess], axis=1).astype(jnp.float32)
+    gh = jnp.stack([grad, hess], axis=-1).astype(jnp.float32)  # (C, n, 2)
     if pad_n:
-        bins = jnp.pad(bins, ((0, pad_n), (0, 0)))
-        gh = jnp.pad(gh, ((0, pad_n), (0, 0)))     # zero grad -> no effect
+        bins = jnp.pad(bins, ((0, 0), (0, pad_n), (0, 0)))
+        gh = jnp.pad(gh, ((0, 0), (0, pad_n), (0, 0)))  # zero grad -> noop
     if pad_f:
-        bins = jnp.pad(bins, ((0, 0), (0, pad_f)))
-    np_, Fp = bins.shape
-    grid = (Fp // block_f, np_ // block_n)
+        bins = jnp.pad(bins, ((0, 0), (0, 0), (0, pad_f)))
+    _, np_, Fp = bins.shape
+    grid = (C, Fp // block_f, np_ // block_n)
     out = pl.pallas_call(
         functools.partial(_hist_kernel, n_bins=n_bins, block_f=block_f,
                           block_n=block_n),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_n, block_f), lambda f, s: (s, f)),
-            pl.BlockSpec((block_n, 2), lambda f, s: (s, 0)),
+            pl.BlockSpec((1, block_n, block_f), lambda c, f, s: (c, s, f)),
+            pl.BlockSpec((1, block_n, 2), lambda c, f, s: (c, s, 0)),
         ],
-        out_specs=pl.BlockSpec((block_f, n_bins, 2), lambda f, s: (f, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((Fp, n_bins, 2), jnp.float32),
+        out_specs=pl.BlockSpec((1, block_f, n_bins, 2),
+                               lambda c, f, s: (c, f, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((C, Fp, n_bins, 2), jnp.float32),
         interpret=interpret,
     )(bins, gh)
-    return out[:F]
+    out = out[:, :F]
+    return out[0] if squeeze else out

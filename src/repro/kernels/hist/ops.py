@@ -12,20 +12,31 @@ def gradient_histogram(bins, grad, hess, n_bins: int, *, impl: str = "auto"):
 
     Args:
       bins: (n, F) int32, values in [0, n_bins); out-of-range bins are
-        silently dropped (the one-hot match never fires).
-      grad/hess: (n,) float, per-sample first/second-order gradients.
+        silently dropped (the one-hot match never fires).  Client-batched
+        builds pass a leading client axis — bins (C, n, F) with grad/hess
+        (C, n) — and get back (C, F, n_bins, 2): one histogram per client
+        shard in a single call (the Pallas kernel runs it as an extra
+        grid dimension, the XLA reference as a vmap).
+      grad/hess: (n,) or (C, n) float, per-sample first/second-order
+        gradients.
       n_bins: histogram width (tree growth passes n_nodes * n_bins to
         histogram a whole level in one call).
-      impl: "auto" routes to the Pallas TPU kernel on accelerators and
-        the XLA segment-sum reference on CPU.  "pallas" forces the
-        kernel; on CPU it degrades to ``interpret=True`` (the Pallas
-        interpreter — same kernel program, no Mosaic compile) instead of
-        failing, so the federated tree pipelines run the identical code
-        path everywhere.  "pallas_interpret" forces interpreter mode;
-        "xla" forces the reference.
+      impl: routing table —
 
-    Returns (F, n_bins, 2) float32: [..., 0] = sum of grad, [..., 1] =
-    sum of hess per (feature, bin).
+        ==================  ==================================================
+        ``"auto"``          Pallas kernel on TPU/GPU, XLA reference on CPU.
+        ``"pallas"``        force the kernel; on CPU degrades to
+                            ``interpret=True`` (same kernel program, no
+                            Mosaic compile) instead of failing, so the
+                            federated tree pipelines run the identical
+                            code path everywhere.
+        ``"pallas_interpret"``  force interpreter mode on any backend.
+        ``"xla"``           force the segment-sum reference.
+        ==================  ==================================================
+
+    Returns (F, n_bins, 2) float32 — or (C, F, n_bins, 2) for
+    client-stacked input: [..., 0] = sum of grad, [..., 1] = sum of hess
+    per (feature, bin).
     """
     if impl == "auto":
         impl = "pallas" if jax.default_backend() != "cpu" else "xla"

@@ -4,7 +4,14 @@ import jax.numpy as jnp
 
 
 def hist_ref(bins, grad, hess, n_bins: int):
-    """bins (n,F) int32; grad/hess (n,) -> (F, n_bins, 2) fp32."""
+    """bins (n,F) int32; grad/hess (n,) -> (F, n_bins, 2) fp32.
+
+    A leading client axis is accepted: (C,n,F)/(C,n) -> (C,F,n_bins,2)
+    via vmap (one independent histogram per client shard)."""
+    if bins.ndim == 3:
+        return jax.vmap(lambda b, g, h: hist_ref(b, g, h, n_bins))(
+            bins, grad, hess)
+
     def per_feature(col):
         g = jax.ops.segment_sum(grad.astype(jnp.float32), col, n_bins)
         h = jax.ops.segment_sum(hess.astype(jnp.float32), col, n_bins)

@@ -7,10 +7,14 @@ compressed wire format of each pod's delta crosses the pod axis
 (``repro.core.compression.WIRE_FORMATS``), and the server applies a
 named aggregation rule (``repro.core.strategies.STRATEGIES``).
 
-Two entry points:
+Three entry points:
   * ``simulate`` — runnable federated training of a reduced arch on CPU:
     N virtual pods, vmapped client-parallel local training, strategy
     registry aggregation, wire-format compression, full comm ledger.
+  * ``simulate_fed_hist`` — the non-parametric twin: histogram-aggregation
+    federated GBDT (``repro.core.fed_hist``) on the Framingham twin —
+    shared federated binning, per-round client histograms through the
+    ledger, server-side tree growth (``--mode fed_hist`` on the CLI).
   * ``build_fed_round`` — the multi-pod dry-run artifact: params carry a
     leading pod dimension sharded over the 'pod' mesh axis; the local step
     is vmapped over it and the aggregation mean is a real cross-pod
@@ -219,6 +223,49 @@ def simulate(arch: str, *, n_pods: int = 3, rounds: int = 10,
             "round_s": timer.total_s}
 
 
+# --- histogram-aggregation federated trees (fed_hist) -------------------------
+
+def simulate_fed_hist(*, n_clients: int = 3, rounds: int = 20,
+                      depth: int = 4, n_bins: int = 32,
+                      sampling: str = "none", engine: str = "batched",
+                      secure_agg: bool = False, dp_epsilon: float = 0.0,
+                      hist_impl: str = "auto", seed: int = 0,
+                      n_records: int = 4238, verbose: bool = True):
+    """Histogram-aggregation federated GBDT on the Framingham twin.
+
+    The tree-side counterpart of ``simulate``: one federated-binning
+    round (quantile sketches up, shared edges down), then per boosting
+    round every client ships (F, 2^level * n_bins, 2) grad/hess
+    histograms and the server grows the tree from the sum — exactly
+    centralized GBDT on the pooled shards (``repro.core.fed_hist``).
+
+    Returns a dict with ``metrics`` (test-set binary metrics), ``comm``
+    (CommLog), ``uplink_mb``, and ``round_s`` (tree-growth wall time).
+    """
+    from repro.core import fed_hist as FH
+    from repro.data import framingham as F
+
+    ds = F.synthesize(n=n_records, seed=seed)
+    tr, te = F.train_test_split(ds)
+    clients = [(c.x, c.y) for c in F.partition_clients(tr, n_clients,
+                                                       seed)]
+    cfg = FH.FedHistConfig(num_rounds=rounds, depth=depth, n_bins=n_bins,
+                           sampling=sampling, engine=engine,
+                           secure_agg=secure_agg, dp_epsilon=dp_epsilon,
+                           hist_impl=hist_impl, seed=seed)
+    model, comm, timer = FH.train_federated_xgb_hist(clients, cfg)
+    metrics = FH.evaluate_fed_hist(model, te.x, te.y)
+    if verbose:
+        per_what = {k: f"{v/1e6:.2f}MB"
+                    for k, v in comm.per_what_bytes().items()}
+        print(f"fed_hist: F1={metrics['f1']:.3f} "
+              f"uplink={comm.uplink_mb():.2f}MB {per_what} "
+              f"growth {timer.total_s:.2f}s ({engine} engine)")
+    return {"metrics": metrics, "comm": comm,
+            "uplink_mb": comm.total_mb("up"), "round_s": timer.total_s,
+            "engine": engine}
+
+
 # --- multi-pod dry-run artifact -----------------------------------------------
 
 def build_fed_round(cfg, run: RunConfig, mesh, shape: ShapeConfig,
@@ -256,6 +303,10 @@ def build_fed_round(cfg, run: RunConfig, mesh, shape: ShapeConfig,
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="lm", choices=["lm", "fed_hist"],
+                    help="lm: federated LM pods; fed_hist: "
+                    "histogram-aggregation federated GBDT on the "
+                    "Framingham twin")
     ap.add_argument("--arch", default="qwen3_4b")
     ap.add_argument("--pods", type=int, default=3)
     ap.add_argument("--rounds", type=int, default=5)
@@ -268,9 +319,24 @@ def main():
     ap.add_argument("--strategy", default="fedavg",
                     choices=sorted(STRATEGIES))
     ap.add_argument("--engine", default="vmap",
-                    choices=["vmap", "sequential"])
+                    help="lm: vmap|sequential; fed_hist: "
+                    "batched|sequential")
     ap.add_argument("--sync-sampler", action="store_true")
+    # fed_hist knobs
+    ap.add_argument("--depth", type=int, default=4)
+    ap.add_argument("--n-bins", type=int, default=32)
+    ap.add_argument("--sampling", default="none")
+    ap.add_argument("--secure-agg", action="store_true")
+    ap.add_argument("--dp-epsilon", type=float, default=0.0)
     args = ap.parse_args()
+    if args.mode == "fed_hist":
+        engine = ("batched" if args.engine == "vmap" else args.engine)
+        simulate_fed_hist(n_clients=args.pods, rounds=args.rounds,
+                          depth=args.depth, n_bins=args.n_bins,
+                          sampling=args.sampling, engine=engine,
+                          secure_agg=args.secure_agg,
+                          dp_epsilon=args.dp_epsilon)
+        return
     out = simulate(args.arch, n_pods=args.pods, rounds=args.rounds,
                    local_steps=args.local_steps,
                    compression=args.compression, rho=args.rho,

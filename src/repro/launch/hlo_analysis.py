@@ -4,7 +4,7 @@
 module; collective traffic is not in it, so we parse the compiled HLO text
 and sum result-shape bytes of every collective op.
 
-Ring-model byte accounting (documented convention, EXPERIMENTS.md):
+Ring-model byte accounting (documented convention, docs/EXPERIMENTS.md §Methodology):
   all-gather / all-to-all / collective-permute : 1 x result bytes
   reduce-scatter                               : result bytes x (group-1)
   all-reduce                                   : 2 x result bytes
@@ -103,7 +103,7 @@ def fused_memory_bytes(hlo_text: str) -> int:
 
     The CPU backend's ``bytes accessed`` counts every elementwise /
     convert / copy op a TPU backend would fuse away, inflating the memory
-    roofline term ~100x (measured; EXPERIMENTS.md §Methodology).  This
+    roofline term ~100x (measured; docs/EXPERIMENTS.md §Methodology).  This
     estimate counts only tensors that must stream from/to HBM:
 
       entry parameters (weights/caches read once)
@@ -151,7 +151,7 @@ def roofline_terms(flops: float, hbm_bytes: float, wire_bytes: float,
 
     ``memory_s`` uses the raw (unfused, upper-bound) bytes-accessed;
     ``memory_fused_s`` the fusion-aware estimate — the dominant term is
-    judged on the fused figure when available (EXPERIMENTS.md
+    judged on the fused figure when available (docs/EXPERIMENTS.md
     §Methodology)."""
     compute_s = flops / peak_flops
     memory_s = hbm_bytes / hbm_bw

@@ -22,7 +22,7 @@ def make_mesh(shape, axes):
         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
 
 
-# TPU v5e hardware constants (roofline; see EXPERIMENTS.md §Roofline)
+# TPU v5e hardware constants (roofline; see docs/EXPERIMENTS.md §Roofline)
 PEAK_FLOPS_BF16 = 197e12        # per chip
 HBM_BW = 819e9                  # bytes/s per chip
 ICI_BW = 50e9                   # bytes/s per link

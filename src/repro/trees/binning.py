@@ -1,9 +1,18 @@
 """Quantile binning for histogram-based tree training.
 
-Bin edges are computed per client on local data; learned split thresholds
-are stored as *raw feature values* so trees transfer across clients/servers
-without sharing the bin edges (required by the paper's tree-shipping
-protocols C2/C3).
+Two binning regimes coexist:
+
+* **Local bins** (``fit_bins``): edges computed per client on local data;
+  learned split thresholds are stored as *raw feature values* so trees
+  transfer across clients/servers without sharing the bin edges (required
+  by the paper's tree-shipping protocols C2/C3).
+* **Federated bins** (``quantile_sketch`` / ``merge_sketches`` /
+  ``fed_fit_bins``): clients ship fixed-size per-feature quantile
+  sketches, the server merges them (count-weighted) into one shared
+  ``edges`` array and broadcasts it back.  Identical bins on every client
+  are the prerequisite for exact histogram aggregation (``fed_hist``):
+  with shared edges, the sum of per-client grad/hess histograms equals
+  the histogram of the union of shards.
 """
 from __future__ import annotations
 
@@ -32,3 +41,70 @@ def edge_value(edges, feature, bin_idx):
     nb1 = edges.shape[1]
     idx = jnp.clip(bin_idx, 0, nb1 - 1)
     return edges[feature, idx]
+
+
+# --- federated binning (shared edges via merged quantile sketches) -----------
+
+def quantile_sketch(x, sketch_size: int = 128):
+    """Client-side: per-feature quantile summary.
+
+    x (n, F) -> (values (F, m), n) with m = ``sketch_size`` evenly spaced
+    local quantiles per feature.  The sketch (not raw rows) is the only
+    thing shipped to the server; its wire size is ``sketch_bytes``.
+    """
+    qs = jnp.linspace(0.0, 1.0, sketch_size)
+    vals = jnp.quantile(x, qs, axis=0).T  # (F, m)
+    return vals, int(x.shape[0])
+
+
+def sketch_bytes(sketch) -> int:
+    """Bytes-on-wire for one client sketch (values + the sample count)."""
+    vals, _ = sketch
+    return int(vals.size * vals.dtype.itemsize) + 4
+
+
+def merge_sketches(sketches, n_bins: int):
+    """Server-side: merge client sketches into shared edges (F, n_bins-1).
+
+    Each client's m sketch points are treated as weighted samples with
+    weight n_i/m, so larger shards pull the merged quantiles harder; the
+    merged edges converge to the centralized quantiles of the union as
+    sketch_size grows (tested against ``fit_bins`` on the union).
+    """
+    vals = jnp.stack([s[0] for s in sketches])                 # (C, F, m)
+    counts = jnp.asarray([float(s[1]) for s in sketches])
+    C, F, m = vals.shape
+    w = jnp.repeat(counts / m, m)                              # (C*m,)
+    v = vals.transpose(1, 0, 2).reshape(F, C * m)
+    order = jnp.argsort(v, axis=1)
+    sv = jnp.take_along_axis(v, order, axis=1)
+    sw = w[order]                                              # (F, C*m)
+    cw = jnp.cumsum(sw, axis=1)
+    # midpoint rule: point k sits at cumulative-weight fraction
+    # (cw_k - w_k/2) / total; interpolate edge levels between points
+    frac = (cw - sw / 2) / cw[:, -1:]
+    qs = jnp.linspace(0.0, 1.0, n_bins + 1)[1:-1]              # (n_bins-1,)
+    return jax.vmap(lambda fr, svf: jnp.interp(qs, fr, svf))(frac, sv)
+
+
+def fed_fit_bins(client_xs, n_bins: int, *, sketch_size: int = 128,
+                 comm=None, round_idx: int = 0):
+    """One federated-binning round: sketches up, shared edges down.
+
+    client_xs: sequence of (n_i, F) arrays.  When ``comm`` (a
+    ``repro.core.comm.CommLog``) is given, the exact sketch bytes (up)
+    and edge bytes (down) are logged per client — shared binning is a
+    communication round and is accounted like one.
+
+    Returns edges (F, n_bins-1) shared by every client.
+    """
+    sketches = [quantile_sketch(jnp.asarray(x), sketch_size)
+                for x in client_xs]
+    edges = merge_sketches(sketches, n_bins)
+    if comm is not None:
+        down = int(edges.size * edges.dtype.itemsize)
+        for i, s in enumerate(sketches):
+            comm.log(round_idx, f"c{i}", "up", sketch_bytes(s),
+                     "quantile-sketch")
+            comm.log(round_idx, f"c{i}", "down", down, "shared-edges")
+    return edges

@@ -20,6 +20,27 @@ class RandomForest(NamedTuple):
     forest: Tree  # stacked (k, ...)
 
 
+def bootstrap_masks(rng, num_trees: int, n: int, F: int,
+                    feature_frac: float = 0.0):
+    """Per-tree bootstrap weights and feature masks.
+
+    Returns (sample_w (num_trees, n), feat_mask (num_trees, F)).  Split
+    out of ``fit`` so the client-batched engine (``fit_batched``) can
+    draw the *identical* randomness per client before padding — the
+    sequential/batched parity contract depends on it.
+    """
+    k_boot, k_feat = jax.random.split(rng)
+    # bootstrap multiplicities ~ Binomial(n, 1/n) ≈ multinomial counts
+    idx = jax.random.randint(k_boot, (num_trees, n), 0, n)
+    sample_w = jax.vmap(
+        lambda ii: jnp.bincount(ii, length=n).astype(jnp.float32))(idx)
+    n_feat = max(int(feature_frac * F) if feature_frac else int(F ** 0.5), 1)
+    scores = jax.random.uniform(k_feat, (num_trees, F))
+    thresh = jnp.sort(scores, axis=1)[:, n_feat - 1:n_feat]
+    feat_mask = (scores <= thresh).astype(jnp.float32)
+    return sample_w, feat_mask
+
+
 def fit(x, y, *, num_trees: int = 100, depth: int = 8, n_bins: int = 64,
         lam: float = 1.0, rng=None, feature_frac: float = 0.0,
         hist_impl: str = "auto") -> RandomForest:
@@ -31,21 +52,45 @@ def fit(x, y, *, num_trees: int = 100, depth: int = 8, n_bins: int = 64,
     bins = binning.apply_bins(x, edges)
     grad = 0.5 - y.astype(jnp.float32)   # leaf value = mean(y) - 0.5
     hess = jnp.ones((n,), jnp.float32)
-    k_boot, k_feat = jax.random.split(rng)
-    # bootstrap multiplicities ~ Binomial(n, 1/n) ≈ multinomial counts
-    idx = jax.random.randint(k_boot, (num_trees, n), 0, n)
-    sample_w = jax.vmap(
-        lambda ii: jnp.bincount(ii, length=n).astype(jnp.float32))(idx)
-    n_feat = max(int(feature_frac * F) if feature_frac else int(F ** 0.5), 1)
-    scores = jax.random.uniform(k_feat, (num_trees, F))
-    thresh = jnp.sort(scores, axis=1)[:, n_feat - 1:n_feat]
-    feat_mask = (scores <= thresh).astype(jnp.float32)
-
+    sample_w, feat_mask = bootstrap_masks(rng, num_trees, n, F,
+                                          feature_frac)
     grown = jax.vmap(
         lambda w, fm: grow_tree(bins, edges, grad, hess, w, depth=depth,
                                 n_bins=n_bins, lam=lam, feature_mask=fm,
                                 hist_impl=hist_impl))(sample_w, feat_mask)
     return RandomForest(grown)
+
+
+def fit_batched(bins, edges, y, sample_w, feat_mask, *, depth: int = 8,
+                n_bins: int = 64, lam: float = 1.0,
+                hist_impl: str = "auto"):
+    """Client-batched bagging: C clients' forests grown in one call.
+
+    bins (C, n, F) pre-binned shards padded to a common n; edges
+    (C, F, n_bins-1) per-client; y (C, n); sample_w (C, T, n) bootstrap
+    weights with 0 on pad rows; feat_mask (C, T, F).  Tree growth is
+    ``vmap(clients) ∘ vmap(trees)`` over ``grow_tree`` — replacing the
+    per-client Python loop — and the histogram build inside runs through
+    the kernel's client-batched axis.
+
+    Returns a list of C ``RandomForest`` (unstacked, for the existing
+    per-client selection/shipping code).
+    """
+    C = bins.shape[0]
+    grad = 0.5 - y.astype(jnp.float32)
+    hess = jnp.ones(y.shape, jnp.float32)
+
+    def one_client(b, e, g, h, ws, fms):
+        return jax.vmap(
+            lambda w, fm: grow_tree(b, e, g, h, w, depth=depth,
+                                    n_bins=n_bins, lam=lam,
+                                    feature_mask=fm,
+                                    hist_impl=hist_impl))(ws, fms)
+
+    grown = jax.vmap(one_client)(bins, edges, grad, hess, sample_w,
+                                 feat_mask)
+    return [RandomForest(jax.tree.map(lambda a: a[c], grown))
+            for c in range(C)]
 
 
 def predict_proba(model: RandomForest, x) -> jnp.ndarray:

@@ -1,14 +1,14 @@
 """XGBoost-style GBDT (logistic loss, second-order) in pure JAX."""
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.trees import binning
 from repro.trees.growth import (Tree, grow_tree, predict_forest,
-                                stack_trees)
+                                predict_tree, stack_trees)
 
 
 class GBDT(NamedTuple):
@@ -17,20 +17,27 @@ class GBDT(NamedTuple):
     base_margin: float
 
 
-def fit(x, y, *, num_rounds: int = 50, depth: int = 6, n_bins: int = 64,
-        learning_rate: float = 0.3, lam: float = 1.0,
-        sample_w: Optional[jnp.ndarray] = None,
-        feature_mask: Optional[jnp.ndarray] = None,
-        hist_impl: str = "auto") -> GBDT:
-    """x (n,F) fp32, y (n,) {0,1}."""
-    n, F = x.shape
-    edges = binning.fit_bins(x, n_bins)
-    bins = binning.apply_bins(x, edges)
-    if sample_w is None:
-        sample_w = jnp.ones((n,), jnp.float32)
-    pos = jnp.clip(jnp.mean(y), 1e-4, 1 - 1e-4)
-    base = jnp.log(pos / (1 - pos))
-    margin = jnp.full((n,), base, jnp.float32)
+def _base_margin(y, sample_w):
+    """log-odds of the weighted positive rate (pads carry w = 0)."""
+    pos = jnp.clip(jnp.sum(y * sample_w, axis=-1)
+                   / jnp.maximum(jnp.sum(sample_w, axis=-1), 1e-9),
+                   1e-4, 1 - 1e-4)
+    return jnp.log(pos / (1 - pos))
+
+
+def fit_binned(x, y, bins, edges, sample_w, *, num_rounds: int = 50,
+               depth: int = 6, n_bins: int = 64,
+               learning_rate: float = 0.3, lam: float = 1.0,
+               feature_mask: Optional[jnp.ndarray] = None,
+               hist_impl: str = "auto") -> GBDT:
+    """Boost on pre-binned features (the shared-bins entry point).
+
+    x (n, F) raw fp32 (for margin updates via raw thresholds); bins
+    (n, F) int32 = ``binning.apply_bins(x, edges)``; sample_w (n,) fp32
+    with 0 excluding a sample (padding or subsampling).
+    """
+    base = _base_margin(y, sample_w)
+    margin = jnp.full(y.shape, base, jnp.float32)
     trees = []
     for _ in range(num_rounds):
         p = jax.nn.sigmoid(margin)
@@ -40,9 +47,63 @@ def fit(x, y, *, num_rounds: int = 50, depth: int = 6, n_bins: int = 64,
                          n_bins=n_bins, lam=lam, feature_mask=feature_mask,
                          hist_impl=hist_impl)
         trees.append(tree)
-        margin = margin + learning_rate * predict_forest(
-            jax.tree.map(lambda a: a[None], tree), x)[0]
+        margin = margin + learning_rate * predict_tree(tree, x)
     return GBDT(stack_trees(trees), learning_rate, float(base))
+
+
+def fit(x, y, *, num_rounds: int = 50, depth: int = 6, n_bins: int = 64,
+        learning_rate: float = 0.3, lam: float = 1.0,
+        sample_w: Optional[jnp.ndarray] = None,
+        feature_mask: Optional[jnp.ndarray] = None,
+        hist_impl: str = "auto") -> GBDT:
+    """x (n,F) fp32, y (n,) {0,1}.  Bins locally, then boosts."""
+    n, F = x.shape
+    edges = binning.fit_bins(x, n_bins)
+    bins = binning.apply_bins(x, edges)
+    if sample_w is None:
+        sample_w = jnp.ones((n,), jnp.float32)
+    return fit_binned(x, y, bins, edges, sample_w, num_rounds=num_rounds,
+                      depth=depth, n_bins=n_bins,
+                      learning_rate=learning_rate, lam=lam,
+                      feature_mask=feature_mask, hist_impl=hist_impl)
+
+
+def fit_batched(x, y, bins, edges, sample_w, *, num_rounds: int = 50,
+                depth: int = 6, n_bins: int = 64,
+                learning_rate: float = 0.3, lam: float = 1.0,
+                feature_mask: Optional[jnp.ndarray] = None,
+                hist_impl: str = "auto") -> List[GBDT]:
+    """Client-batched local boosting: C independent GBDTs in lockstep.
+
+    All inputs carry a leading client axis — x/bins (C, n, F), y/sample_w
+    (C, n) (shards padded to a common n with sample_w = 0), edges
+    (C, F, n_bins-1) per-client, feature_mask (C, F) or None.  Each round
+    grows all C trees in one vmapped ``grow_tree`` (the histogram build
+    runs client-batched through the kernel's client grid axis) instead of
+    a per-client Python loop; arithmetic per client is identical to
+    ``fit_binned``, which is the sequential parity path.
+
+    Returns one ``GBDT`` per client (unstacked).
+    """
+    C = x.shape[0]
+    base = _base_margin(y, sample_w)                   # (C,)
+    margin = jnp.broadcast_to(base[:, None], y.shape).astype(jnp.float32)
+    grow_v = jax.vmap(
+        lambda b, e, g, h, w, fm: grow_tree(
+            b, e, g, h, w, depth=depth, n_bins=n_bins, lam=lam,
+            feature_mask=fm, hist_impl=hist_impl),
+        in_axes=(0, 0, 0, 0, 0, None if feature_mask is None else 0))
+    trees = []
+    for _ in range(num_rounds):
+        p = jax.nn.sigmoid(margin)
+        grad = p - y
+        hess = p * (1 - p)
+        tree = grow_v(bins, edges, grad, hess, sample_w, feature_mask)
+        trees.append(tree)
+        margin = margin + learning_rate * jax.vmap(predict_tree)(tree, x)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs, axis=1), *trees)
+    return [GBDT(jax.tree.map(lambda a: a[c], stacked), learning_rate,
+                 float(base[c])) for c in range(C)]
 
 
 def predict_margin(model: GBDT, x) -> jnp.ndarray:

@@ -10,6 +10,25 @@ depth D has 2^D - 1 internal slots and 2^D leaves.  Growth is second-order
 Nodes with no positive-gain split store feature = -1 (all samples routed
 right, children inherit the node's value).  Thresholds are stored as raw
 feature values (see ``binning``).
+
+Two growers share the split-finding math (``_find_splits``):
+
+* ``grow_tree`` — one data shard (a client's local training, or
+  centralized training); histograms never leave the process.
+* ``grow_tree_fed`` — the histogram-aggregation federated grower: inputs
+  carry a leading client axis ``(C, n, ...)``, each level's per-client
+  histograms are built in one client-batched ``gradient_histogram`` call
+  (these (C, F, nodes*bins, 2) arrays are exactly what crosses the wire
+  in ``repro.core.fed_hist``), aggregated — plain sum, or a pluggable
+  ``hist_agg`` adding secure-agg masking / DP noise — and the server
+  picks splits from the aggregate.  With shared bins the summed
+  histogram equals the union-shard histogram, so the grown tree matches
+  centralized ``grow_tree`` on the concatenated shards.
+
+Shape conventions (client-batched paths): a leading ``C`` axis is always
+the client/shard axis — bins ``(C, n, F)``, grad/hess/sample_w ``(C, n)``,
+per-client histograms ``(C, F, n_nodes*n_bins, 2)``.  Padding rows carry
+``sample_w = 0`` and are invisible to growth (zero grad/hess mass).
 """
 from __future__ import annotations
 
@@ -39,6 +58,51 @@ def nbytes(tree: Tree) -> int:
     """Bytes-on-wire for transmitting this tree/forest (comm accounting)."""
     return int(sum(x.size * x.dtype.itemsize
                    for x in [tree.feature, tree.threshold, tree.leaf]))
+
+
+class _Splits(NamedTuple):
+    """Per-node split decisions for one level, from an aggregated hist."""
+    best_f: jnp.ndarray     # (n_nodes,) int32, -1 = no split
+    best_b: jnp.ndarray     # (n_nodes,) int32 split bin
+    do_split: jnp.ndarray   # (n_nodes,) bool
+    best_gain: jnp.ndarray  # (n_nodes,) f32
+    gl: jnp.ndarray         # (n_nodes,) grad sum of the left child
+    hl: jnp.ndarray
+    gt: jnp.ndarray         # (n_nodes,) node-total grad/hess
+    ht: jnp.ndarray
+
+
+def _find_splits(hist, n_nodes: int, n_bins: int, lam: float, gamma: float,
+                 min_child_weight: float,
+                 feature_mask: Optional[jnp.ndarray]) -> _Splits:
+    """hist (F, n_nodes*n_bins, 2) -> best split per node of the level."""
+    F = hist.shape[0]
+    hist = hist.reshape(F, n_nodes, n_bins, 2).transpose(1, 0, 2, 3)
+    g, h = hist[..., 0], hist[..., 1]
+    gl = jnp.cumsum(g, axis=-1)
+    hl = jnp.cumsum(h, axis=-1)
+    gt = gl[..., -1:]
+    ht = hl[..., -1:]
+    gr, hr = gt - gl, ht - hl
+    gain = 0.5 * (gl ** 2 / (hl + lam) + gr ** 2 / (hr + lam)
+                  - gt ** 2 / (ht + lam)) - gamma
+    valid = (hl >= min_child_weight) & (hr >= min_child_weight)
+    # never split on the last bin (empty right child by construction)
+    valid = valid & (jnp.arange(n_bins) < n_bins - 1)
+    if feature_mask is not None:
+        valid = valid & feature_mask.astype(bool)[None, :, None]
+    gain = jnp.where(valid, gain, -jnp.inf)
+    flat = gain.reshape(n_nodes, -1)
+    best = jnp.argmax(flat, axis=-1)
+    best_gain = jnp.take_along_axis(flat, best[:, None], 1)[:, 0]
+    best_f = (best // n_bins).astype(jnp.int32)
+    best_b = (best % n_bins).astype(jnp.int32)
+    do_split = best_gain > 0.0
+    pick = lambda a: jnp.take_along_axis(
+        a.reshape(n_nodes, -1), best[:, None], 1)[:, 0]
+    return _Splits(jnp.where(do_split, best_f, -1), best_b, do_split,
+                   best_gain, pick(gl), pick(hl), gt[..., 0, 0],
+                   ht[..., 0, 0])
 
 
 @functools.partial(jax.jit,
@@ -74,37 +138,17 @@ def grow_tree(bins, edges, grad, hess, sample_w, *, depth: int,
         combined = assign[:, None] * n_bins + bins     # (n, F)
         hist = gradient_histogram(combined, grad, hess, n_nodes * n_bins,
                                   impl=hist_impl)      # (F, nodes*bins, 2)
-        hist = hist.reshape(F, n_nodes, n_bins, 2).transpose(1, 0, 2, 3)
-        g, h = hist[..., 0], hist[..., 1]
-        gl = jnp.cumsum(g, axis=-1)
-        hl = jnp.cumsum(h, axis=-1)
-        gt = gl[..., -1:]
-        ht = hl[..., -1:]
-        gr, hr = gt - gl, ht - hl
-        gain = 0.5 * (gl ** 2 / (hl + lam) + gr ** 2 / (hr + lam)
-                      - gt ** 2 / (ht + lam)) - gamma
-        valid = (hl >= min_child_weight) & (hr >= min_child_weight)
-        # never split on the last bin (empty right child by construction)
-        valid = valid & (jnp.arange(n_bins) < n_bins - 1)
-        if feature_mask is not None:
-            valid = valid & feature_mask.astype(bool)[None, :, None]
-        gain = jnp.where(valid, gain, -jnp.inf)
-        flat = gain.reshape(n_nodes, -1)
-        best = jnp.argmax(flat, axis=-1)
-        best_gain = jnp.take_along_axis(flat, best[:, None], 1)[:, 0]
-        best_f = (best // n_bins).astype(jnp.int32)
-        best_b = (best % n_bins).astype(jnp.int32)
-        do_split = best_gain > 0.0
-        best_f = jnp.where(do_split, best_f, -1)
-        thr = binning.edge_value(edges, jnp.maximum(best_f, 0), best_b)
-        feats = feats.at[base + jnp.arange(n_nodes)].set(best_f)
+        s = _find_splits(hist, n_nodes, n_bins, lam, gamma,
+                         min_child_weight, feature_mask)
+        thr = binning.edge_value(edges, jnp.maximum(s.best_f, 0), s.best_b)
+        feats = feats.at[base + jnp.arange(n_nodes)].set(s.best_f)
         thrs = thrs.at[base + jnp.arange(n_nodes)].set(
-            jnp.where(do_split, thr, 0.0))
-        fgain = fgain.at[jnp.maximum(best_f, 0)].add(
-            jnp.where(do_split, jnp.maximum(best_gain, 0.0), 0.0))
+            jnp.where(s.do_split, thr, 0.0))
+        fgain = fgain.at[jnp.maximum(s.best_f, 0)].add(
+            jnp.where(s.do_split, jnp.maximum(s.best_gain, 0.0), 0.0))
         # route samples
-        nf = best_f[assign]                            # (n,)
-        nb = best_b[assign]
+        nf = s.best_f[assign]                          # (n,)
+        nb = s.best_b[assign]
         sample_bin = jnp.take_along_axis(
             bins, jnp.maximum(nf, 0)[:, None], axis=1)[:, 0]
         go_left = (nf >= 0) & (sample_bin <= nb)
@@ -115,6 +159,104 @@ def grow_tree(bins, edges, grad, hess, sample_w, *, depth: int,
     hsum = jax.ops.segment_sum(hess, assign, n_leaves)
     leaf = -gsum / (hsum + lam)
     return Tree(feats, thrs, leaf, fgain)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("depth", "n_bins", "hist_impl",
+                                    "batch_clients"))
+def grow_tree_fed(bins, edges, grad, hess, sample_w, *, depth: int,
+                  n_bins: int, lam: float = 1.0, gamma: float = 0.0,
+                  min_child_weight: float = 1e-3,
+                  feature_mask: Optional[jnp.ndarray] = None,
+                  hist_impl: str = "auto", hist_agg=None, agg_key=None,
+                  batch_clients: bool = True) -> Tree:
+    """Grow one tree on the server from aggregated client histograms.
+
+    bins (C, n, F) int32 client-stacked pre-binned features — **all
+    clients binned with the same shared edges** (see
+    ``binning.fed_fit_bins``); edges (F, n_bins-1); grad/hess/sample_w
+    (C, n) fp32 (pad rows carry sample_w = 0).
+
+    Per level, per-client histograms over the combined (node, bin) space
+    are built client-batched (``batch_clients=True``, one kernel call
+    with a leading client grid axis) or via a sequential per-client loop
+    (the parity reference), then aggregated:
+
+    * ``hist_agg=None`` — plain ``sum`` over the client axis.  With
+      shared bins this equals the union-shard histogram, so the result
+      matches centralized ``grow_tree`` on the concatenated shards.
+    * ``hist_agg(hists, key) -> hist`` — e.g. secure-agg masked sum or
+      DP-noised sum (``repro.core.fed_hist``); ``agg_key`` is folded
+      per level.  Pass a ``jax.tree_util.Partial`` so jit can trace it.
+
+    Leaf values are computed from the last level's *shipped* histograms
+    (left child = -G_L/(H_L+lam) at the chosen split, right child the
+    complement), so fed training communicates histograms only — no
+    per-leaf statistics round.
+    """
+    C, n, F = bins.shape
+    n_internal = 2 ** depth - 1
+    n_leaves = 2 ** depth
+
+    grad = grad * sample_w
+    hess = hess * sample_w
+    feats = jnp.full((n_internal,), -1, jnp.int32)
+    thrs = jnp.zeros((n_internal,), jnp.float32)
+    fgain = jnp.zeros((F,), jnp.float32)
+    leaf = jnp.zeros((n_leaves,), jnp.float32)
+    assign = jnp.zeros((C, n), jnp.int32)
+
+    for level in range(depth):
+        n_nodes = 2 ** level
+        base = n_nodes - 1
+        width = n_nodes * n_bins
+        combined = assign[:, :, None] * n_bins + bins  # (C, n, F)
+        if batch_clients:
+            hists = gradient_histogram(combined, grad, hess, width,
+                                       impl=hist_impl)  # (C, F, width, 2)
+        else:
+            hists = jnp.stack([
+                gradient_histogram(combined[c], grad[c], hess[c], width,
+                                   impl=hist_impl) for c in range(C)])
+        if hist_agg is None:
+            hist = jnp.sum(hists, axis=0)
+        else:
+            key = (jax.random.fold_in(agg_key, level)
+                   if agg_key is not None else None)
+            hist = hist_agg(hists, key)
+        s = _find_splits(hist, n_nodes, n_bins, lam, gamma,
+                         min_child_weight, feature_mask)
+        thr = binning.edge_value(edges, jnp.maximum(s.best_f, 0), s.best_b)
+        feats = feats.at[base + jnp.arange(n_nodes)].set(s.best_f)
+        thrs = thrs.at[base + jnp.arange(n_nodes)].set(
+            jnp.where(s.do_split, thr, 0.0))
+        fgain = fgain.at[jnp.maximum(s.best_f, 0)].add(
+            jnp.where(s.do_split, jnp.maximum(s.best_gain, 0.0), 0.0))
+        if level == depth - 1:
+            # leaves from the already-aggregated histograms: split nodes
+            # put -G_L/(H_L+lam) left and the complement right; no-split
+            # nodes route everything right with the node's newton value
+            gr, hr = s.gt - s.gl, s.ht - s.hl
+            left = jnp.where(s.do_split, -s.gl / (s.hl + lam), 0.0)
+            right = jnp.where(s.do_split, -gr / (hr + lam),
+                              -s.gt / (s.ht + lam))
+            leaf = jnp.stack([left, right], axis=1).reshape(-1)
+        # each client routes its own samples with the broadcast split
+        nf = s.best_f[assign]                          # (C, n)
+        nb = s.best_b[assign]
+        sample_bin = jnp.take_along_axis(
+            bins, jnp.maximum(nf, 0)[:, :, None], axis=2)[:, :, 0]
+        go_left = (nf >= 0) & (sample_bin <= nb)
+        assign = assign * 2 + jnp.where(go_left, 0, 1)
+
+    return Tree(feats, thrs, leaf, fgain)
+
+
+def fed_hist_bytes(n_features: int, n_bins: int, depth: int) -> int:
+    """Uplink bytes per client per tree under histogram aggregation:
+    one (F, 2^level * n_bins, 2) fp32 histogram per level."""
+    return sum(n_features * (2 ** level) * n_bins * 2 * 4
+               for level in range(depth))
 
 
 def predict_tree(tree: Tree, x) -> jnp.ndarray:

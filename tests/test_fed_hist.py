@@ -1,0 +1,256 @@
+"""Histogram-aggregation federated tree engine: federated-binning merge,
+fed_hist ≡ centralized GBDT over shared bins, client-batched histogram
+and tree-engine parity, privacy hooks, ledger accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fed_hist as FH
+from repro.core import feature_extract as FE
+from repro.core import tree_subset as TS
+from repro.core.comm import CommLog
+from repro.data import framingham as F
+from repro.kernels.hist.ops import gradient_histogram
+from repro.trees import binning, gbdt
+from repro.trees.growth import fed_hist_bytes, grow_tree, grow_tree_fed
+
+RNG = np.random.default_rng(7)
+
+
+def _clients(n=700, k=3, alpha=0.5, seed=0):
+    """Uneven (non-IID) client shards + a test split."""
+    ds = F.synthesize(n=n, seed=seed)
+    tr, te = F.train_test_split(ds)
+    cs = [(c.x, c.y) for c in F.partition_clients(tr, k, alpha=alpha)]
+    return cs, te
+
+
+# --- federated binning --------------------------------------------------------
+
+def test_merged_edges_match_centralized_quantiles():
+    """Server-merged sketch edges ≈ centralized quantiles of the union."""
+    xs = [RNG.normal(size=(n, 5)).astype(np.float32) * s + m
+          for n, s, m in [(900, 1.0, 0.0), (1400, 2.0, 1.0),
+                          (300, 0.5, -2.0)]]
+    edges = binning.fed_fit_bins(xs, 32, sketch_size=512)
+    cen = binning.fit_bins(jnp.asarray(np.concatenate(xs)), 32)
+    sd = float(np.concatenate(xs).std())
+    assert float(jnp.max(jnp.abs(edges - cen))) < 0.05 * sd
+    # edges ascending per feature
+    assert float(jnp.min(jnp.diff(edges, axis=1))) >= 0.0
+
+
+def test_merge_is_count_weighted():
+    """A 10x larger client must dominate the merged quantiles."""
+    big = RNG.normal(size=(2000, 3)).astype(np.float32)
+    small = (RNG.normal(size=(200, 3)) + 50).astype(np.float32)
+    edges = binning.merge_sketches(
+        [binning.quantile_sketch(jnp.asarray(big), 256),
+         binning.quantile_sketch(jnp.asarray(small), 256)], 16)
+    # ~91% of mass is the big client: the median edge sits near its data
+    med = float(edges[0, 7])
+    assert med < 5.0, med
+
+
+def test_fed_fit_bins_logs_sketch_and_edge_bytes():
+    comm = CommLog()
+    xs = [RNG.normal(size=(n, 4)).astype(np.float32) for n in (100, 300)]
+    edges = binning.fed_fit_bins(xs, 16, sketch_size=64, comm=comm)
+    per = comm.per_what_bytes()
+    assert per["quantile-sketch"] == 2 * (4 * 64 * 4 + 4)
+    assert per["shared-edges"] == 2 * edges.size * 4
+    assert comm.total_bytes("up") == per["quantile-sketch"]
+
+
+# --- client-batched histogram kernel -----------------------------------------
+
+def test_batched_hist_matches_per_client_loop():
+    """(C, n, F) input ≡ per-client loop, on both impl routes."""
+    bins = jnp.asarray(RNG.integers(0, 16, size=(3, 257, 5)), jnp.int32)
+    g = jnp.asarray(RNG.normal(size=(3, 257)), jnp.float32)
+    h = jnp.asarray(RNG.uniform(0.1, 1, size=(3, 257)), jnp.float32)
+    for impl in ("xla", "pallas_interpret"):
+        batched = gradient_histogram(bins, g, h, 16, impl=impl)
+        loop = jnp.stack([gradient_histogram(bins[c], g[c], h[c], 16,
+                                             impl=impl)
+                          for c in range(3)])
+        assert batched.shape == (3, 5, 16, 2)
+        np.testing.assert_allclose(np.asarray(batched), np.asarray(loop),
+                                   atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(gradient_histogram(bins, g, h, 16, impl="xla")),
+        np.asarray(gradient_histogram(bins, g, h, 16,
+                                      impl="pallas_interpret")),
+        atol=1e-4)
+
+
+# --- federated growth ≡ centralized growth -----------------------------------
+
+def test_grow_tree_fed_equals_centralized_on_union():
+    sizes = [300, 180, 240]
+    xs = [jnp.asarray(RNG.normal(size=(n, 6)), jnp.float32)
+          for n in sizes]
+    ys = [jnp.asarray((RNG.random(n) > 0.7).astype(np.float32))
+          for n in sizes]
+    edges = binning.fed_fit_bins(xs, 16, sketch_size=512)
+    ux, uy = jnp.concatenate(xs), jnp.concatenate(ys)
+    p = jnp.full_like(uy, 0.5)
+    cen = grow_tree(binning.apply_bins(ux, edges), edges, p - uy,
+                    p * (1 - p), jnp.ones_like(uy), depth=4, n_bins=16)
+    n_max = max(sizes)
+    pad = lambda a: jnp.pad(a, [(0, n_max - a.shape[0])]
+                            + [(0, 0)] * (a.ndim - 1))
+    bins_c = jnp.stack([pad(binning.apply_bins(x, edges)) for x in xs])
+    y_c = jnp.stack([pad(y) for y in ys])
+    w_c = jnp.stack([pad(jnp.ones(n, jnp.float32)) for n in sizes])
+    pc = jnp.full(y_c.shape, 0.5)
+    for batch in (True, False):
+        fed = grow_tree_fed(bins_c, edges, pc - y_c, pc * (1 - pc), w_c,
+                            depth=4, n_bins=16, batch_clients=batch)
+        np.testing.assert_array_equal(np.asarray(fed.feature),
+                                      np.asarray(cen.feature))
+        np.testing.assert_allclose(np.asarray(fed.threshold),
+                                   np.asarray(cen.threshold), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(fed.leaf),
+                                   np.asarray(cen.leaf), atol=1e-5)
+
+
+def test_fed_hist_matches_centralized_gbdt_and_ledger():
+    """The acceptance bar: fed_hist GBDT ≡ centralized GBDT on the union
+    of shards over the same shared bins, with histogram bytes accounted
+    in the ledger."""
+    clients, te = _clients()
+    cfg = FH.FedHistConfig(num_rounds=8, depth=4, n_bins=32,
+                           sketch_size=256, seed=0)
+    model, comm, _ = FH.train_federated_xgb_hist(clients, cfg)
+    # centralized twin: same shared edges, pooled shards
+    ux = np.concatenate([x for x, _ in clients])
+    uy = np.concatenate([y for _, y in clients])
+    edges = binning.fed_fit_bins([x for x, _ in clients], 32,
+                                 sketch_size=256)
+    cen = gbdt.fit_binned(jnp.asarray(ux), jnp.asarray(uy),
+                          binning.apply_bins(jnp.asarray(ux), edges),
+                          edges, jnp.ones(len(uy), jnp.float32),
+                          num_rounds=8, depth=4, n_bins=32)
+    mf = np.asarray(gbdt.predict_margin(model, jnp.asarray(te.x)))
+    mc = np.asarray(gbdt.predict_margin(cen, jnp.asarray(te.x)))
+    np.testing.assert_allclose(mf, mc, atol=1e-3)
+    f1_fed = FH.evaluate_fed_hist(model, te.x, te.y)["f1"]
+    f1_cen = FH.evaluate_fed_hist(cen, te.x, te.y)["f1"]
+    assert f1_fed == f1_cen
+    # ledger: per client per boosting round, exactly the per-level
+    # (F, 2^level * n_bins, 2) fp32 histograms
+    per_tree = fed_hist_bytes(15, 32, 4)
+    hist_events = [e for e in comm.events
+                   if e["what"] == "grad-hess-histograms"]
+    assert len(hist_events) == len(clients) * 8
+    assert all(e["bytes"] == per_tree for e in hist_events)
+    assert comm.per_what_bytes()["grad-hess-histograms"] == \
+        per_tree * len(clients) * 8
+    # sample-count independence: histogram uplink depends on
+    # (F, n_bins, depth) only
+    assert per_tree == sum(15 * 2 ** lv * 32 * 2 * 4 for lv in range(4))
+
+
+def test_fed_hist_engines_agree():
+    clients, te = _clients(n=500)
+    outs = {}
+    for engine in ("batched", "sequential"):
+        cfg = FH.FedHistConfig(num_rounds=4, depth=3, n_bins=16,
+                               engine=engine, seed=0)
+        model, comm, _ = FH.train_federated_xgb_hist(clients, cfg)
+        outs[engine] = (model, comm.total_bytes())
+    mb, ms = outs["batched"][0], outs["sequential"][0]
+    np.testing.assert_array_equal(np.asarray(mb.forest.feature),
+                                  np.asarray(ms.forest.feature))
+    np.testing.assert_allclose(np.asarray(mb.forest.leaf),
+                               np.asarray(ms.forest.leaf), atol=1e-5)
+    assert outs["batched"][1] == outs["sequential"][1]
+
+
+def test_fed_hist_privacy_hooks():
+    """Secure-agg masks cancel in the sum (model ≈ unmasked); DP noise
+    actually perturbs the grown trees."""
+    clients, te = _clients(n=500)
+    base_cfg = FH.FedHistConfig(num_rounds=3, depth=3, n_bins=16, seed=0)
+    plain, _, _ = FH.train_federated_xgb_hist(clients, base_cfg)
+    sec_cfg = FH.FedHistConfig(num_rounds=3, depth=3, n_bins=16, seed=0,
+                               secure_agg=True)
+    sec, _, _ = FH.train_federated_xgb_hist(clients, sec_cfg)
+    m_plain = np.asarray(gbdt.predict_margin(plain, jnp.asarray(te.x)))
+    m_sec = np.asarray(gbdt.predict_margin(sec, jnp.asarray(te.x)))
+    np.testing.assert_allclose(m_sec, m_plain, atol=1e-2)
+    dp_cfg = FH.FedHistConfig(num_rounds=3, depth=3, n_bins=16, seed=0,
+                              dp_epsilon=0.5, dp_sensitivity=1.0)
+    dp, _, _ = FH.train_federated_xgb_hist(clients, dp_cfg)
+    m_dp = np.asarray(gbdt.predict_margin(dp, jnp.asarray(te.x)))
+    assert float(np.max(np.abs(m_dp - m_plain))) > 1e-3
+
+
+# --- batched client-axis engines for the C2/C3 pipelines ----------------------
+
+def test_rf_engine_batched_matches_sequential():
+    """Identical forests and ledger bytes from both engines (uneven,
+    resampled shards included)."""
+    clients, _ = _clients()
+    out = {}
+    for engine in ("sequential", "batched"):
+        cfg = TS.FedForestConfig(trees_per_client=6, subset=4, depth=3,
+                                 n_bins=16, engine=engine, seed=0,
+                                 sampling="ros")
+        model, comm, _ = TS.train_federated_rf(clients, cfg)
+        out[engine] = (model, comm.total_bytes())
+    ms, mb = out["sequential"][0], out["batched"][0]
+    np.testing.assert_array_equal(np.asarray(ms.forest.feature),
+                                  np.asarray(mb.forest.feature))
+    np.testing.assert_allclose(np.asarray(ms.forest.threshold),
+                               np.asarray(mb.forest.threshold), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(ms.forest.leaf),
+                               np.asarray(mb.forest.leaf), atol=1e-5)
+    assert out["sequential"][1] == out["batched"][1]
+
+
+def test_xgb_engine_batched_matches_sequential():
+    """Dense fed-XGB and the C3 feature-extraction pipeline: same trees,
+    same selected features, same ledger bytes under both engines."""
+    clients, te = _clients(n=500)
+    res = {}
+    for engine in ("sequential", "batched"):
+        cfg = FE.FedXGBConfig(num_rounds=5, depth=3, shallow_depth=2,
+                              n_bins=16, engine=engine, seed=0)
+        dense, comm_d, _ = FE.train_federated_xgb(clients, cfg)
+        fe, comm_f, _ = FE.train_federated_xgb_fe(clients, cfg)
+        res[engine] = (dense, comm_d.total_bytes(), fe,
+                       comm_f.total_bytes())
+    ds_, db = res["sequential"][0], res["batched"][0]
+    for a, b in zip(ds_.models, db.models):
+        np.testing.assert_array_equal(np.asarray(a.forest.feature),
+                                      np.asarray(b.forest.feature))
+        np.testing.assert_allclose(np.asarray(a.forest.leaf),
+                                   np.asarray(b.forest.leaf), atol=1e-5)
+        assert abs(a.base_margin - b.base_margin) < 1e-6
+    assert res["sequential"][1] == res["batched"][1]
+    fs, fb = res["sequential"][2], res["batched"][2]
+    assert [t.tolist() for t in fs.top_features] == \
+        [t.tolist() for t in fb.top_features]
+    for a, b in zip(fs.trees, fb.trees):
+        np.testing.assert_array_equal(np.asarray(a.forest.feature),
+                                      np.asarray(b.forest.feature))
+    assert res["sequential"][3] == res["batched"][3]
+    # and both engines predict identically
+    np.testing.assert_array_equal(FE.predict_fe(fs, te.x),
+                                  FE.predict_fe(fb, te.x))
+
+
+def test_engine_rejects_unknown_names():
+    clients, _ = _clients(n=300)
+    import pytest
+    with pytest.raises(ValueError):
+        TS.train_federated_rf(clients, TS.FedForestConfig(
+            trees_per_client=2, subset=2, depth=2, engine="threads"))
+    with pytest.raises(ValueError):
+        FE.train_federated_xgb(clients, FE.FedXGBConfig(
+            num_rounds=1, depth=2, engine="threads"))
+    with pytest.raises(ValueError):
+        FH.train_federated_xgb_hist(clients, FH.FedHistConfig(
+            num_rounds=1, depth=2, engine="threads"))

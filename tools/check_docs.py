@@ -1,13 +1,20 @@
-"""Docs import-smoke: every module, attribute, and file path referenced
-in README.md and docs/*.md must actually exist.
+"""Docs reference check: every module, attribute, and file path referenced
+in the docs must exist — and every repo file referenced from *source*
+docstrings/comments must exist too (the ``EXPERIMENTS.md`` class of rot:
+a module citing a doc that was never written).
 
-Checks three reference kinds:
+Doc-side checks (README.md, DESIGN.md, docs/*.md):
   * dotted names (``repro.core.strategies.STRATEGIES``,
     ``benchmarks.run``) — the longest importable prefix is imported and
     any remaining parts are resolved with getattr;
   * ``python -m <module>`` commands — the module must import;
   * repo-relative file paths (``examples/quickstart.py``,
     ``docs/ARCHITECTURE.md``) — the file must exist.
+
+Source-side checks (src/, examples/, benchmarks/, tests/, tools/):
+  * repo-relative file paths, as above;
+  * bare UPPERCASE doc names (``DESIGN.md``, ``EXPERIMENTS.md``) —
+    resolved against the repo root, then ``docs/``.
 
 Run:  PYTHONPATH=src python tools/check_docs.py
 Exits non-zero listing every broken reference.
@@ -21,13 +28,17 @@ import re
 import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-DOC_GLOBS = ["README.md", "docs/*.md"]
+DOC_GLOBS = ["README.md", "DESIGN.md", "docs/*.md"]
+SRC_GLOBS = ["src/**/*.py", "examples/*.py", "benchmarks/*.py",
+             "tests/*.py", "tools/*.py"]
 DOTTED = re.compile(r"\b((?:repro|benchmarks)(?:\.\w+)+)")
 # only resolve repo-local modules: third-party tools invoked via -m
 # (e.g. pytest) are not part of the docs import-smoke contract
 PY_M = re.compile(r"python\s+-m\s+((?:repro|benchmarks)(?:\.\w+)*)")
 PATH = re.compile(
     r"\b((?:src|examples|benchmarks|docs|tests|tools)/[\w/.-]+\.(?:py|md))")
+# bare top-level doc names cited from docstrings ("DESIGN.md §Data-gate")
+BARE_MD = re.compile(r"\b([A-Z][A-Z0-9_+-]+\.md)\b")
 
 
 def check_dotted(name: str) -> str:
@@ -48,6 +59,19 @@ def check_dotted(name: str) -> str:
     return f"{name}: no importable prefix"
 
 
+def check_file_refs(text: str) -> list:
+    """Broken repo-file references (paths + bare doc names) in text."""
+    errors = []
+    for path in sorted(set(PATH.findall(text))):
+        if not os.path.exists(os.path.join(ROOT, path)):
+            errors.append(f"missing file {path}")
+    for name in sorted(set(BARE_MD.findall(text))):
+        if not (os.path.exists(os.path.join(ROOT, name))
+                or os.path.exists(os.path.join(ROOT, "docs", name))):
+            errors.append(f"missing doc {name} (not at repo root or docs/)")
+    return errors
+
+
 def main() -> int:
     sys.path.insert(0, os.path.join(ROOT, "src"))
     sys.path.insert(0, ROOT)  # for benchmarks.*
@@ -65,12 +89,17 @@ def main() -> int:
             err = check_dotted(name.rstrip("."))
             if err:
                 errors.append(f"{rel}: {err}")
-        for path in sorted(set(PATH.findall(text))):
-            if not os.path.exists(os.path.join(ROOT, path)):
-                errors.append(f"{rel}: missing file {path}")
+        errors.extend(f"{rel}: {e}" for e in check_file_refs(text))
+    sources = sorted(p for g in SRC_GLOBS
+                     for p in glob.glob(os.path.join(ROOT, g),
+                                        recursive=True))
+    for src in sources:
+        rel = os.path.relpath(src, ROOT)
+        errors.extend(f"{rel}: {e}"
+                      for e in check_file_refs(open(src).read()))
     for e in errors:
         print(f"BROKEN  {e}", file=sys.stderr)
-    print(f"checked {len(docs)} docs: "
+    print(f"checked {len(docs)} docs + {len(sources)} source files: "
           f"{'FAIL' if errors else 'ok'} ({len(errors)} broken refs)")
     return 1 if errors else 0
 
