@@ -1,6 +1,8 @@
 """Federated-engine benchmark: sequential per-pod loop vs the batched
-vmapped client-parallel round, plus a strategy / wire-format sweep and
-the tree engines (client-batched RF rounds, ``fed_hist`` GBDT).
+vmapped client-parallel round, a strategy / wire-format sweep, the tree
+engines (client-batched RF rounds, ``fed_hist`` GBDT), and the
+FedRuntime axes — uniform-k vs full participation and transport-stack
+variants — reporting ledger MB and F1 deltas.
 
 Each row is ``(name, us_per_round, derived)`` in the harness CSV shape.
 Engine rows time local training only (``round_s`` from ``simulate``,
@@ -9,8 +11,14 @@ tree rows time local forest growth / server tree growth the same way and
 carry bytes-per-round from the CommLog ledger.
 
 Run standalone:  PYTHONPATH=src python -m benchmarks.fed_engine_bench
+Parity gate:     PYTHONPATH=src python -m benchmarks.fed_engine_bench --smoke
+(the CI smoke job; exits non-zero if the batched engines or the
+runtime-routed pipelines drift from their parity references).
 """
 from __future__ import annotations
+
+import argparse
+import sys
 
 from repro.launch.fed_train import simulate, simulate_fed_hist
 
@@ -19,6 +27,15 @@ COMMON = dict(n_pods=4, rounds=3, local_steps=4, batch=2, seq=64,
               verbose=False, seed=0)
 TREE_COMMON = dict(n_clients=4, rounds=8, depth=4, n_bins=32,
                    n_records=1200, verbose=False, seed=0)
+PARAM_COMMON = dict(rounds=6, local_steps=10, lr=0.05)
+
+
+def _framingham_clients(n_clients=4, n=1200):
+    from repro.data import framingham as F
+    ds = F.synthesize(n=n, seed=0)
+    tr, te = F.train_test_split(ds)
+    clients = [(c.x, c.y) for c in F.partition_clients(tr, n_clients)]
+    return clients, (te.x, te.y)
 
 
 def _tree_engine_rows() -> list:
@@ -26,12 +43,9 @@ def _tree_engine_rows() -> list:
     import time
 
     from repro.core import tree_subset as TS
-    from repro.data import framingham as F
 
-    ds = F.synthesize(n=TREE_COMMON["n_records"], seed=0)
-    tr, _ = F.train_test_split(ds)
-    clients = [(c.x, c.y) for c in F.partition_clients(
-        tr, TREE_COMMON["n_clients"])]
+    clients, _ = _framingham_clients(TREE_COMMON["n_clients"],
+                                     TREE_COMMON["n_records"])
     rows = []
     for engine in ("sequential", "batched"):
         cfg = TS.FedForestConfig(trees_per_client=16, subset=16, depth=4,
@@ -58,6 +72,48 @@ def _fed_hist_rows() -> list:
     return rows
 
 
+def _participation_rows() -> list:
+    """Uniform-k vs full participation on the tabular parametric
+    pipeline: ledger MB and the F1 cost of seeing fewer hospitals."""
+    from repro.core import parametric as P
+
+    clients, test = _framingham_clients()
+    rows, f1_full = [], None
+    for part in ("full", "uniform:2", "stratified:2", "dropout:0.3:0.5"):
+        cfg = P.FedParametricConfig(model="logreg", sampling="ros",
+                                    participation=part, **PARAM_COMMON)
+        _, comm, hist, timer = P.train_federated(clients, cfg, test=test)
+        f1 = hist[-1]["f1"] if hist else float("nan")
+        f1_full = f1_full if f1_full is not None else f1
+        rows.append((f"fed_participation/{part.replace(':', '_')}",
+                     timer.total_s / PARAM_COMMON["rounds"] * 1e6,
+                     f"ledger_mb={comm.total_mb():.3f};f1={f1:.3f};"
+                     f"df1_vs_full={f1 - f1_full:+.3f}"))
+    return rows
+
+
+def _transport_rows() -> list:
+    """Transport-stack variants on the parametric pipeline: what each
+    layer stack costs in ledger MB and F1 vs the plain wire."""
+    from repro.core import parametric as P
+
+    clients, test = _framingham_clients()
+    rows, f1_plain = [], None
+    for tname in ("plain", "framed", "sparse", "quant", "secure_dp",
+                  "full_stack"):
+        cfg = P.FedParametricConfig(model="logreg", sampling="ros",
+                                    transport=tname, dp_clip=2.0,
+                                    **PARAM_COMMON)
+        _, comm, hist, _ = P.train_federated(clients, cfg, test=test)
+        f1 = hist[-1]["f1"] if hist else float("nan")
+        f1_plain = f1_plain if f1_plain is not None else f1
+        rows.append((f"fed_transport/{tname}", 0.0,
+                     f"ledger_mb={comm.total_mb():.3f};"
+                     f"up_mb={comm.uplink_mb():.3f};f1={f1:.3f};"
+                     f"df1_vs_plain={f1 - f1_plain:+.3f}"))
+    return rows
+
+
 def run(arch: str = ARCH) -> list:
     rows = []
     for engine in ("sequential", "vmap"):
@@ -80,10 +136,106 @@ def run(arch: str = ARCH) -> list:
                      f"vs_dense={dense_mb/max(out['uplink_mb'],1e-9):.1f}x"))
     rows.extend(_tree_engine_rows())
     rows.extend(_fed_hist_rows())
+    rows.extend(_participation_rows())
+    rows.extend(_transport_rows())
     return rows
 
 
+def smoke(arch: str = ARCH) -> int:
+    """CPU parity gate (the CI job): batched engines must match their
+    sequential references and the runtime-routed pipelines must keep
+    their exact ledger accounting.  Returns a process exit code."""
+    import jax
+    import numpy as np
+
+    failures = []
+
+    def check(name, fn):
+        try:
+            fn()
+            print(f"  ok   {name}")
+        except Exception as e:  # noqa: BLE001 — report, don't crash
+            failures.append((name, e))
+            print(f"  FAIL {name}: {e}")
+
+    lm = dict(n_pods=2, rounds=2, local_steps=3, batch=2, seq=64,
+              verbose=False, seed=0)
+
+    def lm_parity():
+        v = simulate(arch, engine="vmap", **lm)
+        s = simulate(arch, engine="sequential", **lm)
+        np.testing.assert_allclose(v["loss_history"], s["loss_history"],
+                                   rtol=1e-5)
+        assert v["comm"].total_bytes() == s["comm"].total_bytes()
+        for a, b in zip(jax.tree.leaves(v["final_params"]),
+                        jax.tree.leaves(s["final_params"])):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       atol=1e-5)
+
+    def lm_ledger():
+        out = simulate(arch, compression="int8_sr", **lm)
+        n_leaves = len(jax.tree.leaves(out["final_params"]))
+        n_elems = sum(x.size
+                      for x in jax.tree.leaves(out["final_params"]))
+        ups = [e for e in out["comm"].events if e["direction"] == "up"]
+        assert all(e["bytes"] == n_elems + 4 * n_leaves for e in ups)
+
+    def tree_parity():
+        from repro.core import tree_subset as TS
+        clients, _ = _framingham_clients(3, 600)
+        out = {}
+        for engine in ("sequential", "batched"):
+            cfg = TS.FedForestConfig(trees_per_client=4, subset=3,
+                                     depth=3, n_bins=16, engine=engine,
+                                     seed=0)
+            model, comm, _ = TS.train_federated_rf(clients, cfg)
+            out[engine] = (model, comm.total_bytes())
+        ms, mb = out["sequential"][0], out["batched"][0]
+        np.testing.assert_array_equal(np.asarray(ms.forest.feature),
+                                      np.asarray(mb.forest.feature))
+        assert out["sequential"][1] == out["batched"][1]
+
+    def hist_parity():
+        tiny = dict(n_clients=3, rounds=3, depth=3, n_bins=16,
+                    n_records=500, verbose=False, seed=0)
+        outs = {e: simulate_fed_hist(engine=e, **tiny)
+                for e in ("sequential", "batched")}
+        assert outs["sequential"]["comm"].total_bytes() == \
+            outs["batched"]["comm"].total_bytes()
+        assert outs["sequential"]["metrics"]["f1"] == \
+            outs["batched"]["metrics"]["f1"]
+
+    def runtime_participation():
+        from repro.core import parametric as P
+        clients, _ = _framingham_clients(4, 600)
+        full = P.FedParametricConfig(model="logreg", rounds=3,
+                                     local_steps=4)
+        sub = P.FedParametricConfig(model="logreg", rounds=3,
+                                    local_steps=4,
+                                    participation="uniform:2")
+        _, cf, _, _ = P.train_federated(clients, full)
+        _, cs, _, _ = P.train_federated(clients, sub)
+        assert cs.total_bytes() * 2 == cf.total_bytes()
+
+    print("fed_engine_bench --smoke (parity gate)")
+    check("lm vmap == sequential", lm_parity)
+    check("lm int8_sr ledger exact", lm_ledger)
+    check("rf batched == sequential", tree_parity)
+    check("fed_hist batched == sequential", hist_parity)
+    check("runtime uniform-k halves ledger", runtime_participation)
+    print(f"{len(failures)} parity regressions")
+    return 1 if failures else 0
+
+
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CPU parity gate for CI; exits non-zero "
+                    "on regressions")
+    args = ap.parse_args()
+    if args.smoke:
+        sys.exit(smoke())
     print("name,us_per_round,derived")
     for r in run():
         print(f"{r[0]},{r[1]:.1f},{r[2]}")

@@ -101,6 +101,31 @@ def main():
     print(f"  XGB hist + secure-agg + DP(eps=0.5): F1={eh2['f1']:.3f} "
           f"(noisy histograms cost accuracy)")
 
+    print("\n-- scenario diversity (FedRuntime axes) --")
+    # partial participation + layered transport on the parametric
+    # pipeline; site-shifted shards for fed_hist (docs/EXPERIMENTS.md
+    # §Scenarios)
+    for part, trans in [("full", "plain"), ("uniform:2", "plain"),
+                        ("dropout:0.3:0.5", "plain"),
+                        ("full", "full_stack")]:
+        cfg = P.FedParametricConfig(model="logreg", rounds=n_rounds,
+                                    local_steps=40, lr=0.05,
+                                    sampling="ros", participation=part,
+                                    transport=trans, dp_clip=2.0)
+        _, comm, hist, _ = P.train_federated(clients, cfg, test=test)
+        f1 = hist[-1]["f1"] if hist else float("nan")
+        print(f"  logreg part={part:15s} transport={trans:10s}: "
+              f"F1={f1:.3f} ledger={comm.total_mb():.2f}MB")
+    from repro.data import partition as DP
+    site = [(c.x, c.y) for c in DP.partition_dataset("site", tr, 3,
+                                                     seed=2)]
+    hcfg_site = FH.FedHistConfig(num_rounds=n_rounds, depth=4, n_bins=32,
+                                 participation="uniform:2")
+    hm3, ch3, _ = FH.train_federated_xgb_hist(site, hcfg_site)
+    eh3 = FH.evaluate_fed_hist(hm3, te.x, te.y)
+    print(f"  fed_hist site-shift + uniform:2: F1={eh3['f1']:.3f} "
+          f"uplink={ch3.uplink_mb():.2f}MB")
+
     print("\n-- federated SMOTE sync vs local SMOTE (skewed non-IID) --")
     skewed = F.partition_clients(tr, 3, alpha=0.3)
     sk_clients = [(c.x, c.y) for c in skewed]

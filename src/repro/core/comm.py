@@ -1,19 +1,37 @@
-"""Communication accounting: bytes-on-wire per round, per client, per
-direction — the paper's Comm(MB) columns and the 70% / 3.2x claims are
-measured against this ledger (never against constants)."""
+"""Communication accounting and the layered wire transport.
+
+Ledger: bytes-on-wire per round, per client, per direction — the paper's
+Comm(MB) columns and the 70% / 3.2x claims are measured against this
+ledger (never against constants).
+
+Transport: every client→server payload crosses a declarative **layer
+stack** (codec/sparsifier → secure-agg mask → DP noise → frame).  Each
+layer transforms the payload and/or its exact wire size; the engine logs
+the size the *last* layer reports, so every byte still lands in the same
+``CommLog``.  Stacks are composed from :data:`LAYERS` by a ``>``-joined
+spec string and selected by name through :data:`TRANSPORTS` /
+:func:`get_transport` — shared by the parametric pipelines (float update
+pytrees) and the tree pipelines (histograms, shipped forests).
+"""
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Dict, List
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import numpy as np
 
 
 def pytree_bytes(tree) -> int:
-    return int(sum(np.asarray(x).size * np.asarray(x).dtype.itemsize
-                   for x in jax.tree.leaves(tree)))
+    """Exact dense wire size of a pytree (per-round ledger hot path —
+    each leaf is inspected once, without materializing a copy)."""
+    total = 0
+    for x in jax.tree.leaves(tree):
+        if not (hasattr(x, "size") and hasattr(x, "dtype")):
+            x = np.asarray(x)
+        total += x.size * np.dtype(x.dtype).itemsize
+    return int(total)
 
 
 @dataclass
@@ -63,3 +81,259 @@ class Timer:
 
     def __exit__(self, *exc):
         self.total_s += time.perf_counter() - self._t0
+
+
+# --- layered wire transport ---------------------------------------------------
+
+@dataclass
+class WireCtx:
+    """Per-message context a layer may consult.
+
+    ``client`` is the global client id; ``slot``/``n_active`` locate the
+    client inside *this round's* active set (pairwise secure-agg masks
+    must cancel among the clients that actually ship), ``weight_scale``
+    is the pre-folded combine weight for weighted strategies, and
+    ``sensitivity`` calibrates server-side DP noise."""
+    round: int = 0
+    client: int = 0
+    slot: int = 0
+    n_active: int = 1
+    seed: int = 0
+    weight_scale: float = 1.0
+    sensitivity: float = 1.0
+
+
+@dataclass
+class WireMsg:
+    """A payload in flight: dense (decodable) representation + the exact
+    bytes it occupies on the wire + per-client codec state (e.g. top-k
+    error-feedback residuals) threaded round-to-round."""
+    payload: Any
+    nbytes: int
+    state: Any = None
+
+
+class TransportLayer:
+    """One stage of the client→server pipeline.
+
+    ``encode`` runs client-side before upload; ``post_aggregate`` runs
+    server-side on the aggregated payload (e.g. DP noise on the mean).
+    ``kind`` is 'float' for layers that transform float update pytrees
+    and 'bytes' for layers that only touch the wire size — only 'bytes'
+    layers apply to opaque payloads (shipped forests, histograms)."""
+    name = "layer"
+    kind = "float"
+
+    def encode(self, msg: WireMsg, ctx: WireCtx) -> WireMsg:
+        return msg
+
+    def post_aggregate(self, payload, ctx: WireCtx):
+        return payload
+
+
+class CodecLayer(TransportLayer):
+    """Wire-format codec/sparsifier from ``compression.WIRE_FORMATS``
+    (topk / lowrank / int8 / int8_sr).  Sets ``nbytes`` to the format's
+    true serialized size; at most one codec per stack (each reports the
+    size of its *input* representation, so stacking them double-counts)."""
+
+    def __init__(self, fmt: str, rho: float = 0.05, rank: int = 8):
+        from repro.core.compression import WIRE_FORMATS
+        if fmt not in WIRE_FORMATS:
+            raise KeyError(f"unknown wire format {fmt!r}; "
+                           f"available: {sorted(WIRE_FORMATS)}")
+        self.name, self.fmt, self.rho, self.rank = fmt, fmt, rho, rank
+
+    def encode(self, msg, ctx):
+        from repro.core.compression import compress_update
+        approx, state, nb = compress_update(
+            self.fmt, msg.payload, msg.state, rho=self.rho, rank=self.rank,
+            seed=ctx.seed * 100003 + ctx.round * 1000 + ctx.client)
+        return WireMsg(approx, nb, state)
+
+
+class ClipLayer(TransportLayer):
+    """Client-side L2 clip (the DP sensitivity bound)."""
+    name = "clip"
+
+    def __init__(self, clip: float = 1.0):
+        self.clip = clip
+
+    def encode(self, msg, ctx):
+        from repro.core import privacy
+        clipped, _ = privacy.clip_update(msg.payload, self.clip)
+        return replace(msg, payload=clipped)
+
+
+class WeightLayer(TransportLayer):
+    """Fold the client's combine weight into the payload *before* any
+    masking, so the masked sum is already the weighted sum."""
+    name = "weight"
+
+    def encode(self, msg, ctx):
+        w = ctx.weight_scale
+        return replace(msg, payload=jax.tree.map(lambda t: t * w,
+                                                 msg.payload))
+
+
+class MaskLayer(TransportLayer):
+    """Bonawitz-style pairwise secure-agg masks over this round's active
+    set; masks cancel in the server's sum (``privacy.mask_update``)."""
+    name = "mask"
+
+    def encode(self, msg, ctx):
+        from repro.core import privacy
+        masked = privacy.mask_update(msg.payload, ctx.slot, ctx.n_active,
+                                     ctx.seed * 7919 + ctx.round)
+        return replace(msg, payload=masked)
+
+
+class DPNoiseLayer(TransportLayer):
+    """Server-side Gaussian DP noise on the aggregated payload,
+    calibrated by ``ctx.sensitivity`` (the engine supplies
+    ``clip * max(weight)``)."""
+    name = "dpnoise"
+
+    def __init__(self, epsilon: float = 0.5, delta: float = 1e-5):
+        self.epsilon, self.delta = epsilon, delta
+
+    def post_aggregate(self, payload, ctx):
+        from repro.core import privacy
+        return privacy.add_dp_noise(payload, self.epsilon, self.delta,
+                                    ctx.sensitivity,
+                                    ctx.seed * 31 + ctx.round)
+
+
+class FrameLayer(TransportLayer):
+    """Wire framing overhead: per-message header (length + sequence +
+    auth tag).  A 'bytes' layer — applies to any payload kind."""
+    name = "frame"
+    kind = "bytes"
+
+    def __init__(self, header: int = 28):
+        self.header = header
+
+    def encode(self, msg, ctx):
+        return replace(msg, nbytes=msg.nbytes + self.header)
+
+
+#: layer name -> factory(cfg dict) -> TransportLayer.  cfg keys are the
+#: engine's transport knobs (rho/rank for codecs, dp_* for privacy,
+#: frame_header for framing); unknown keys are ignored per layer.
+LAYERS: Dict[str, Callable[[dict], TransportLayer]] = {
+    "topk": lambda c: CodecLayer("topk", rho=c.get("rho", 0.05)),
+    "lowrank": lambda c: CodecLayer("lowrank", rank=c.get("rank", 8)),
+    "int8": lambda c: CodecLayer("int8"),
+    "int8_sr": lambda c: CodecLayer("int8_sr"),
+    "clip": lambda c: ClipLayer(c.get("dp_clip", 1.0)),
+    "weight": lambda c: WeightLayer(),
+    "mask": lambda c: MaskLayer(),
+    "dpnoise": lambda c: DPNoiseLayer(c.get("dp_epsilon", 0.5),
+                                      c.get("dp_delta", 1e-5)),
+    "frame": lambda c: FrameLayer(c.get("frame_header", 28)),
+}
+
+#: named transport presets -> '>'-joined layer specs.  Any spec string
+#: built from :data:`LAYERS` names is also accepted directly.
+TRANSPORTS: Dict[str, str] = {
+    "plain": "",
+    "framed": "frame",
+    "sparse": "topk",
+    "quant": "int8_sr",
+    "secure": "mask",
+    "dp": "clip>dpnoise",
+    "secure_dp": "clip>mask>dpnoise",
+    "full_stack": "topk>clip>mask>dpnoise>frame",
+}
+
+
+@dataclass
+class Transport:
+    """An ordered layer stack.  ``encode`` runs the client side and
+    returns the final :class:`WireMsg` (its ``nbytes`` is what the
+    ledger records); ``post_aggregate`` runs the server side on the
+    aggregated payload."""
+    name: str
+    layers: List[TransportLayer]
+
+    def encode(self, payload, *, nbytes: Optional[int] = None,
+               state: Any = None, ctx: Optional[WireCtx] = None) -> WireMsg:
+        msg = WireMsg(payload,
+                      pytree_bytes(payload) if nbytes is None else nbytes,
+                      state)
+        ctx = ctx or WireCtx()
+        for layer in self.layers:
+            msg = layer.encode(msg, ctx)
+        return msg
+
+    def post_aggregate(self, payload, ctx: Optional[WireCtx] = None):
+        ctx = ctx or WireCtx()
+        for layer in self.layers:
+            payload = layer.post_aggregate(payload, ctx)
+        return payload
+
+    @property
+    def frame_overhead(self) -> int:
+        """Per-message byte overhead from 'bytes' layers (framing)."""
+        return sum(l.header for l in self.layers
+                   if isinstance(l, FrameLayer))
+
+    def require_bytes_only(self, pipeline: str):
+        """Tree-shipping pipelines move opaque forest payloads: only
+        size-level layers apply; float-transform layers are an error."""
+        bad = [l.name for l in self.layers if l.kind != "bytes"]
+        if bad:
+            raise ValueError(
+                f"transport {self.name!r} has float-payload layers {bad} "
+                f"which do not apply to the {pipeline} pipeline "
+                f"(shipped trees are not float update pytrees); use "
+                f"size-level layers only (e.g. 'frame')")
+
+    def hist_params(self) -> Dict[str, Any]:
+        """Map the stack onto fed_hist's in-jit histogram aggregation.
+
+        Histogram aggregation runs fused inside ``grow_tree_fed``, so
+        mask/dpnoise layers are executed there (same math: ring masks
+        cancel in the sum, Gaussian noise on the aggregate) rather than
+        through ``encode``.  Clip layers are no-ops (per-sample
+        grad/hess contributions are already bounded — the configured DP
+        sensitivity covers them); codec layers are unsupported."""
+        codecs = [l.name for l in self.layers if isinstance(l, CodecLayer)]
+        if codecs:
+            raise ValueError(
+                f"transport {self.name!r}: codec layers {codecs} are not "
+                f"supported for histogram payloads (fed_hist histograms "
+                f"aggregate inside the jitted tree growth); use "
+                f"mask/dpnoise/frame layers")
+        dp = next((l for l in self.layers if isinstance(l, DPNoiseLayer)),
+                  None)
+        return {"secure": any(isinstance(l, MaskLayer)
+                              for l in self.layers),
+                "dp_epsilon": dp.epsilon if dp else 0.0,
+                "dp_delta": dp.delta if dp else 1e-5,
+                "frame_overhead": self.frame_overhead}
+
+
+def get_transport(spec, **cfg) -> Transport:
+    """Resolve a transport: a :class:`Transport` (returned as-is), a
+    preset name from :data:`TRANSPORTS`, or a ``>``-joined spec string of
+    :data:`LAYERS` names (``"topk>mask>frame"``).  ``cfg`` carries layer
+    knobs (rho, rank, dp_clip, dp_epsilon, dp_delta, frame_header)."""
+    if isinstance(spec, Transport):
+        return spec
+    name = spec if spec else "plain"
+    resolved = TRANSPORTS.get(name, name if spec else "")
+    tokens = [t.strip() for t in resolved.split(">") if t.strip()]
+    unknown = [t for t in tokens if t not in LAYERS]
+    if unknown:
+        raise KeyError(f"unknown transport {spec!r} (layers {unknown}); "
+                       f"presets: {sorted(TRANSPORTS)}, "
+                       f"layers: {sorted(LAYERS)}")
+    layers = [LAYERS[t](cfg) for t in tokens]
+    n_codecs = sum(isinstance(l, CodecLayer) for l in layers)
+    if n_codecs > 1:
+        raise ValueError(f"transport {spec!r} stacks {n_codecs} codec "
+                         f"layers; each codec reports the wire size of "
+                         f"its input representation, so at most one is "
+                         f"allowed per stack")
+    return Transport(name, layers)

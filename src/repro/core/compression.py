@@ -140,8 +140,8 @@ def int8_sr_compress(delta, seed: int = 0):
 
 def dense_bytes(tree) -> int:
     """Exact uncompressed wire size of a pytree, in bytes."""
-    return int(sum(np.asarray(x).size * np.asarray(x).dtype.itemsize
-                   for x in jax.tree.leaves(tree)))
+    from repro.core.comm import pytree_bytes
+    return pytree_bytes(tree)
 
 
 # --- wire-format registry -----------------------------------------------------

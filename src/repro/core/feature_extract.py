@@ -10,6 +10,11 @@ A dense federated-XGBoost baseline (every boosted tree shipped, clients'
 margins averaged) is implemented alongside so the 3.2x reduction is a
 measured before/after.
 
+Both protocols are one-shot rounds on the shared
+:class:`~repro.core.runtime.FedRuntime` (``cfg.participation`` selects
+the contributing clients, ``cfg.transport`` applies size-level wire
+layers to the shipped ensembles).
+
 Local boosting runs under two engines (``FedXGBConfig.engine``):
 ``"batched"`` (default) pads client shards to a common length and boosts
 every client in lockstep through ``gbdt.fit_batched`` — one vmapped
@@ -27,8 +32,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.comm import CommLog, Timer
 from repro.core.metrics import binary_metrics
+from repro.core.runtime import ClientMsg, ClientWork, FedRuntime, ServerAgg
 from repro.data import sampling as S
 from repro.trees import binning, gbdt
 from repro.trees.growth import nbytes
@@ -50,6 +55,8 @@ class FedXGBConfig:
     # | pallas_interpret | xla (see repro.kernels.hist.ops)
     engine: str = "batched"      # 'batched' (client-axis vmap) |
     # 'sequential' (per-client loop — the parity reference)
+    participation: str = "full"  # repro.core.participation spec
+    transport: str = "plain"     # size-level layers only (framing)
     seed: int = 0
 
     @property
@@ -121,47 +128,98 @@ class FeatureExtractEnsemble:
     top_features: List[np.ndarray]
 
 
+@dataclass
+class _XGBWork(ClientWork, ServerAgg):
+    """Shared one-shot scaffolding for both C3 protocols: ``mode='fe'``
+    ships the shallow feature-extracted ensemble, ``mode='dense'`` ships
+    the full boosted ensemble."""
+    clients: Sequence
+    cfg: FedXGBConfig
+    mode: str = "fe"
+    fed_stats: object = None
+
+    def setup(self, rt: FedRuntime):
+        rt.transport.require_bytes_only("feature_extract")
+        cfg = self.cfg
+        self.sampled = [S.apply_strategy(cfg.sampling, x, y, cfg.seed + i,
+                                         fed_stats=self.fed_stats)
+                        for i, (x, y) in enumerate(self.clients)]
+        return {"model": None}
+
+    def client_round(self, rt, state, rnd):
+        cfg = self.cfg
+        shards = [self.sampled[i] for i in rnd.computing]
+        prepped = (_prep_batched(shards, cfg.n_bins)
+                   if cfg.engine == "batched" else None)
+        locals_ = _fit_clients(shards, cfg, num_rounds=cfg.num_rounds,
+                               depth=cfg.depth, prepped=prepped)
+        if self.mode == "dense":
+            ship, extras = locals_, [0] * len(locals_)
+        else:
+            masks, tops = [], []
+            for (xs, _), local in zip(shards, locals_):
+                phi = np.asarray(gbdt.feature_importance(local))
+                top = np.argsort(-phi)[:cfg.top_features]
+                mask = np.zeros(xs.shape[1], np.float32)
+                mask[top] = 1.0
+                masks.append(mask)
+                tops.append(top)
+            ship = _fit_clients(shards, cfg,
+                                num_rounds=cfg.shallow_rounds_,
+                                depth=cfg.shallow_depth,
+                                feature_masks=masks, prepped=prepped)
+            self.tops = tops
+            extras = [4 + 4 * len(t) for t in tops]  # count + feature ids
+        msgs = []
+        for slot, i in enumerate(rnd.computing):
+            model = ship[slot]
+            wire = rt.encode(model, nbytes=nbytes(model.forest)
+                             + extras[slot], round_idx=rnd.index,
+                             client=i, slot=slot,
+                             n_active=len(rnd.computing))
+            what = "gbdt" if self.mode == "dense" else "shallow-gbdt"
+            rt.log_up(rnd.index, i, wire.nbytes, what)
+            msgs.append(ClientMsg(i, model, wire.nbytes,
+                                  weight=len(self.clients[i][1]),
+                                  what=what))
+        return msgs
+
+    def aggregate(self, rt, state, msgs, rnd):
+        total = sum(m.weight for m in msgs)
+        models = [m.payload for m in msgs]
+        weights = [m.weight / total for m in msgs]
+        with rt.timer:
+            pass  # aggregation is a concat; vote happens at predict time
+        down = sum(nbytes(m.forest) for m in models) \
+            + (8 * len(models) if self.mode == "fe" else 0)
+        for i in range(len(self.clients)):
+            rt.log_down(rnd.index, i, down, "ensemble")
+        if self.mode == "dense":
+            state["model"] = FedXGBEnsemble(models, weights)
+        else:
+            state["model"] = FeatureExtractEnsemble(
+                models, weights, [m.base_margin for m in models],
+                [self.tops[rnd.computing.index(m.client)] for m in msgs])
+        return state
+
+    def finalize(self, rt, state):
+        return state["model"]
+
+
+def _run_one_shot(clients, cfg: FedXGBConfig, mode: str, fed_stats=None):
+    work = _XGBWork(clients, cfg, mode, fed_stats)
+    rt = FedRuntime(n_clients=len(clients), rounds=1,
+                    participation=cfg.participation,
+                    transport=cfg.transport, seed=cfg.seed,
+                    allow_stale=False)
+    model = rt.run(work)
+    return model, rt.comm, rt.timer
+
+
 def train_federated_xgb_fe(clients: Sequence[Tuple[np.ndarray, np.ndarray]],
                            cfg: FedXGBConfig, fed_stats=None):
     """Returns (ensemble, comm, timer)."""
-    comm = CommLog()
-    timer = Timer()
-    sizes = [len(y) for _, y in clients]
-    total = sum(sizes)
-    sampled = [S.apply_strategy(cfg.sampling, x, y, cfg.seed + i,
-                                fed_stats=fed_stats)
-               for i, (x, y) in enumerate(clients)]
-    prepped = (_prep_batched(sampled, cfg.n_bins)
-               if cfg.engine == "batched" else None)
-    locals_ = _fit_clients(sampled, cfg, num_rounds=cfg.num_rounds,
-                           depth=cfg.depth, prepped=prepped)
-    masks, tops = [], []
-    for (xs, _), local in zip(sampled, locals_):
-        phi = np.asarray(gbdt.feature_importance(local))
-        top = np.argsort(-phi)[:cfg.top_features]
-        mask = np.zeros(xs.shape[1], np.float32)
-        mask[top] = 1.0
-        masks.append(mask)
-        tops.append(top)
-    shallows = _fit_clients(sampled, cfg, num_rounds=cfg.shallow_rounds_,
-                            depth=cfg.shallow_depth, feature_masks=masks,
-                            prepped=prepped)
-    trees, weights, bases = [], [], []
-    for i, shallow in enumerate(shallows):
-        comm.log(0, f"c{i}", "up",
-                 nbytes(shallow.forest) + 4 + 4 * len(tops[i]),
-                 "shallow-gbdt")
-        trees.append(shallow)
-        weights.append(sizes[i] / total)
-        bases.append(shallow.base_margin)
-    ens = FeatureExtractEnsemble(trees, weights, bases, tops)
-    with timer:
-        pass  # aggregation is a concat; vote happens at predict time
-    for i in range(len(clients)):
-        comm.log(0, f"c{i}", "down",
-                 sum(nbytes(t.forest) for t in trees) + 8 * len(trees),
-                 "ensemble")
-    return ens, comm, timer
+    return _run_one_shot(clients, cfg, "fe", fed_stats)
 
 
 def predict_fe(ens: FeatureExtractEnsemble, x) -> np.ndarray:
@@ -188,25 +246,7 @@ class FedXGBEnsemble:
 def train_federated_xgb(clients, cfg: FedXGBConfig, fed_stats=None):
     """Every client ships its full boosted ensemble; margins averaged
     (data-size weighted). The paper's 'Federated XGBoost' rows."""
-    comm = CommLog()
-    timer = Timer()
-    sizes = [len(y) for _, y in clients]
-    total = sum(sizes)
-    sampled = [S.apply_strategy(cfg.sampling, x, y, cfg.seed + i,
-                                fed_stats=fed_stats)
-               for i, (x, y) in enumerate(clients)]
-    models = _fit_clients(sampled, cfg, num_rounds=cfg.num_rounds,
-                          depth=cfg.depth)
-    weights = []
-    for i, local in enumerate(models):
-        comm.log(0, f"c{i}", "up", nbytes(local.forest), "gbdt")
-        weights.append(sizes[i] / total)
-    with timer:
-        pass
-    for i in range(len(clients)):
-        comm.log(0, f"c{i}", "down",
-                 sum(nbytes(m.forest) for m in models), "ensemble")
-    return FedXGBEnsemble(models, weights), comm, timer
+    return _run_one_shot(clients, cfg, "dense", fed_stats)
 
 
 def predict_fed_xgb(ens: FedXGBEnsemble, x) -> np.ndarray:

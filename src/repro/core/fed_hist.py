@@ -8,10 +8,22 @@ ship their per-level (F, 2^level * n_bins, 2) grad/hess histograms and
 the server grows the tree from the sum.  Because all clients bin with the
 same edges, the summed histogram equals the histogram of the union of
 shards — so federated training is **exactly** centralized GBDT on the
-pooled data (tested to numerical tolerance), at a communication cost that
+pooled shards (tested to numerical tolerance), at a communication cost that
 depends on (F, n_bins, depth) but **not** on the number of samples.
 
-Privacy hooks mirror the parametric pipeline (``core/privacy.py``):
+The boosting loop runs on the shared :class:`~repro.core.runtime.
+FedRuntime`: the binning round happens in ``setup``, then each runtime
+round grows one tree from the *participating* clients' histograms
+(``cfg.participation``; inactive shards contribute zero weight that
+round, and every client still receives the broadcast tree so margins
+stay in sync).  Stragglers are treated as drops (histogram aggregation
+is fused into the jitted growth, so a one-round-late histogram of stale
+margins cannot be replayed).
+
+Privacy hooks mirror the parametric pipeline (``core/privacy.py``) and
+can come from either the config flags or a ``cfg.transport`` stack
+(mask / dpnoise / frame layers; codec layers don't apply to in-jit
+histograms and raise):
 
 * ``secure_agg=True`` simulates Bonawitz-style pairwise masking on the
   shipped histograms — ring masks m_i - m_{i+1} cancel in the server's
@@ -35,9 +47,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.comm import CommLog, Timer
 from repro.core.metrics import binary_metrics
 from repro.core.privacy import gaussian_sigma
+from repro.core.runtime import ClientMsg, ClientWork, FedRuntime, ServerAgg
 from repro.data import sampling as S
 from repro.trees import binning, gbdt
 from repro.trees.growth import (fed_hist_bytes, grow_tree_fed, nbytes,
@@ -61,6 +73,8 @@ class FedHistConfig:
     dp_epsilon: float = 0.0      # 0 -> no DP noise
     dp_delta: float = 1e-5
     dp_sensitivity: float = 1.0
+    participation: str = "full"  # repro.core.participation spec
+    transport: str = "plain"     # mask/dpnoise/frame layers (no codecs)
     seed: int = 0
 
 
@@ -103,6 +117,98 @@ def stack_client_shards(clients: Sequence[Tuple[np.ndarray, np.ndarray]],
     return x_c, y_c, bins_c, w_c
 
 
+@dataclass
+class _HistWork(ClientWork, ServerAgg):
+    clients: Sequence
+    cfg: FedHistConfig
+    fed_stats: object = None
+
+    def setup(self, rt: FedRuntime):
+        cfg = self.cfg
+        if cfg.engine not in ("batched", "sequential"):
+            raise ValueError(f"unknown engine {cfg.engine!r}; "
+                             "use 'batched' or 'sequential'")
+        tp = rt.transport.hist_params()   # rejects codec layers
+        sampled = [S.apply_strategy(cfg.sampling, x, y, cfg.seed + i,
+                                    fed_stats=self.fed_stats)
+                   for i, (x, y) in enumerate(self.clients)]
+        self.C = len(sampled)
+        self.F = sampled[0][0].shape[1]
+
+        # round 0: federated binning — sketches up, shared edges down
+        edges = binning.fed_fit_bins([x for x, _ in sampled], cfg.n_bins,
+                                     sketch_size=cfg.sketch_size,
+                                     comm=rt.comm)
+        x_c, y_c, bins_c, w_c = stack_client_shards(sampled, edges)
+
+        # base margin from global label counts (two scalars per client)
+        n_pos = sum(float(np.sum(y)) for _, y in sampled)
+        n_tot = sum(len(y) for _, y in sampled)
+        for i in range(self.C):
+            rt.log_up(0, i, 8, "label-counts")
+        pos = float(np.clip(n_pos / n_tot, 1e-4, 1 - 1e-4))
+        base = float(np.log(pos / (1 - pos)))
+
+        secure = cfg.secure_agg or tp["secure"]
+        eps = cfg.dp_epsilon if cfg.dp_epsilon > 0 else tp["dp_epsilon"]
+        delta = cfg.dp_delta if cfg.dp_epsilon > 0 else tp["dp_delta"]
+        hist_agg = None
+        if secure or eps > 0:
+            sigma = (gaussian_sigma(eps, delta, cfg.dp_sensitivity)
+                     if eps > 0 else 0.0)
+            # functools.partial first so sigma/secure stay Python
+            # constants (trace-time branches); tree_util.Partial makes
+            # it a jit-able arg
+            hist_agg = jax.tree_util.Partial(
+                functools.partial(_masked_noisy_sum, sigma=sigma,
+                                  secure=secure))
+        self.edges, self.x_c, self.y_c = edges, x_c, y_c
+        self.bins_c, self.w_c, self.hist_agg = bins_c, w_c, hist_agg
+        self.key = jax.random.PRNGKey(cfg.seed)
+        self.up_per_tree = (fed_hist_bytes(self.F, cfg.n_bins, cfg.depth)
+                            + tp["frame_overhead"])
+        return {"margin": jnp.full(y_c.shape, base, jnp.float32),
+                "trees": [], "base": base}
+
+    def client_round(self, rt, state, rnd):
+        # boosting-round ledger indices start at 1 (round 0 = binning);
+        # up_per_tree already carries the transport frame overhead
+        for i in rnd.computing:
+            rt.comm.log(rnd.index + 1, f"{rt.client_prefix}{i}", "up",
+                        self.up_per_tree, "grad-hess-histograms")
+        return [ClientMsg(i, None, self.up_per_tree,
+                          what="grad-hess-histograms")
+                for i in rnd.computing]
+
+    def aggregate(self, rt, state, msgs, rnd):
+        cfg, r = self.cfg, rnd.index
+        active = np.zeros(self.C, np.float32)
+        active[[m.client for m in msgs]] = 1.0
+        w_round = self.w_c * jnp.asarray(active)[:, None]
+        p = jax.nn.sigmoid(state["margin"])
+        grad = p - self.y_c
+        hess = p * (1 - p)
+        with rt.timer:
+            tree = grow_tree_fed(
+                self.bins_c, self.edges, grad, hess, w_round,
+                depth=cfg.depth, n_bins=cfg.n_bins, lam=cfg.lam,
+                hist_impl=cfg.hist_impl, hist_agg=self.hist_agg,
+                agg_key=jax.random.fold_in(self.key, r),
+                batch_clients=(cfg.engine == "batched"))
+            state["margin"] = state["margin"] + cfg.learning_rate \
+                * jax.vmap(predict_tree, in_axes=(None, 0))(tree, self.x_c)
+            jax.block_until_ready(state["margin"])
+        state["trees"].append(tree)
+        down = nbytes(tree)
+        for i in range(self.C):
+            rt.log_down(r + 1, i, down, "tree")
+        return state
+
+    def finalize(self, rt, state):
+        return gbdt.GBDT(stack_trees(state["trees"]),
+                         self.cfg.learning_rate, state["base"])
+
+
 def train_federated_xgb_hist(clients: Sequence[Tuple[np.ndarray,
                                                      np.ndarray]],
                              cfg: FedHistConfig, fed_stats=None):
@@ -111,66 +217,13 @@ def train_federated_xgb_hist(clients: Sequence[Tuple[np.ndarray,
     The returned model is one global ``gbdt.GBDT`` (the server's trees) —
     identical on every client after the final broadcast.
     """
-    if cfg.engine not in ("batched", "sequential"):
-        raise ValueError(f"unknown engine {cfg.engine!r}; "
-                         "use 'batched' or 'sequential'")
-    comm = CommLog()
-    timer = Timer()
-    sampled = [S.apply_strategy(cfg.sampling, x, y, cfg.seed + i,
-                                fed_stats=fed_stats)
-               for i, (x, y) in enumerate(clients)]
-    C = len(sampled)
-    F = sampled[0][0].shape[1]
-
-    # round 0: federated binning — sketches up, shared edges down
-    edges = binning.fed_fit_bins([x for x, _ in sampled], cfg.n_bins,
-                                 sketch_size=cfg.sketch_size, comm=comm)
-    x_c, y_c, bins_c, w_c = stack_client_shards(sampled, edges)
-
-    # base margin from global label counts (two scalars per client)
-    n_pos = sum(float(np.sum(y)) for _, y in sampled)
-    n_tot = sum(len(y) for _, y in sampled)
-    for i in range(C):
-        comm.log(0, f"c{i}", "up", 8, "label-counts")
-    pos = float(np.clip(n_pos / n_tot, 1e-4, 1 - 1e-4))
-    base = float(np.log(pos / (1 - pos)))
-
-    hist_agg = None
-    if cfg.secure_agg or cfg.dp_epsilon > 0:
-        sigma = (gaussian_sigma(cfg.dp_epsilon, cfg.dp_delta,
-                                cfg.dp_sensitivity)
-                 if cfg.dp_epsilon > 0 else 0.0)
-        # functools.partial first so sigma/secure stay Python constants
-        # (trace-time branches); tree_util.Partial makes it a jit-able arg
-        hist_agg = jax.tree_util.Partial(
-            functools.partial(_masked_noisy_sum, sigma=sigma,
-                              secure=cfg.secure_agg))
-    key = jax.random.PRNGKey(cfg.seed)
-
-    margin = jnp.full(y_c.shape, base, jnp.float32)
-    up_per_tree = fed_hist_bytes(F, cfg.n_bins, cfg.depth)
-    trees = []
-    for r in range(cfg.num_rounds):
-        p = jax.nn.sigmoid(margin)
-        grad = p - y_c
-        hess = p * (1 - p)
-        with timer:
-            tree = grow_tree_fed(
-                bins_c, edges, grad, hess, w_c, depth=cfg.depth,
-                n_bins=cfg.n_bins, lam=cfg.lam, hist_impl=cfg.hist_impl,
-                hist_agg=hist_agg, agg_key=jax.random.fold_in(key, r),
-                batch_clients=(cfg.engine == "batched"))
-            margin = margin + cfg.learning_rate * jax.vmap(
-                predict_tree, in_axes=(None, 0))(tree, x_c)
-            jax.block_until_ready(margin)
-        trees.append(tree)
-        down = nbytes(tree)
-        for i in range(C):
-            comm.log(r + 1, f"c{i}", "up", up_per_tree,
-                     "grad-hess-histograms")
-            comm.log(r + 1, f"c{i}", "down", down, "tree")
-    model = gbdt.GBDT(stack_trees(trees), cfg.learning_rate, base)
-    return model, comm, timer
+    work = _HistWork(clients, cfg, fed_stats)
+    rt = FedRuntime(n_clients=len(clients), rounds=cfg.num_rounds,
+                    participation=cfg.participation,
+                    transport=cfg.transport, seed=cfg.seed,
+                    allow_stale=False)
+    model = rt.run(work)
+    return model, rt.comm, rt.timer
 
 
 def evaluate_fed_hist(model: gbdt.GBDT, x, y):

@@ -1,6 +1,15 @@
 """Parametric FL pipeline (paper C1): LR / poly-SVM / NN with FedAvg,
 FedProx for the NN, optional secure aggregation + DP, full comm ledger.
 Also provides the pooled-data centralized baselines for Table 5.
+
+Runs on the shared :class:`~repro.core.runtime.FedRuntime`: the round
+loop, client sampling (``cfg.participation``), straggler handling, and
+ledger live in the runtime; this module contributes the
+``ClientWork``/``ServerAgg`` halves (local Adam/FedProx training and
+strategy aggregation).  The privacy pipeline — DP clip → weight fold →
+secure-agg mask → DP noise on the aggregate — is expressed as transport
+layers (``repro.core.comm``), composed after any user-selected
+``cfg.transport`` codec layers.
 """
 from __future__ import annotations
 
@@ -11,9 +20,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import comm as CM
 from repro.core import privacy
 from repro.core.comm import CommLog, Timer, pytree_bytes
 from repro.core.metrics import binary_metrics
+from repro.core.runtime import ClientMsg, ClientWork, FedRuntime, ServerAgg
 from repro.core.strategies import get_strategy
 from repro.data import sampling as S
 from repro.models import tabular
@@ -34,6 +45,8 @@ class FedParametricConfig:
     dp_epsilon: float = 0.0          # >0 -> DP noise on the aggregate
     dp_delta: float = 1e-5
     dp_clip: float = 1.0
+    participation: str = "full"      # repro.core.participation spec
+    transport: str = "plain"         # repro.core.comm.TRANSPORTS spec
     seed: int = 0
 
 
@@ -81,10 +94,109 @@ def _fed_sampling(clients, strategy, seed, comm: CommLog, round_idx=0):
             for i, (x, y) in enumerate(clients)], agg
 
 
+def _parametric_transport(cfg: FedParametricConfig, strat) -> CM.Transport:
+    """User transport stack + the cfg-driven privacy layers in their
+    canonical positions: codec/sparsifier → DP clip → weight fold →
+    secure-agg mask → (server) DP noise."""
+    eps = cfg.dp_epsilon if cfg.dp_epsilon > 0 else 0.5
+    base = CM.get_transport(cfg.transport, dp_clip=cfg.dp_clip,
+                            dp_epsilon=eps, dp_delta=cfg.dp_delta)
+    layers = list(base.layers)
+
+    def has(cls):
+        return any(isinstance(l, cls) for l in layers)
+
+    def insert_before(cls_tuple, layer):
+        pos = next((i for i, l in enumerate(layers)
+                    if isinstance(l, cls_tuple)), len(layers))
+        layers.insert(pos, layer)
+
+    if cfg.dp_epsilon > 0 and not has(CM.ClipLayer):
+        insert_before((CM.WeightLayer, CM.MaskLayer),
+                      CM.ClipLayer(cfg.dp_clip))
+    if strat.weighted and not has(CM.WeightLayer):
+        insert_before((CM.MaskLayer,), CM.WeightLayer())
+    if cfg.secure_agg and not has(CM.MaskLayer):
+        layers.append(CM.MaskLayer())
+    if cfg.dp_epsilon > 0 and not has(CM.DPNoiseLayer):
+        layers.append(CM.DPNoiseLayer(cfg.dp_epsilon, cfg.dp_delta))
+    return CM.Transport(base.name, layers)
+
+
+@dataclass
+class _ParametricWork(ClientWork, ServerAgg):
+    """One tabular model across hospital shards, one plugin."""
+    clients: Sequence
+    cfg: FedParametricConfig
+    strat: object
+    mu: float
+    test: Optional[Tuple] = None
+    history: List[Dict] = field(default_factory=list)
+
+    def setup(self, rt: FedRuntime):
+        cfg, spec = self.cfg, tabular.MODELS[self.cfg.model]
+        clients = [(_prep(cfg.model, x), y) for x, y in self.clients]
+        clients, _ = _fed_sampling(clients, cfg.sampling, cfg.seed,
+                                   rt.comm)
+        self.clients = clients
+        if self.test is not None:
+            self.test = (_prep(cfg.model, self.test[0]), self.test[1])
+        rng = jax.random.PRNGKey(cfg.seed)
+        params = spec["init"](rng, clients[0][0].shape[1])
+        return {"params": params,
+                "server": self.strat.init_state(params),
+                "codec": {},           # per-client wire-format state
+                "max_w": 1.0}          # DP sensitivity scale, per round
+
+    def client_round(self, rt, state, rnd):
+        cfg, params = self.cfg, state["params"]
+        ws = self.strat.norm_weights(
+            [len(self.clients[i][1]) for i in rnd.computing])
+        state["max_w"] = max(ws)
+        n_active = len(rnd.computing)
+        msgs = []
+        for slot, i in enumerate(rnd.computing):
+            x, y = self.clients[i]
+            rt.log_down(rnd.index, i, pytree_bytes(params), "model")
+            local = _local_train(cfg.model, params, x, y, cfg.local_steps,
+                                 cfg.lr, global_params=params, mu=self.mu)
+            update = jax.tree.map(lambda a, b: a - b, local, params)
+            wire = rt.encode(update, round_idx=rnd.index, client=i,
+                             slot=slot, n_active=n_active,
+                             state=state["codec"].get(i),
+                             weight_scale=ws[slot] * n_active)
+            state["codec"][i] = wire.state
+            rt.log_up(rnd.index, i, wire.nbytes, "update")
+            msgs.append(ClientMsg(i, wire.payload, wire.nbytes,
+                                  weight=len(y)))
+        return msgs
+
+    def aggregate(self, rt, state, msgs, rnd):
+        with rt.timer:
+            total = privacy.secure_sum([m.payload for m in msgs])
+            mean = jax.tree.map(lambda t: t / len(msgs), total)
+            mean = rt.post_aggregate(
+                mean, round_idx=rnd.index,
+                sensitivity=self.cfg.dp_clip * state["max_w"])
+            upd, state["server"] = self.strat.server_update(state["server"],
+                                                            mean)
+            state["params"] = jax.tree.map(lambda g, u: g + u,
+                                           state["params"], upd)
+        if self.test is not None:
+            spec = tabular.MODELS[self.cfg.model]
+            pred = np.asarray(spec["predict"](state["params"],
+                                              jnp.asarray(self.test[0])))
+            self.history.append(binary_metrics(pred, self.test[1]))
+        return state
+
+    def finalize(self, rt, state):
+        return state["params"]
+
+
 def train_federated(clients: Sequence[Tuple[np.ndarray, np.ndarray]],
                     cfg: FedParametricConfig,
                     test: Optional[Tuple[np.ndarray, np.ndarray]] = None):
-    """Federated training of one tabular model.
+    """Federated training of one tabular model on the FedRuntime.
 
     Aggregation follows ``cfg.strategy`` (see
     ``repro.core.strategies.STRATEGIES``).  Weighted strategies fold the
@@ -94,58 +206,24 @@ def train_federated(clients: Sequence[Tuple[np.ndarray, np.ndarray]],
     update.  DP noise sensitivity is ``dp_clip * max(weight)``, which
     reduces to the classic ``dp_clip / n_clients`` for uniform weights.
 
+    ``cfg.participation`` schedules clients per round ("full",
+    "uniform:k", "stratified:k", "dropout:p[:p_straggle]"); stale
+    straggler updates are weight-discounted by the runtime.
+    ``cfg.transport`` prepends wire layers (codec/framing) to the
+    privacy stack.  Under full participation + plain transport this is
+    byte- and loss-identical to the pre-runtime loop
+    (``tests/test_runtime.py``).
+
     Returns (global_params, comm: CommLog, history, agg_timer)."""
-    comm = CommLog()
-    timer = Timer()
-    spec = tabular.MODELS[cfg.model]
     strat = get_strategy(cfg.strategy)
     mu = cfg.fedprox_mu if cfg.fedprox_mu > 0 else strat.client_mu
-    clients = [(_prep(cfg.model, x), y) for x, y in clients]
-    if test is not None:
-        test = (_prep(cfg.model, test[0]), test[1])
-    clients, _ = _fed_sampling(clients, cfg.sampling, cfg.seed, comm)
-    ws = strat.norm_weights([len(y) for _, y in clients])
-    n_feat = clients[0][0].shape[1]
-    rng = jax.random.PRNGKey(cfg.seed)
-    global_params = spec["init"](rng, n_feat)
-    server_state = strat.init_state(global_params)
-    history = []
-    for r in range(cfg.rounds):
-        updates = []
-        for i, (x, y) in enumerate(clients):
-            comm.log(r, f"c{i}", "down", pytree_bytes(global_params),
-                     "model")
-            local = _local_train(cfg.model, global_params, x, y,
-                                 cfg.local_steps, cfg.lr,
-                                 global_params=global_params, mu=mu)
-            update = jax.tree.map(lambda a, b: a - b, local, global_params)
-            if cfg.dp_epsilon > 0:
-                update, _ = privacy.clip_update(update, cfg.dp_clip)
-            if strat.weighted:  # fold weight in pre-masking (sum of
-                # masked, weighted updates == weighted sum)
-                w = ws[i] * len(clients)
-                update = jax.tree.map(lambda t: t * w, update)
-            if cfg.secure_agg:
-                update = privacy.mask_update(update, i, len(clients),
-                                             cfg.seed * 7919 + r)
-            comm.log(r, f"c{i}", "up", pytree_bytes(update), "update")
-            updates.append(update)
-        with timer:
-            total = privacy.secure_sum(updates)
-            mean_update = jax.tree.map(lambda t: t / len(clients), total)
-            if cfg.dp_epsilon > 0:
-                mean_update = privacy.add_dp_noise(
-                    mean_update, cfg.dp_epsilon, cfg.dp_delta,
-                    cfg.dp_clip * max(ws), cfg.seed * 31 + r)
-            mean_update, server_state = strat.server_update(server_state,
-                                                            mean_update)
-            global_params = jax.tree.map(lambda g, u: g + u, global_params,
-                                         mean_update)
-        if test is not None:
-            pred = np.asarray(spec["predict"](global_params,
-                                              jnp.asarray(test[0])))
-            history.append(binary_metrics(pred, test[1]))
-    return global_params, comm, history, timer
+    work = _ParametricWork(clients, cfg, strat, mu, test)
+    rt = FedRuntime(n_clients=len(clients), rounds=cfg.rounds,
+                    participation=cfg.participation,
+                    transport=_parametric_transport(cfg, strat),
+                    seed=cfg.seed)
+    params = rt.run(work)
+    return params, rt.comm, work.history, rt.timer
 
 
 def train_centralized(x, y, cfg: FedParametricConfig,

@@ -1,0 +1,136 @@
+"""Client participation schedules — who computes and who delivers, per
+federated round.
+
+Real multi-institutional deployments never see every hospital every
+round: sites sample in (cross-device FedAvg), drop out (network loss),
+or straggle (deliver a *stale* update one round late).  A schedule is a
+pure function of ``(round_idx, n_clients, rng)`` returning a
+:class:`RoundPlan`; the :class:`~repro.core.runtime.FedRuntime` owns the
+rng stream, buffers straggler messages, and discounts their combine
+weight before handing them to the aggregator (the stale-update handling
+that keeps stateful server optimizers — fedavgm / fedadam — from
+integrating outdated directions at full strength).
+
+Select by name through :data:`PARTICIPATION` / :func:`get_participation`.
+Spec strings carry parameters after colons::
+
+    full                 every client, every round
+    uniform:2            2 clients uniformly without replacement
+    uniform:0.5          half the clients (at least 1)
+    stratified:4         4 clients, round-robin across contiguous strata
+    dropout:0.3          each client drops with p=0.3
+    dropout:0.3:0.5      ... and a dropped client straggles (delivers
+                         next round, stale) with p=0.5
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List
+
+import numpy as np
+
+
+@dataclass
+class RoundPlan:
+    """One round's participation: ``arrive`` compute and deliver this
+    round; ``stragglers`` compute this round but deliver *next* round
+    (their updates arrive with staleness 1)."""
+    arrive: List[int]
+    stragglers: List[int] = field(default_factory=list)
+
+
+@dataclass(frozen=True)
+class Participation:
+    """A named schedule: ``plan(round_idx, n_clients, rng)`` →
+    :class:`RoundPlan`.  ``rng`` is the runtime's dedicated stream, so a
+    fixed runtime seed gives a deterministic participation trace.
+    ``may_straggle`` marks schedules that can produce late deliveries —
+    the runtime uses it to reject transports whose secure-agg masks
+    could not cancel across rounds."""
+    name: str
+    plan_fn: Callable[[int, int, np.random.Generator], RoundPlan]
+    may_straggle: bool = False
+
+    def plan(self, round_idx: int, n_clients: int,
+             rng: np.random.Generator) -> RoundPlan:
+        return self.plan_fn(round_idx, n_clients, rng)
+
+
+def _full(r, n, rng) -> RoundPlan:
+    return RoundPlan(list(range(n)))
+
+
+def _resolve_k(k: float, n: int) -> int:
+    kk = int(round(k * n)) if 0 < k < 1 else int(k)
+    return max(1, min(n, kk))
+
+
+def _uniform(k: float):
+    def plan(r, n, rng):
+        kk = _resolve_k(k, n)
+        return RoundPlan(sorted(rng.choice(n, kk, replace=False).tolist()))
+    return plan
+
+
+def _stratified(k: float):
+    """k clients spread round-robin over contiguous client strata (e.g.
+    hospitals grouped by region/size): every stratum is represented
+    before any stratum contributes twice."""
+    def plan(r, n, rng):
+        kk = _resolve_k(k, n)
+        strata = np.array_split(np.arange(n), min(kk, n))
+        picked: List[int] = []
+        pools = [rng.permutation(s).tolist() for s in strata]
+        i = 0
+        while len(picked) < kk:
+            pool = pools[i % len(pools)]
+            if pool:
+                picked.append(int(pool.pop()))
+            i += 1
+        return RoundPlan(sorted(picked))
+    return plan
+
+
+def _dropout(p_drop: float, p_straggle: float = 0.0):
+    """Every client starts active; drops with ``p_drop``.  A dropped
+    client straggles (computes now, delivers next round, stale) with
+    ``p_straggle``, else its round is lost entirely."""
+    def plan(r, n, rng):
+        arrive, stragglers = [], []
+        for i in range(n):
+            if rng.random() >= p_drop:
+                arrive.append(i)
+            elif rng.random() < p_straggle:
+                stragglers.append(i)
+        if not arrive and not stragglers:  # keep the round alive
+            arrive.append(int(rng.integers(n)))
+        return RoundPlan(arrive, stragglers)
+    return plan
+
+
+#: schedule name -> factory(*args) -> plan function. Resolved via
+#: :func:`get_participation` spec strings ("uniform:2", "dropout:0.3:0.5").
+PARTICIPATION: Dict[str, Callable] = {
+    "full": lambda: _full,
+    "uniform": _uniform,
+    "stratified": _stratified,
+    "dropout": _dropout,
+}
+
+
+def get_participation(spec) -> Participation:
+    """Resolve a schedule from a spec string (or pass one through)."""
+    if isinstance(spec, Participation):
+        return spec
+    parts = str(spec).split(":")
+    name, args = parts[0], [float(a) for a in parts[1:]]
+    if name not in PARTICIPATION:
+        raise KeyError(f"unknown participation {spec!r}; "
+                       f"available: {sorted(PARTICIPATION)} "
+                       f"(spec: name[:arg[:arg]], e.g. 'uniform:2')")
+    try:
+        plan_fn = PARTICIPATION[name](*args)
+    except TypeError as e:
+        raise ValueError(f"bad participation spec {spec!r}: {e}") from e
+    may_straggle = name == "dropout" and len(args) > 1 and args[1] > 0
+    return Participation(str(spec), plan_fn, may_straggle)

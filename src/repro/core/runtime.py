@@ -1,0 +1,208 @@
+"""FedRuntime — the single round-based engine every federated pipeline
+plugs into.
+
+Before this module the repo carried four hand-rolled round loops
+(parametric ``fed_train.simulate``, tree-subset RF, XGBoost feature
+extraction, ``fed_hist`` GBDT), each with its own client scheduling and
+comm accounting.  ``FedRuntime`` owns the parts they shared:
+
+* the **round loop** — ``rounds`` iterations over a
+  :class:`~repro.core.participation.Participation` plan (full /
+  uniform-k / stratified / dropout with stragglers);
+* **straggler buffering** — messages from straggling clients are held
+  one round and delivered stale, their payloads scaled by
+  ``stale_discount ** staleness`` (the stale-update handling that
+  keeps fedavgm/fedadam server state from integrating outdated
+  directions at full strength; payload scaling makes the discount hold
+  under any aggregator normalization);
+* the **ledger** — one :class:`~repro.core.comm.CommLog` + aggregation
+  :class:`~repro.core.comm.Timer` per run, with helpers that route every
+  logged byte through the configured
+  :class:`~repro.core.comm.Transport` stack.
+
+Pipelines implement the two plugin halves:
+
+* :class:`ClientWork` — local training for this round's computing
+  clients, returning one :class:`ClientMsg` per client (payload + exact
+  wire bytes, already transport-encoded via :meth:`FedRuntime.encode`);
+* :class:`ServerAgg` — folds delivered messages into global state.
+
+A single class may implement both (``runtime.run(work)``), which is how
+the in-repo pipelines do it.  Under ``participation='full'`` and
+``transport='plain'`` every refactored pipeline reproduces its
+pre-runtime losses/forests/ledger bytes exactly
+(``tests/test_runtime.py``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, List, Optional
+
+import numpy as np
+
+import jax
+
+from repro.core.comm import (CommLog, MaskLayer, Timer, Transport, WireCtx,
+                             WireMsg, get_transport)
+from repro.core.participation import Participation, get_participation
+
+
+@dataclass
+class ClientMsg:
+    """One client's uplink for a round: the (decoded) payload the server
+    aggregates (scaled down by the runtime when delivered stale), the
+    exact bytes it occupied on the wire, the combine weight (sample
+    count), and staleness (0 = fresh, 1 = delivered one round late by a
+    straggler)."""
+    client: int
+    payload: Any
+    nbytes: int
+    weight: float = 1.0
+    staleness: int = 0
+    what: str = "update"
+
+
+@dataclass
+class RoundInfo:
+    """One round's schedule, as seen by the plugins.  ``computing`` =
+    ``arrive`` ∪ ``stragglers`` (every client running local work);
+    only ``arrive`` messages reach the aggregator this round."""
+    index: int
+    computing: List[int]
+    arrive: List[int]
+    stragglers: List[int]
+
+
+class ClientWork:
+    """Client half of a pipeline.  ``setup`` builds the run state (and
+    may log setup-phase traffic, e.g. federated binning); ``client_round``
+    runs local work for ``rnd.computing`` and returns their messages;
+    ``finalize`` shapes the returned result."""
+
+    def setup(self, rt: "FedRuntime") -> Any:
+        raise NotImplementedError
+
+    def client_round(self, rt: "FedRuntime", state: Any,
+                     rnd: RoundInfo) -> List[ClientMsg]:
+        raise NotImplementedError
+
+    def finalize(self, rt: "FedRuntime", state: Any) -> Any:
+        return state
+
+
+class ServerAgg:
+    """Server half: fold this round's delivered messages into state."""
+
+    def aggregate(self, rt: "FedRuntime", state: Any,
+                  msgs: List[ClientMsg], rnd: RoundInfo) -> Any:
+        raise NotImplementedError
+
+
+@dataclass
+class FedRuntime:
+    """The engine.  ``participation`` / ``transport`` accept registry
+    spec strings (see :data:`~repro.core.participation.PARTICIPATION`,
+    :data:`~repro.core.comm.TRANSPORTS`) or prebuilt objects;
+    ``transport_cfg`` carries layer knobs (rho, rank, dp_*,
+    frame_header).  ``allow_stale=False`` turns stragglers into plain
+    drops for pipelines whose payloads cannot be replayed a round late
+    (histogram aggregation fused into tree growth)."""
+    n_clients: int
+    rounds: int
+    participation: Any = "full"
+    transport: Any = "plain"
+    seed: int = 0
+    stale_discount: float = 0.5
+    allow_stale: bool = True
+    client_prefix: str = "c"
+    comm: CommLog = field(default_factory=CommLog)
+    timer: Timer = field(default_factory=Timer)
+    transport_cfg: Optional[dict] = None
+
+    def __post_init__(self):
+        self.participation = get_participation(self.participation)
+        self.transport = get_transport(self.transport,
+                                       **(self.transport_cfg or {}))
+        if (self.allow_stale and self.participation.may_straggle
+                and any(isinstance(l, MaskLayer)
+                        for l in self.transport.layers)):
+            raise ValueError(
+                f"participation {self.participation.name!r} can deliver "
+                f"straggler updates a round late, but transport "
+                f"{self.transport.name!r} carries secure-agg masks keyed "
+                f"to the compute round's active set — the pairwise masks "
+                f"would never cancel in the server sum.  Use "
+                f"'dropout:p' (stragglers lost, p_straggle=0) or drop "
+                f"the mask layer")
+        self._rng = np.random.default_rng([self.seed, 0xFED])
+
+    # -- ledger helpers ----------------------------------------------------
+
+    def log_up(self, round_idx: int, client: int, nbytes: int, what: str):
+        self.comm.log(round_idx, f"{self.client_prefix}{client}", "up",
+                      nbytes, what)
+
+    def log_down(self, round_idx: int, client: int, nbytes: int,
+                 what: str):
+        """Broadcast accounting; framing overhead applies to the
+        downlink too."""
+        self.comm.log(round_idx, f"{self.client_prefix}{client}", "down",
+                      nbytes + self.transport.frame_overhead, what)
+
+    # -- transport helpers -------------------------------------------------
+
+    def encode(self, payload, *, round_idx: int, client: int, slot: int,
+               n_active: int, state: Any = None,
+               nbytes: Optional[int] = None, weight_scale: float = 1.0
+               ) -> WireMsg:
+        """Run one client's payload through the transport stack."""
+        ctx = WireCtx(round=round_idx, client=client, slot=slot,
+                      n_active=n_active, seed=self.seed,
+                      weight_scale=weight_scale)
+        return self.transport.encode(payload, nbytes=nbytes, state=state,
+                                     ctx=ctx)
+
+    def post_aggregate(self, payload, *, round_idx: int,
+                       sensitivity: float = 1.0):
+        """Server-side transport tail (DP noise on the aggregate)."""
+        ctx = WireCtx(round=round_idx, seed=self.seed,
+                      sensitivity=sensitivity)
+        return self.transport.post_aggregate(payload, ctx)
+
+    # -- the round loop ----------------------------------------------------
+
+    def run(self, work: ClientWork, agg: Optional[ServerAgg] = None):
+        agg = agg if agg is not None else work
+        state = work.setup(self)
+        pending: List[ClientMsg] = []
+        for r in range(self.rounds):
+            plan = self.participation.plan(r, self.n_clients, self._rng)
+            arrive = sorted(plan.arrive)
+            if self.allow_stale:
+                stragglers = sorted(plan.stragglers)
+            else:
+                # stragglers are lost — but keep the round alive if the
+                # schedule scheduled nobody else
+                stragglers = []
+                if not arrive and plan.stragglers:
+                    arrive = sorted(plan.stragglers)[:1]
+            computing = sorted(set(arrive) | set(stragglers))
+            rnd = RoundInfo(r, computing, arrive, stragglers)
+            msgs = (work.client_round(self, state, rnd)
+                    if computing else [])
+            late_set = set(stragglers)
+            fresh = [m for m in msgs if m.client not in late_set]
+            late = [m for m in msgs if m.client in late_set]
+            for m in late:
+                m.staleness += 1
+            for m in pending:  # stale-update handling: discount the
+                # payload itself, so the reduced contribution holds for
+                # every aggregator (uniform means, weighted combines,
+                # server optimizers) regardless of how it normalizes
+                f = self.stale_discount ** m.staleness
+                m.payload = jax.tree.map(lambda x: x * f, m.payload)
+            deliver = fresh + pending
+            pending = late
+            if deliver:
+                state = agg.aggregate(self, state, deliver, rnd)
+        return work.finalize(self, state)

@@ -6,6 +6,13 @@ O(N*k) to O(N*s); with s = floor(sqrt(k)) this is the Theorem-1 rate, and
 the in-repo baseline (s = k, FedTree-style full shipping) is measured by
 the same ledger so the 70 % claim is a real before/after.
 
+The one-shot protocol runs as a single :class:`~repro.core.runtime.
+FedRuntime` round: ``cfg.participation`` decides which clients
+contribute trees (uniform-k models hospitals that never enroll), and
+``cfg.transport`` applies size-level wire layers (framing) to the
+shipped forests — float codec layers don't apply to tree payloads and
+raise.
+
 Local training runs under two engines: ``engine="batched"`` (default)
 stacks client shards on a leading client axis, draws each client's
 bootstrap with its own rng *before* padding, and grows every client's
@@ -23,8 +30,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.comm import CommLog, Timer
 from repro.core.metrics import binary_metrics
+from repro.core.runtime import ClientMsg, ClientWork, FedRuntime, ServerAgg
 from repro.data import sampling as S
 from repro.trees import binning
 from repro.trees import forest as RF
@@ -45,6 +52,8 @@ class FedForestConfig:
     # pallas | pallas_interpret | xla (see repro.kernels.hist.ops)
     engine: str = "batched"           # 'batched' (client-axis vmap) |
     # 'sequential' (per-client loop — the parity reference)
+    participation: str = "full"       # repro.core.participation spec
+    transport: str = "plain"          # size-level layers only (framing)
     seed: int = 0
 
 
@@ -62,27 +71,33 @@ def _select(forest: Tree, x, y, s: int, how: str, seed: int):
     return take_trees(forest, jnp.asarray(np.sort(idx))), idx
 
 
-def _local_forests(sampled, cfg: FedForestConfig) -> List[RF.RandomForest]:
+def _local_forests(sampled, cfg: FedForestConfig,
+                   ids: Optional[Sequence[int]] = None
+                   ) -> List[RF.RandomForest]:
     """Train each client's local forest under the configured engine.
 
-    Both engines consume identical per-client (edges, bins, bootstrap
-    weights, feature masks) — the batched path only pads shards to a
-    common length (pad rows carry zero bootstrap weight) and vmaps the
-    growth over the client axis."""
+    ``ids`` are the *global* client indices of ``sampled`` (bootstrap
+    rngs are keyed by global id, so a client grows the same forest
+    whether or not its peers participate).  Both engines consume
+    identical per-client (edges, bins, bootstrap weights, feature
+    masks) — the batched path only pads shards to a common length (pad
+    rows carry zero bootstrap weight) and vmaps the growth over the
+    client axis."""
+    ids = list(ids) if ids is not None else list(range(len(sampled)))
     if cfg.engine == "sequential":
         return [RF.fit(jnp.asarray(xs), jnp.asarray(ys),
                        num_trees=cfg.trees_per_client, depth=cfg.depth,
                        n_bins=cfg.n_bins, feature_frac=cfg.feature_frac,
                        hist_impl=cfg.hist_impl,
                        rng=jax.random.PRNGKey(cfg.seed + 17 * i))
-                for i, (xs, ys) in enumerate(sampled)]
+                for i, (xs, ys) in zip(ids, sampled)]
     if cfg.engine != "batched":
         raise ValueError(f"unknown engine {cfg.engine!r}; "
                          "use 'batched' or 'sequential'")
     F = sampled[0][0].shape[1]
     n_max = max(len(ys) for _, ys in sampled)
     bins_l, edges_l, y_l, w_l, fm_l = [], [], [], [], []
-    for i, (xs, ys) in enumerate(sampled):
+    for i, (xs, ys) in zip(ids, sampled):
         xs = jnp.asarray(xs)
         n = len(ys)
         edges = binning.fit_bins(xs, cfg.n_bins)
@@ -102,29 +117,63 @@ def _local_forests(sampled, cfg: FedForestConfig) -> List[RF.RandomForest]:
                           hist_impl=cfg.hist_impl)
 
 
+@dataclass
+class _ForestWork(ClientWork, ServerAgg):
+    clients: Sequence
+    cfg: FedForestConfig
+    fed_stats: object = None
+
+    def setup(self, rt: FedRuntime):
+        rt.transport.require_bytes_only("tree_subset")
+        cfg = self.cfg
+        self.sampled = [S.apply_strategy(cfg.sampling, x, y, cfg.seed + i,
+                                         fed_stats=self.fed_stats)
+                        for i, (x, y) in enumerate(self.clients)]
+        self.s = cfg.subset or int(np.floor(np.sqrt(cfg.trees_per_client)))
+        return {"model": None}
+
+    def client_round(self, rt, state, rnd):
+        cfg = self.cfg
+        shards = [self.sampled[i] for i in rnd.computing]
+        locals_ = _local_forests(shards, cfg, ids=rnd.computing)
+        msgs = []
+        for slot, i in enumerate(rnd.computing):
+            xs, ys = shards[slot]
+            sel, _ = _select(locals_[slot].forest, xs, ys, self.s,
+                             cfg.selection, cfg.seed + i)
+            wire = rt.encode(sel, nbytes=nbytes(sel), round_idx=rnd.index,
+                             client=i, slot=slot,
+                             n_active=len(rnd.computing))
+            rt.log_up(rnd.index, i, wire.nbytes, "trees")
+            msgs.append(ClientMsg(i, sel, wire.nbytes, weight=len(ys),
+                                  what="trees"))
+        return msgs
+
+    def aggregate(self, rt, state, msgs, rnd):
+        with rt.timer:
+            glob = concat_forests([m.payload for m in msgs])
+        for i in range(len(self.clients)):
+            rt.log_down(rnd.index, i, nbytes(glob), "global-forest")
+        state["model"] = RF.RandomForest(glob)
+        return state
+
+    def finalize(self, rt, state):
+        return state["model"]
+
+
 def train_federated_rf(clients: Sequence[Tuple[np.ndarray, np.ndarray]],
                        cfg: FedForestConfig,
                        fed_stats=None):
     """Returns (global_forest, comm, timer). One-shot protocol (trees are
-    not iterative): a single up/down round as in the paper."""
-    comm = CommLog()
-    timer = Timer()
-    s = cfg.subset or int(np.floor(np.sqrt(cfg.trees_per_client)))
-    sampled = [S.apply_strategy(cfg.sampling, x, y, cfg.seed + i,
-                                fed_stats=fed_stats)
-               for i, (x, y) in enumerate(clients)]
-    locals_ = _local_forests(sampled, cfg)
-    subsets: List[Tree] = []
-    for i, ((xs, ys), local) in enumerate(zip(sampled, locals_)):
-        sel, _ = _select(local.forest, xs, ys, s, cfg.selection,
-                         cfg.seed + i)
-        comm.log(0, f"c{i}", "up", nbytes(sel), "trees")
-        subsets.append(sel)
-    with timer:
-        glob = concat_forests(subsets)
-    for i in range(len(clients)):
-        comm.log(0, f"c{i}", "down", nbytes(glob), "global-forest")
-    return RF.RandomForest(glob), comm, timer
+    not iterative): a single FedRuntime round, up (subsets) then down
+    (the union forest broadcast), as in the paper."""
+    work = _ForestWork(clients, cfg, fed_stats)
+    rt = FedRuntime(n_clients=len(clients), rounds=1,
+                    participation=cfg.participation,
+                    transport=cfg.transport, seed=cfg.seed,
+                    allow_stale=False)
+    model = rt.run(work)
+    return model, rt.comm, rt.timer
 
 
 def evaluate_rf(model: RF.RandomForest, x, y):

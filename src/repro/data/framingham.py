@@ -108,35 +108,14 @@ def train_test_split(ds: Dataset, train_frac: float = 0.8,
 
 def partition_clients(ds: Dataset, n_clients: int = 3, seed: int = 0,
                       alpha: float = 0.0) -> List[Dataset]:
-    """Stratified even split (paper's setup); alpha>0 -> Dirichlet non-IID."""
-    rng = np.random.default_rng(seed + 2)
-    n = len(ds.y)
+    """Stratified even split (paper's setup); alpha>0 -> Dirichlet non-IID.
+
+    Thin shim over the partitioner registry
+    (``repro.data.partition.PARTITIONERS``): alpha<=0 -> ``iid``,
+    alpha>0 -> ``dirichlet``.  The ``seed + 2`` offset preserves the
+    historical rng stream so shards are bit-identical to earlier PRs."""
+    from repro.data import partition as P
     if alpha <= 0:
-        # stratified: interleave each class round-robin after shuffling
-        parts = [[] for _ in range(n_clients)]
-        for cls in (0.0, 1.0):
-            idx = np.where(ds.y == cls)[0]
-            rng.shuffle(idx)
-            for i, j in enumerate(idx):
-                parts[i % n_clients].append(j)
-        parts = [np.array(sorted(p)) for p in parts]
-    else:
-        # non-IID in the clinically-relevant way: the MAJORITY class is
-        # spread evenly (every hospital sees plenty of healthy patients)
-        # while the MINORITY (CHD+) follows a Dirichlet(alpha) skew —
-        # small alpha leaves some hospitals with almost no positive cases,
-        # the exact regime federated-SMOTE sync targets (paper Fig 3).
-        parts = [[] for _ in range(n_clients)]
-        majo = np.where(ds.y == 0)[0]
-        rng.shuffle(majo)
-        for i, j in enumerate(majo):
-            parts[i % n_clients].append(j)
-        mino = np.where(ds.y == 1)[0]
-        rng.shuffle(mino)
-        probs = rng.dirichlet([alpha] * n_clients)
-        cuts = (np.cumsum(probs)[:-1] * len(mino)).astype(int)
-        for i, chunk in enumerate(np.split(mino, cuts)):
-            parts[i].extend(chunk)
-        parts = [np.array(sorted(p), dtype=np.int64) for p in parts]
-    return [Dataset(ds.x[p], ds.y[p], ds.raw[p], ds.feature_names)
-            for p in parts]
+        return P.partition_dataset("iid", ds, n_clients, seed=seed + 2)
+    return P.partition_dataset("dirichlet", ds, n_clients, seed=seed + 2,
+                               alpha=alpha)

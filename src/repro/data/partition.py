@@ -1,0 +1,166 @@
+"""Client data partitioners — how a pooled dataset shards across
+hospitals.
+
+Every partitioner is a pure function ``(x, y, n_clients, rng, **kw) →
+list of index arrays`` that preserves each row exactly once (checked by
+:func:`check_partition`; property-tested in ``tests/test_partition.py``).
+Select by name through :data:`PARTITIONERS` / :func:`partition_indices`:
+
+* ``iid`` — stratified even split (the paper's setup): each class is
+  shuffled and dealt round-robin, so shards match in size and base rate.
+* ``dirichlet`` — clinically-shaped label skew: the majority (healthy)
+  class spreads evenly while the minority (CHD+) follows a
+  Dirichlet(alpha) draw — small alpha leaves some hospitals with almost
+  no positive cases, the regime federated-SMOTE targets (paper Fig 3).
+* ``quantity`` — quantity skew: shard *sizes* follow Dirichlet(alpha)
+  (some hospitals are 10x larger), labels stratified within each shard.
+* ``site`` — site shift: rows sorted by a covariate (default: age,
+  column 1 of the Framingham twin) and cut into contiguous blocks, so
+  every hospital sees a different patient population.
+
+The LM engine's analog maps the same names onto per-pod domain-mixture
+rows (:func:`pod_mixture_matrix`), replacing the ad-hoc Dirichlet-only
+mixtures previously hard-coded in ``repro.launch.fed_train``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+import numpy as np
+
+
+def _iid(x, y, n_clients: int, rng: np.random.Generator) -> List[np.ndarray]:
+    """Stratified even split: shuffle each class, deal round-robin."""
+    parts: List[list] = [[] for _ in range(n_clients)]
+    for cls in np.unique(y):
+        idx = np.where(y == cls)[0]
+        rng.shuffle(idx)
+        for i, j in enumerate(idx):
+            parts[i % n_clients].append(j)
+    return [np.array(sorted(p)) for p in parts]
+
+
+def _dirichlet(x, y, n_clients: int, rng: np.random.Generator,
+               alpha: float = 0.5) -> List[np.ndarray]:
+    """Majority class even, minority class Dirichlet(alpha)-skewed."""
+    parts: List[list] = [[] for _ in range(n_clients)]
+    majo = np.where(y == 0)[0]
+    rng.shuffle(majo)
+    for i, j in enumerate(majo):
+        parts[i % n_clients].append(j)
+    mino = np.where(y == 1)[0]
+    rng.shuffle(mino)
+    probs = rng.dirichlet([alpha] * n_clients)
+    cuts = (np.cumsum(probs)[:-1] * len(mino)).astype(int)
+    for i, chunk in enumerate(np.split(mino, cuts)):
+        parts[i].extend(chunk)
+    return [np.array(sorted(p), dtype=np.int64) for p in parts]
+
+
+def _quantity(x, y, n_clients: int, rng: np.random.Generator,
+              alpha: float = 0.5) -> List[np.ndarray]:
+    """Dirichlet(alpha) shard *sizes*; rows stratified-shuffled first so
+    every shard keeps roughly the global base rate."""
+    n = len(y)
+    # spread each class uniformly over [0, 1) so every contiguous slice
+    # of the order carries ~the global base rate
+    keys = np.empty(n)
+    for cls in np.unique(y):
+        idx = np.where(y == cls)[0]
+        rng.shuffle(idx)
+        keys[idx] = (np.arange(len(idx)) + rng.random(len(idx))) \
+            / len(idx)
+    order = np.argsort(keys, kind="stable")
+    probs = rng.dirichlet([alpha] * n_clients)
+    # cumulative cuts, then nudge so every client keeps >= 1 row
+    sizes = np.maximum((probs * n).astype(int), 1)
+    while sizes.sum() > n:
+        sizes[int(np.argmax(sizes))] -= 1
+    sizes[int(np.argmax(sizes))] += n - sizes.sum()
+    cuts = np.cumsum(sizes)[:-1]
+    return [np.sort(p) for p in np.split(order, cuts)]
+
+
+def _site(x, y, n_clients: int, rng: np.random.Generator,
+          shift_feature: int = 1) -> List[np.ndarray]:
+    """Contiguous blocks along a covariate: hospital 0 gets the youngest
+    patients, hospital n-1 the oldest (covariate shift across sites)."""
+    order = np.argsort(np.asarray(x)[:, shift_feature], kind="stable")
+    return [np.sort(p) for p in np.array_split(order, n_clients)]
+
+
+#: partitioner name -> fn(x, y, n_clients, rng, **kw) -> index arrays.
+PARTITIONERS: Dict[str, Callable] = {
+    "iid": _iid,
+    "dirichlet": _dirichlet,
+    "quantity": _quantity,
+    "site": _site,
+}
+
+
+def check_partition(parts: List[np.ndarray], n_rows: int):
+    """Every row lands in exactly one shard — raise otherwise."""
+    allidx = np.concatenate([np.asarray(p) for p in parts]) if parts else \
+        np.array([], dtype=int)
+    if len(allidx) != n_rows or len(np.unique(allidx)) != n_rows:
+        raise ValueError(
+            f"partition loses/duplicates rows: {n_rows} rows -> "
+            f"{len(allidx)} assignments, {len(np.unique(allidx))} unique")
+
+
+def partition_indices(name: str, x, y, n_clients: int, seed: int = 0,
+                      **kw) -> List[np.ndarray]:
+    """Partition rows by registry name; validated to preserve every row
+    exactly once.  Deterministic in ``seed``."""
+    if name not in PARTITIONERS:
+        raise KeyError(f"unknown partitioner {name!r}; "
+                       f"available: {sorted(PARTITIONERS)}")
+    rng = np.random.default_rng(seed)
+    parts = PARTITIONERS[name](np.asarray(x), np.asarray(y), n_clients,
+                               rng, **kw)
+    check_partition(parts, len(y))
+    return parts
+
+
+def partition_dataset(name: str, ds, n_clients: int, seed: int = 0, **kw):
+    """Partition a ``framingham.Dataset`` into per-client Datasets."""
+    from repro.data.framingham import Dataset
+    parts = partition_indices(name, ds.x, ds.y, n_clients, seed, **kw)
+    return [Dataset(ds.x[p], ds.y[p], ds.raw[p], ds.feature_names)
+            for p in parts]
+
+
+def partition_shards(name: str, x, y, n_clients: int, seed: int = 0,
+                     **kw) -> List:
+    """Partition raw (x, y) arrays into ``[(x_i, y_i), ...]`` shards."""
+    parts = partition_indices(name, x, y, n_clients, seed, **kw)
+    return [(np.asarray(x)[p], np.asarray(y)[p]) for p in parts]
+
+
+def pod_mixture_matrix(name: str, n_pods: int, n_domains: int,
+                       alpha: float = 0.5, seed: int = 0
+                       ) -> List[np.ndarray]:
+    """The LM-engine analog: per-pod domain-mixture rows.
+
+    ``iid`` → uniform mixtures; ``dirichlet`` → Dirichlet(alpha) rows
+    (the classic non-IID pods); ``site`` → each pod concentrated on a
+    home domain (hard domain shift).  ``quantity`` has no mixture analog
+    (all pods run the same token budget) and raises."""
+    if name == "iid":
+        return [np.ones(n_domains) / n_domains for _ in range(n_pods)]
+    if name == "dirichlet":
+        from repro.data.pipeline import pod_mixtures
+        return pod_mixtures(n_pods, n_domains, alpha=alpha, seed=seed)
+    if name == "site":
+        out = []
+        for i in range(n_pods):
+            m = np.full(n_domains, 0.15 / max(n_domains - 1, 1))
+            m[i % n_domains] = 0.85
+            out.append(m / m.sum())
+        return out
+    if name == "quantity":
+        raise ValueError(
+            "partitioner 'quantity' has no LM-mixture analog (pods share "
+            "one token budget); use iid | dirichlet | site for --mode lm")
+    raise KeyError(f"unknown partitioner {name!r}; "
+                   f"available: {sorted(PARTITIONERS)}")

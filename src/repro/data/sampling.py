@@ -29,6 +29,23 @@ def rus(x, y, seed: int = 0):
     return x[idx], y[idx]
 
 
+def _knn_indices(xm: np.ndarray, kk: int, chunk: int = 256) -> np.ndarray:
+    """Exact kNN over minority rows, (chunk, m) blocks at a time.
+
+    Same arithmetic as the dense (m, m) distance matrix (per-element
+    squared differences, row-wise argsort) but peak memory is
+    O(chunk * m) instead of O(m^2) — large minority classes no longer
+    materialize an m×m float64 array."""
+    m = len(xm)
+    nn = np.empty((m, kk), np.int64)
+    for s in range(0, m, chunk):
+        rows = xm[s:s + chunk]
+        d2 = ((rows[:, None, :] - xm[None, :, :]) ** 2).sum(-1)
+        d2[np.arange(len(rows)), np.arange(s, s + len(rows))] = np.inf
+        nn[s:s + chunk] = np.argsort(d2, axis=1)[:, :kk]
+    return nn
+
+
 def smote(x, y, k: int = 5, seed: int = 0):
     """Classic SMOTE: synthesize minority points on kNN line segments."""
     rng = np.random.default_rng(seed)
@@ -38,10 +55,8 @@ def smote(x, y, k: int = 5, seed: int = 0):
     if need <= 0 or len(mino) < 2:
         return x, y
     xm = x[mino]
-    d2 = ((xm[:, None, :] - xm[None, :, :]) ** 2).sum(-1)
-    np.fill_diagonal(d2, np.inf)
     kk = min(k, len(mino) - 1)
-    nn = np.argsort(d2, axis=1)[:, :kk]          # (m, k)
+    nn = _knn_indices(xm, kk)                    # (m, k)
     base = rng.integers(0, len(mino), need)
     pick = nn[base, rng.integers(0, kk, need)]
     lam = rng.random((need, 1))

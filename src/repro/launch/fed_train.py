@@ -20,12 +20,21 @@ Three entry points:
     is vmapped over it and the aggregation mean is a real cross-pod
     collective in the lowered HLO.
 
+Both simulations run on the shared :class:`~repro.core.runtime.
+FedRuntime`, which owns the round loop, the participation schedule
+(``--participation``: full / uniform-k / stratified / dropout with
+straggler buffering), the layered wire transport (``--transport``), and
+the ledger.  ``--partition`` selects the data partitioner
+(``repro.data.partition``): tabular shards for ``--mode fed_hist``,
+per-pod domain-mixture rows for ``--mode lm``.
+
 The round engine is batched end-to-end: client params are stacked with a
-leading ``(n_pods, ...)`` axis, local steps run as a ``jax.lax.scan``
+leading ``(n_active, ...)`` axis, local steps run as a ``jax.lax.scan``
 inside ``jax.vmap`` over that axis, and one jitted call advances every
-pod.  ``engine="sequential"`` keeps the per-pod Python loop as a
-reference implementation (the parity test in ``tests/test_fed_engine.py``
-checks both paths agree on losses and final params).
+participating pod.  ``engine="sequential"`` keeps the per-pod Python
+loop as a reference implementation (the parity test in
+``tests/test_fed_engine.py`` checks both paths agree on losses and
+final params).
 """
 from __future__ import annotations
 
@@ -38,8 +47,10 @@ import numpy as np
 
 from repro.configs import registry as R
 from repro.configs.base import RunConfig, ShapeConfig
-from repro.core.comm import CommLog, Timer, pytree_bytes
-from repro.core.compression import WIRE_FORMATS, compress_update
+from repro.core.comm import (CodecLayer, Transport, get_transport,
+                             pytree_bytes)
+from repro.core.compression import WIRE_FORMATS
+from repro.core.runtime import ClientMsg, ClientWork, FedRuntime, ServerAgg
 from repro.core.strategies import STRATEGIES, get_strategy
 from repro.data.pipeline import (CorpusConfig, SyntheticCorpus, lm_batches,
                                  pod_mixtures, sync_mixtures)
@@ -101,13 +112,124 @@ def _pod_slice(tree, i: int):
     return jax.tree.map(lambda x: x[i], tree)
 
 
+def _lm_transport(transport, compression: str, rho: float,
+                  rank: int) -> Transport:
+    """``compression`` (the historical knob) prepends a codec layer to
+    the ``transport`` stack; specifying a codec in both is an error."""
+    t = get_transport(transport, rho=rho, rank=rank)
+    if compression == "none":
+        return t
+    if any(isinstance(l, CodecLayer) for l in t.layers):
+        raise ValueError(
+            f"both compression={compression!r} and a codec layer in "
+            f"transport={t.name!r}; pick one")
+    name = t.name if t.layers else compression
+    return Transport(name, [CodecLayer(compression, rho=rho, rank=rank)]
+                     + list(t.layers))
+
+
+class _PodWork(ClientWork, ServerAgg):
+    """LM pods on the FedRuntime: vmapped (or sequential) local training,
+    strategy aggregation, wire-format compression."""
+
+    def __init__(self, *, step_fn, odefs, init_params, strat, iters,
+                 local_steps, tokens_per_round, engine, rng, verbose,
+                 rounds):
+        self.step_fn, self.odefs, self.init_params = step_fn, odefs, \
+            init_params
+        self.strat, self.iters, self.local_steps = strat, iters, \
+            local_steps
+        self.tokens_per_round = tokens_per_round
+        self.engine, self.rng, self.verbose = engine, rng, verbose
+        self.rounds = rounds
+        self._round_fns: Dict[int, object] = {}
+        self._step_jit = None
+        self.ef: Dict[int, object] = {}   # per-pod wire-format state
+
+    def _round_fn(self, k: int):
+        if k not in self._round_fns:
+            self._round_fns[k] = _build_parallel_round(self.step_fn, k)
+        return self._round_fns[k]
+
+    def setup(self, rt: FedRuntime):
+        if self._step_jit is None and self.engine == "sequential":
+            self._step_jit = jax.jit(self.step_fn)
+        return {"params": self.init_params,
+                "server": self.strat.init_state(self.init_params),
+                "history": []}
+
+    def client_round(self, rt, state, rnd):
+        comp, r = rnd.computing, rnd.index
+        params = state["params"]
+        for i in comp:
+            rt.log_down(r, i, pytree_bytes(params), "model")
+        batches = _stack_round_batches([self.iters[i] for i in comp],
+                                       self.local_steps)
+        opt_states = [init_tree(jax.random.fold_in(self.rng, r * 100 + i),
+                                self.odefs)  # fresh local opt each round
+                      for i in comp]
+        with rt.timer:
+            if self.engine == "vmap":
+                stacked_opt = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                           *opt_states)
+                deltas, losses = self._round_fn(len(comp))(
+                    params, stacked_opt, batches)
+                pod_deltas = [_pod_slice(deltas, s)
+                              for s in range(len(comp))]
+            else:
+                pod_deltas, loss_rows = [], []
+                for slot in range(len(comp)):
+                    p, opt_state = params, opt_states[slot]
+                    row = []
+                    for s in range(self.local_steps):
+                        b = {k: v[slot, s] for k, v in batches.items()}
+                        p, opt_state, metrics = self._step_jit(
+                            p, opt_state, b, params)
+                        row.append(metrics["loss"])
+                    pod_deltas.append(jax.tree.map(
+                        lambda a, b: a - b, p, params))
+                    loss_rows.append(jnp.stack(row))
+                losses = jnp.stack(loss_rows)
+            # JAX dispatch is async: force completion so round_s times
+            # the training compute, not the enqueue
+            jax.block_until_ready((pod_deltas, losses))
+
+        msgs = []
+        for slot, i in enumerate(comp):
+            wire = rt.encode(pod_deltas[slot], round_idx=r, client=i,
+                             slot=slot, n_active=len(comp),
+                             state=self.ef.get(i))
+            self.ef[i] = wire.state
+            rt.log_up(r, i, wire.nbytes, "delta")
+            msgs.append(ClientMsg(i, wire.payload, wire.nbytes,
+                                  weight=self.tokens_per_round))
+        state["history"].append(float(jnp.mean(losses)))
+        return msgs
+
+    def aggregate(self, rt, state, msgs, rnd):
+        upd, state["server"] = self.strat.aggregate(
+            state["server"], [m.payload for m in msgs],
+            [m.weight for m in msgs])
+        state["params"] = jax.tree.map(lambda g, u: g + u,
+                                       state["params"], upd)
+        if self.verbose:
+            print(f"  round {rnd.index+1}/{self.rounds}: loss "
+                  f"{state['history'][-1]:.4f} "
+                  f"(uplink so far {rt.comm.total_mb('up'):.2f} MB)")
+        return state
+
+    def finalize(self, rt, state):
+        return state
+
+
 # --- runnable simulation (CPU, reduced configs) -------------------------------
 
 def simulate(arch: str, *, n_pods: int = 3, rounds: int = 10,
              local_steps: int = 10, batch: int = 4, seq: int = 128,
              lr: float = 1e-3, compression: str = "none",
              rho: float = 0.05, rank: int = 8,
-             non_iid_alpha: float = 0.5,
+             non_iid_alpha: float = 0.5, partition: Optional[str] = None,
+             participation: str = "full", transport: str = "plain",
              sync_sampler: bool = False, seed: int = 0,
              run: Optional[RunConfig] = None, verbose: bool = True,
              strategy: str = "fedavg", engine: str = "vmap"):
@@ -119,14 +241,22 @@ def simulate(arch: str, *, n_pods: int = 3, rounds: int = 10,
         step consumes a ``(batch, seq)`` int32 token batch.
       lr: local Adam learning rate.
       compression: wire format name from ``WIRE_FORMATS``
-        ("none" | "topk" | "lowrank" | "int8" | "int8_sr").
+        ("none" | "topk" | "lowrank" | "int8" | "int8_sr") — prepended
+        to the transport stack as a codec layer.
       rho: top-k density (fraction of delta entries kept).
       rank: lowrank sketch rank (2-D leaves only).
       strategy: aggregation rule name from ``STRATEGIES`` ("fedavg" |
         "fedavg_weighted" | "fedprox" | "fedavgm" | "fedadam").
       engine: "vmap" (default; batched client-parallel, one jitted call
         per round) or "sequential" (reference per-pod Python loop).
+      partition: pod-mixture partitioner ("iid" | "dirichlet" | "site",
+        ``repro.data.partition.pod_mixture_matrix``); None keeps the
+        historical Dirichlet mixtures.
       non_iid_alpha: Dirichlet concentration of per-pod domain mixtures.
+      participation: schedule spec ("full" | "uniform:k" |
+        "stratified:k" | "dropout:p[:p_straggle]") — stragglers deliver
+        stale, weight-discounted updates next round.
+      transport: wire layer stack spec (``repro.core.comm.TRANSPORTS``).
       sync_sampler: synchronize pod samplers (fed-SMOTE analog).
 
     Returns a dict with ``loss_history`` (per-round mean loss),
@@ -136,6 +266,10 @@ def simulate(arch: str, *, n_pods: int = 3, rounds: int = 10,
     if engine not in ("vmap", "sequential"):
         raise ValueError(f"unknown engine {engine!r}; "
                          "use 'vmap' or 'sequential'")
+    # resolve registry specs up front: bad names fail before any compile
+    from repro.core.participation import get_participation
+    participation = get_participation(participation)
+    transport = _lm_transport(transport, compression, rho, rank)
     cfg = R.get_smoke(arch)
     run = run or RunConfig()
     ctx = make_ctx(None, "train")
@@ -148,79 +282,35 @@ def simulate(arch: str, *, n_pods: int = 3, rounds: int = 10,
 
     corpus = SyntheticCorpus(CorpusConfig(vocab_size=cfg.vocab_size,
                                           seed=seed))
-    mixtures = pod_mixtures(n_pods, corpus.cfg.n_domains,
-                            alpha=non_iid_alpha, seed=seed)
+    if partition is None:
+        mixtures = pod_mixtures(n_pods, corpus.cfg.n_domains,
+                                alpha=non_iid_alpha, seed=seed)
+    else:
+        from repro.data.partition import pod_mixture_matrix
+        mixtures = pod_mixture_matrix(partition, n_pods,
+                                      corpus.cfg.n_domains,
+                                      alpha=non_iid_alpha, seed=seed)
     if sync_sampler:  # the fed-SMOTE analog (DESIGN.md)
         m = sync_mixtures(mixtures)
         mixtures = [m for _ in mixtures]
     iters = [lm_batches(corpus, batch, seq, mixture=mixtures[i],
                         seed=seed + i) for i in range(n_pods)]
 
-    if engine == "vmap":
-        round_fn = _build_parallel_round(step_fn, n_pods)
-    else:
-        step_jit = jax.jit(step_fn)
-
-    comm = CommLog()
-    timer = Timer()
-    ef_states: List[Optional[object]] = [None] * n_pods
-    server_state = strat.init_state(global_params)
-    sizes = [local_steps * batch * seq] * n_pods  # tokens seen per round
-    history = []
-    for r in range(rounds):
-        batches = _stack_round_batches(iters, local_steps)
-        opt_states = [init_tree(jax.random.fold_in(rng, r * 100 + i),
-                                odefs)  # fresh local opt each round
-                      for i in range(n_pods)]
-        for i in range(n_pods):
-            comm.log(r, f"pod{i}", "down", pytree_bytes(global_params),
-                     "model")
-
-        with timer:
-            if engine == "vmap":
-                stacked_opt = jax.tree.map(lambda *xs: jnp.stack(xs),
-                                           *opt_states)
-                deltas, losses = round_fn(global_params, stacked_opt,
-                                          batches)
-                pod_deltas = [_pod_slice(deltas, i) for i in range(n_pods)]
-            else:
-                pod_deltas, loss_rows = [], []
-                for i in range(n_pods):
-                    params, opt_state = global_params, opt_states[i]
-                    row = []
-                    for s in range(local_steps):
-                        b = {k: v[i, s] for k, v in batches.items()}
-                        params, opt_state, metrics = step_jit(
-                            params, opt_state, b, global_params)
-                        row.append(metrics["loss"])
-                    pod_deltas.append(jax.tree.map(
-                        lambda a, b: a - b, params, global_params))
-                    loss_rows.append(jnp.stack(row))
-                losses = jnp.stack(loss_rows)
-            # JAX dispatch is async: force completion so round_s times
-            # the training compute, not the enqueue
-            jax.block_until_ready((pod_deltas, losses))
-
-        shipped = []
-        for i in range(n_pods):
-            d, ef_states[i], wire = compress_update(
-                compression, pod_deltas[i], ef_states[i], rho=rho,
-                rank=rank, seed=seed * 100003 + r * 1000 + i)
-            comm.log(r, f"pod{i}", "up", wire, "delta")
-            shipped.append(d)
-        update, server_state = strat.aggregate(server_state, shipped,
-                                               sizes)
-        global_params = jax.tree.map(lambda g, u: g + u, global_params,
-                                     update)
-        history.append(float(jnp.mean(losses)))
-        if verbose:
-            print(f"  round {r+1}/{rounds}: loss {history[-1]:.4f} "
-                  f"(uplink so far {comm.total_mb('up'):.2f} MB)")
-    return {"loss_history": history, "comm": comm,
-            "uplink_mb": comm.total_mb("up"),
-            "final_params": global_params,
+    work = _PodWork(step_fn=step_fn, odefs=odefs,
+                    init_params=global_params, strat=strat, iters=iters,
+                    local_steps=local_steps,
+                    tokens_per_round=local_steps * batch * seq,
+                    engine=engine, rng=rng, verbose=verbose,
+                    rounds=rounds)
+    rt = FedRuntime(n_clients=n_pods, rounds=rounds,
+                    participation=participation, transport=transport,
+                    seed=seed, client_prefix="pod")
+    state = rt.run(work)
+    return {"loss_history": state["history"], "comm": rt.comm,
+            "uplink_mb": rt.comm.total_mb("up"),
+            "final_params": state["params"],
             "strategy": strat.name, "engine": engine,
-            "round_s": timer.total_s}
+            "round_s": rt.timer.total_s}
 
 
 # --- histogram-aggregation federated trees (fed_hist) -------------------------
@@ -229,30 +319,46 @@ def simulate_fed_hist(*, n_clients: int = 3, rounds: int = 20,
                       depth: int = 4, n_bins: int = 32,
                       sampling: str = "none", engine: str = "batched",
                       secure_agg: bool = False, dp_epsilon: float = 0.0,
-                      hist_impl: str = "auto", seed: int = 0,
+                      hist_impl: str = "auto",
+                      partition: str = "iid", alpha: float = 0.5,
+                      participation: str = "full",
+                      transport: str = "plain", seed: int = 0,
                       n_records: int = 4238, verbose: bool = True):
     """Histogram-aggregation federated GBDT on the Framingham twin.
 
     The tree-side counterpart of ``simulate``: one federated-binning
     round (quantile sketches up, shared edges down), then per boosting
-    round every client ships (F, 2^level * n_bins, 2) grad/hess
-    histograms and the server grows the tree from the sum — exactly
-    centralized GBDT on the pooled shards (``repro.core.fed_hist``).
+    round every *participating* client ships (F, 2^level * n_bins, 2)
+    grad/hess histograms and the server grows the tree from the sum —
+    under full participation, exactly centralized GBDT on the pooled
+    shards (``repro.core.fed_hist``).  ``partition`` shards the twin
+    through ``repro.data.partition.PARTITIONERS`` (iid | dirichlet |
+    quantity | site).
 
     Returns a dict with ``metrics`` (test-set binary metrics), ``comm``
     (CommLog), ``uplink_mb``, and ``round_s`` (tree-growth wall time).
     """
     from repro.core import fed_hist as FH
     from repro.data import framingham as F
+    from repro.data import partition as P
 
     ds = F.synthesize(n=n_records, seed=seed)
     tr, te = F.train_test_split(ds)
-    clients = [(c.x, c.y) for c in F.partition_clients(tr, n_clients,
-                                                       seed)]
+    if partition == "iid":
+        # historical path (seed+2 rng stream) — bit-identical shards
+        shards = F.partition_clients(tr, n_clients, seed)
+    else:
+        kw = {"alpha": alpha} if partition in ("dirichlet",
+                                               "quantity") else {}
+        shards = P.partition_dataset(partition, tr, n_clients,
+                                     seed=seed + 2, **kw)
+    clients = [(c.x, c.y) for c in shards]
     cfg = FH.FedHistConfig(num_rounds=rounds, depth=depth, n_bins=n_bins,
                            sampling=sampling, engine=engine,
                            secure_agg=secure_agg, dp_epsilon=dp_epsilon,
-                           hist_impl=hist_impl, seed=seed)
+                           hist_impl=hist_impl,
+                           participation=participation,
+                           transport=transport, seed=seed)
     model, comm, timer = FH.train_federated_xgb_hist(clients, cfg)
     metrics = FH.evaluate_fed_hist(model, te.x, te.y)
     if verbose:
@@ -321,6 +427,21 @@ def main():
     ap.add_argument("--engine", default="vmap",
                     help="lm: vmap|sequential; fed_hist: "
                     "batched|sequential")
+    ap.add_argument("--partition", default=None,
+                    help="data partitioner (repro.data.partition."
+                    "PARTITIONERS): lm mixtures iid|dirichlet|site; "
+                    "fed_hist shards iid|dirichlet|quantity|site")
+    ap.add_argument("--alpha", type=float, default=0.5,
+                    help="partitioner concentration (dirichlet/quantity "
+                    "skew; lm pod mixtures)")
+    ap.add_argument("--participation", default="full",
+                    help="participation schedule spec (repro.core."
+                    "participation): full | uniform:k | stratified:k | "
+                    "dropout:p[:p_straggle]")
+    ap.add_argument("--transport", default="plain",
+                    help="wire layer stack (repro.core.comm.TRANSPORTS "
+                    "preset or '>'-joined layer spec, e.g. "
+                    "'topk>mask>frame')")
     ap.add_argument("--sync-sampler", action="store_true")
     # fed_hist knobs
     ap.add_argument("--depth", type=int, default=4)
@@ -335,12 +456,19 @@ def main():
                           depth=args.depth, n_bins=args.n_bins,
                           sampling=args.sampling, engine=engine,
                           secure_agg=args.secure_agg,
-                          dp_epsilon=args.dp_epsilon)
+                          dp_epsilon=args.dp_epsilon,
+                          partition=args.partition or "iid",
+                          alpha=args.alpha,
+                          participation=args.participation,
+                          transport=args.transport)
         return
     out = simulate(args.arch, n_pods=args.pods, rounds=args.rounds,
                    local_steps=args.local_steps,
                    compression=args.compression, rho=args.rho,
-                   rank=args.rank,
+                   rank=args.rank, partition=args.partition,
+                   non_iid_alpha=args.alpha,
+                   participation=args.participation,
+                   transport=args.transport,
                    strategy=args.strategy, engine=args.engine,
                    sync_sampler=args.sync_sampler)
     print(f"final round loss {out['loss_history'][-1]:.4f}, "

@@ -1,0 +1,147 @@
+"""Partitioner registry: every partitioner preserves each row exactly
+once, skew knobs actually skew, Dirichlet draws are seed-deterministic,
+and the LM mixture analogs are valid distributions."""
+import numpy as np
+import pytest
+
+from repro.data import framingham as F
+from repro.data import partition as P
+from repro.data import sampling as S
+
+RNG = np.random.default_rng(11)
+
+
+def _xy(n=900, f=6, pos=0.2, seed=0):
+    r = np.random.default_rng(seed)
+    x = r.normal(size=(n, f)).astype(np.float32)
+    y = (r.random(n) < pos).astype(np.float32)
+    return x, y
+
+
+# --- property: exact row preservation ----------------------------------------
+
+@pytest.mark.parametrize("name", sorted(P.PARTITIONERS))
+@pytest.mark.parametrize("n,n_clients,seed", [(900, 3, 0), (301, 7, 5),
+                                              (64, 5, 2)])
+def test_partitioner_preserves_rows_exactly_once(name, n, n_clients, seed):
+    x, y = _xy(n=n, seed=seed)
+    parts = P.partition_indices(name, x, y, n_clients, seed=seed)
+    assert len(parts) == n_clients
+    allidx = np.concatenate(parts)
+    assert len(allidx) == n
+    assert len(np.unique(allidx)) == n
+    assert all(len(p) >= 1 for p in parts)
+
+
+def test_check_partition_rejects_losses_and_duplicates():
+    with pytest.raises(ValueError):
+        P.check_partition([np.array([0, 1]), np.array([1, 2])], 4)
+    with pytest.raises(ValueError):
+        P.check_partition([np.array([0, 1])], 3)
+    with pytest.raises(KeyError):
+        P.partition_indices("fancy", *_xy(), 3)
+
+
+# --- skew semantics -----------------------------------------------------------
+
+def test_dirichlet_is_seed_deterministic_and_skews():
+    x, y = _xy(n=1200, pos=0.15, seed=3)
+    a = P.partition_indices("dirichlet", x, y, 3, seed=7, alpha=0.2)
+    b = P.partition_indices("dirichlet", x, y, 3, seed=7, alpha=0.2)
+    for pa, pb in zip(a, b):
+        np.testing.assert_array_equal(pa, pb)
+    c = P.partition_indices("dirichlet", x, y, 3, seed=8, alpha=0.2)
+    assert any(not np.array_equal(pa, pc) for pa, pc in zip(a, c))
+    rates = [float(y[p].mean()) for p in a]
+    assert max(rates) - min(rates) > 0.03   # visibly non-IID
+
+
+def test_quantity_skews_sizes_iid_does_not():
+    x, y = _xy(n=1500, seed=4)
+    iid = P.partition_indices("iid", x, y, 4, seed=1)
+    qty = P.partition_indices("quantity", x, y, 4, seed=1, alpha=0.3)
+    iid_sizes = [len(p) for p in iid]
+    qty_sizes = [len(p) for p in qty]
+    assert max(iid_sizes) - min(iid_sizes) <= len(np.unique(y))
+    assert max(qty_sizes) - min(qty_sizes) > 100
+    # stratified within shards: base rates stay near global
+    big = [p for p in qty if len(p) > 30]
+    rates = [float(y[p].mean()) for p in big]
+    assert max(rates) - min(rates) < 0.2
+
+
+def test_site_shift_orders_the_covariate():
+    ds = F.synthesize(n=800, seed=2)
+    parts = P.partition_indices("site", ds.x, ds.y, 4, seed=0)
+    # column 1 = age: per-site means must be strictly increasing
+    means = [float(ds.x[p, 1].mean()) for p in parts]
+    assert all(a < b for a, b in zip(means, means[1:]))
+
+
+# --- LM mixture analogs -------------------------------------------------------
+
+def test_pod_mixture_matrix_names():
+    for name in ("iid", "dirichlet", "site"):
+        rows = P.pod_mixture_matrix(name, 4, 3, alpha=0.4, seed=0)
+        assert len(rows) == 4
+        for m in rows:
+            np.testing.assert_allclose(m.sum(), 1.0, rtol=1e-9)
+            assert (m >= 0).all()
+    np.testing.assert_allclose(P.pod_mixture_matrix("iid", 2, 4)[0], 0.25)
+    site = P.pod_mixture_matrix("site", 3, 3)
+    assert all(float(site[i][i % 3]) > 0.8 for i in range(3))
+    with pytest.raises(ValueError):
+        P.pod_mixture_matrix("quantity", 3, 4)
+    with pytest.raises(KeyError):
+        P.pod_mixture_matrix("fancy", 3, 4)
+
+
+# --- fed-SMOTE statistics vs pooled-data SMOTE statistics ---------------------
+
+def test_minority_stats_aggregation_matches_pooled():
+    """Server-aggregated fed-SMOTE statistics vs the pooled-data minority
+    statistics: exact for equal-count shards (mean of means == pooled
+    mean), close under iid sharding."""
+    ds = F.synthesize(n=1600, seed=5)
+    # equal-count shards: slice the minority class evenly by hand
+    mino = np.where(ds.y == 1)[0][:200]
+    majo = np.where(ds.y == 0)[0][:1000]
+    half = [np.concatenate([mino[:100], majo[:500]]),
+            np.concatenate([mino[100:], majo[500:]])]
+    stats = [S.minority_stats(ds.x[p], ds.y[p]) for p in half]
+    mu_g, var_g = S.aggregate_stats(stats)
+    pooled = np.concatenate(half)
+    mu_p, var_p, m = S.minority_stats(ds.x[pooled], ds.y[pooled])
+    assert m == 200
+    np.testing.assert_allclose(mu_g, mu_p, atol=1e-6)
+    # mean-of-variances omits the between-shard term; for a random even
+    # split it is close to (and never above) the pooled variance
+    assert np.all(var_g <= var_p + 1e-6)
+    np.testing.assert_allclose(var_g, var_p, rtol=0.35)
+    # iid registry shards: aggregated stats track the pooled ones
+    parts = P.partition_indices("iid", ds.x, ds.y, 4, seed=3)
+    stats4 = [S.minority_stats(ds.x[p], ds.y[p]) for p in parts]
+    mu4, var4 = S.aggregate_stats(stats4)
+    mu_all, var_all, _ = S.minority_stats(ds.x, ds.y)
+    np.testing.assert_allclose(mu4, mu_all, atol=0.15)
+    np.testing.assert_allclose(var4, var_all, rtol=0.5)
+    # and the synthetic draws land on the aggregated statistics
+    x2, y2 = S.fed_smote(ds.x[parts[0]], ds.y[parts[0]], mu4, var4,
+                         seed=0)
+    synth = x2[len(parts[0]):]
+    np.testing.assert_allclose(synth.mean(0), mu4, atol=0.2)
+
+
+def test_smote_chunked_matches_dense_reference():
+    """The chunked kNN must reproduce the dense m×m implementation
+    bit-for-bit (minority spans multiple chunks)."""
+    r = np.random.default_rng(1)
+    x = r.normal(size=(1100, 8)).astype(np.float32)
+    y = (np.arange(1100) < 300).astype(np.float32)   # 300 minority
+    xm = x[:300]
+    d2 = ((xm[:, None, :] - xm[None, :, :]) ** 2).sum(-1)
+    np.fill_diagonal(d2, np.inf)
+    ref = np.argsort(d2, axis=1)[:, :5]
+    np.testing.assert_array_equal(S._knn_indices(xm, 5, chunk=128), ref)
+    xa, ya = S.smote(x, y, seed=3)
+    assert abs(float(ya.mean()) - 0.5) < 0.01

@@ -1,0 +1,319 @@
+"""FedRuntime: exact parity with the pre-runtime pipelines under
+iid + full participation + plain transport, partial-participation
+ledger semantics, straggler/stale handling, and the layered transport
+stack (composition, presets, validation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import comm as CM
+from repro.core import parametric as P
+from repro.core import privacy
+from repro.core.comm import CommLog, Timer, get_transport, pytree_bytes
+from repro.core.metrics import binary_metrics
+from repro.core.participation import get_participation
+from repro.core.strategies import get_strategy
+from repro.data import framingham as F
+
+
+def _clients(n=600, k=3, seed=1):
+    ds = F.synthesize(n=n, seed=seed)
+    tr, te = F.train_test_split(ds)
+    return [(c.x, c.y) for c in F.partition_clients(tr, k)], (te.x, te.y)
+
+
+# --- parity: runtime parametric == the pre-runtime round loop -----------------
+
+def _legacy_train(clients, cfg, test=None):
+    """The PR-1 parametric round loop, verbatim — the parity oracle."""
+    comm = CommLog()
+    timer = Timer()
+    spec = P.tabular.MODELS[cfg.model]
+    strat = get_strategy(cfg.strategy)
+    mu = cfg.fedprox_mu if cfg.fedprox_mu > 0 else strat.client_mu
+    clients = [(P._prep(cfg.model, x), y) for x, y in clients]
+    if test is not None:
+        test = (P._prep(cfg.model, test[0]), test[1])
+    clients, _ = P._fed_sampling(clients, cfg.sampling, cfg.seed, comm)
+    ws = strat.norm_weights([len(y) for _, y in clients])
+    rng = jax.random.PRNGKey(cfg.seed)
+    gp = spec["init"](rng, clients[0][0].shape[1])
+    sst = strat.init_state(gp)
+    history = []
+    for r in range(cfg.rounds):
+        updates = []
+        for i, (x, y) in enumerate(clients):
+            comm.log(r, f"c{i}", "down", pytree_bytes(gp), "model")
+            local = P._local_train(cfg.model, gp, x, y, cfg.local_steps,
+                                   cfg.lr, global_params=gp, mu=mu)
+            update = jax.tree.map(lambda a, b: a - b, local, gp)
+            if cfg.dp_epsilon > 0:
+                update, _ = privacy.clip_update(update, cfg.dp_clip)
+            if strat.weighted:
+                w = ws[i] * len(clients)
+                update = jax.tree.map(lambda t: t * w, update)
+            if cfg.secure_agg:
+                update = privacy.mask_update(update, i, len(clients),
+                                             cfg.seed * 7919 + r)
+            comm.log(r, f"c{i}", "up", pytree_bytes(update), "update")
+            updates.append(update)
+        with timer:
+            total = privacy.secure_sum(updates)
+            mean = jax.tree.map(lambda t: t / len(clients), total)
+            if cfg.dp_epsilon > 0:
+                mean = privacy.add_dp_noise(mean, cfg.dp_epsilon,
+                                            cfg.dp_delta,
+                                            cfg.dp_clip * max(ws),
+                                            cfg.seed * 31 + r)
+            mean, sst = strat.server_update(sst, mean)
+            gp = jax.tree.map(lambda g, u: g + u, gp, mean)
+        if test is not None:
+            pred = np.asarray(spec["predict"](gp, jnp.asarray(test[0])))
+            history.append(binary_metrics(pred, test[1]))
+    return gp, comm, history
+
+
+@pytest.mark.parametrize("kw", [
+    dict(),
+    dict(strategy="fedavg_weighted", sampling="ros"),
+    dict(secure_agg=True, dp_epsilon=0.5, dp_clip=2.0),
+    dict(strategy="fedadam"),
+])
+def test_parametric_runtime_matches_legacy_loop(kw):
+    """The acceptance bar: under iid + full participation + plain
+    transport the runtime path reproduces the pre-refactor losses,
+    params, and ledger events bit-for-bit."""
+    clients, test = _clients()
+    cfg = P.FedParametricConfig(model="logreg", rounds=3, local_steps=8,
+                                lr=0.05, **kw)
+    p_new, c_new, h_new, _ = P.train_federated(clients, cfg, test=test)
+    p_old, c_old, h_old = _legacy_train(clients, cfg, test=test)
+    for a, b in zip(jax.tree.leaves(p_new), jax.tree.leaves(p_old)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert c_new.events == c_old.events
+    assert h_new == h_old
+
+
+def test_cfg_flags_equal_explicit_transport_stack():
+    """secure_agg/dp_epsilon config flags and the 'secure_dp' transport
+    preset must build the same wire pipeline (same masks, same noise)."""
+    clients, test = _clients(n=400)
+    a = P.FedParametricConfig(model="logreg", rounds=2, local_steps=5,
+                              secure_agg=True, dp_epsilon=0.5,
+                              dp_clip=2.0)
+    b = P.FedParametricConfig(model="logreg", rounds=2, local_steps=5,
+                              transport="secure_dp", dp_epsilon=0.5,
+                              dp_clip=2.0)
+    pa, ca, ha, _ = P.train_federated(clients, a, test=test)
+    pb, cb, hb, _ = P.train_federated(clients, b, test=test)
+    for x, y in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert ca.events == cb.events
+
+
+# --- partial participation ----------------------------------------------------
+
+def test_uniform_k_cuts_ledger_proportionally():
+    clients, test = _clients(k=4)
+    full = P.FedParametricConfig(model="logreg", rounds=4, local_steps=5)
+    sub = P.FedParametricConfig(model="logreg", rounds=4, local_steps=5,
+                                participation="uniform:2")
+    _, cf, _, _ = P.train_federated(clients, full)
+    _, cs, _, _ = P.train_federated(clients, sub)
+    ups_f = [e for e in cf.events if e["direction"] == "up"]
+    ups_s = [e for e in cs.events if e["direction"] == "up"]
+    assert len(ups_f) == 4 * 4 and len(ups_s) == 2 * 4
+    assert cs.total_bytes() == cf.total_bytes() // 2
+    # schedule is deterministic in the runtime seed
+    _, cs2, _, _ = P.train_federated(clients, sub)
+    assert cs.events == cs2.events
+
+
+def test_stratified_covers_strata():
+    sched = get_participation("stratified:2")
+    rng = np.random.default_rng(0)
+    for r in range(20):
+        plan = sched.plan(r, 8, rng)
+        assert len(plan.arrive) == 2
+        # one from each contiguous half
+        assert sum(1 for i in plan.arrive if i < 4) == 1
+
+
+def test_dropout_stragglers_deliver_stale():
+    """With p_straggle=1 every dropped client computes and delivers next
+    round: no update is lost, and stateful strategies stay finite."""
+    clients, test = _clients(k=3)
+    cfg = P.FedParametricConfig(model="logreg", rounds=5, local_steps=4,
+                                strategy="fedavgm",
+                                participation="dropout:0.5:1.0")
+    params, comm, hist, _ = P.train_federated(clients, cfg, test=test)
+    for leaf in jax.tree.leaves(params):
+        assert np.isfinite(np.asarray(leaf)).all()
+    # every computed update was shipped (logged) exactly once
+    ups = [e for e in comm.events if e["direction"] == "up"]
+    assert len(ups) >= 5  # at least one client per round
+
+
+def test_participation_registry_errors():
+    with pytest.raises(KeyError):
+        get_participation("sometimes")
+    with pytest.raises(ValueError):
+        get_participation("full:3")  # full takes no args
+
+
+def test_stale_payloads_are_discounted():
+    """A straggler's update must reach the aggregator scaled by
+    stale_discount ** staleness, for any aggregator normalization."""
+    from repro.core.runtime import (ClientMsg, ClientWork, FedRuntime,
+                                    ServerAgg)
+    from repro.core.participation import Participation, RoundPlan
+
+    # deterministic schedule: round 0 everybody straggles except c0,
+    # round 1 everybody arrives
+    sched = Participation("test", lambda r, n, rng: (
+        RoundPlan([0], [1]) if r == 0 else RoundPlan([0, 1], [])),
+        may_straggle=True)
+
+    seen = []
+
+    class W(ClientWork, ServerAgg):
+        def setup(self, rt):
+            return {}
+
+        def client_round(self, rt, state, rnd):
+            return [ClientMsg(i, {"u": jnp.ones(2)}, 8)
+                    for i in rnd.computing]
+
+        def aggregate(self, rt, state, msgs, rnd):
+            seen.append({m.client: float(m.payload["u"][0])
+                         for m in msgs})
+            return state
+
+    rt = FedRuntime(n_clients=2, rounds=2, participation=sched,
+                    stale_discount=0.5)
+    rt.run(W())
+    assert seen[0] == {0: 1.0}                 # straggler absent
+    assert seen[1] == {0: 1.0, 1: 0.5}         # delivered stale, halved
+
+
+def test_mask_transport_rejects_straggling_schedule():
+    """Pairwise masks are keyed to the compute round's active set and
+    can never cancel a round late — the runtime must refuse."""
+    clients, _ = _clients(k=3)
+    cfg = P.FedParametricConfig(model="logreg", rounds=2, local_steps=3,
+                                secure_agg=True,
+                                participation="dropout:0.3:0.5")
+    with pytest.raises(ValueError, match="mask"):
+        P.train_federated(clients, cfg)
+    # lost-straggler dropout (p_straggle=0) still composes with masks
+    cfg_ok = P.FedParametricConfig(model="logreg", rounds=2,
+                                   local_steps=3, secure_agg=True,
+                                   participation="dropout:0.3")
+    params, _, _, _ = P.train_federated(clients, cfg_ok)
+    for leaf in jax.tree.leaves(params):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_one_shot_survives_all_straggler_round():
+    """allow_stale=False pipelines treat stragglers as drops but must
+    keep the round alive: dropout:1:1 schedules everyone as a straggler,
+    yet the one-shot RF still trains on a promoted client."""
+    from repro.core import tree_subset as TS
+    clients, test = _clients(k=3)
+    cfg = TS.FedForestConfig(trees_per_client=3, subset=2, depth=3,
+                             n_bins=16, participation="dropout:1.0:1.0",
+                             seed=0)
+    model, comm, _ = TS.train_federated_rf(clients, cfg)
+    assert model is not None
+    assert len([e for e in comm.events if e["what"] == "trees"]) == 1
+    assert np.isfinite(TS.evaluate_rf(model, test[0], test[1])["f1"])
+
+
+# --- tree pipelines on the runtime --------------------------------------------
+
+def test_tree_subset_participation_and_framing():
+    from repro.core import tree_subset as TS
+    clients, test = _clients(k=4)
+    base = dict(trees_per_client=4, subset=2, depth=3, n_bins=16, seed=0)
+    m_full, c_full, _ = TS.train_federated_rf(
+        clients, TS.FedForestConfig(**base))
+    assert len([e for e in c_full.events
+                if e["what"] == "trees"]) == 4
+    m_sub, c_sub, _ = TS.train_federated_rf(
+        clients, TS.FedForestConfig(participation="uniform:2", **base))
+    assert len([e for e in c_sub.events if e["what"] == "trees"]) == 2
+    assert int(m_sub.forest.feature.shape[0]) == 4  # 2 clients x s=2
+    # framing adds exactly the header per logged message
+    m_fr, c_fr, _ = TS.train_federated_rf(
+        clients, TS.FedForestConfig(transport="framed", **base))
+    assert c_fr.total_bytes() == c_full.total_bytes() \
+        + 28 * len(c_full.events)
+    # float codec layers don't apply to shipped trees
+    with pytest.raises(ValueError):
+        TS.train_federated_rf(clients, TS.FedForestConfig(
+            transport="sparse", **base))
+
+
+def test_fed_hist_partial_participation_ledger():
+    from repro.core import fed_hist as FH
+    clients, test = _clients(k=4)
+    cfg = FH.FedHistConfig(num_rounds=4, depth=3, n_bins=16,
+                           participation="uniform:2", seed=0)
+    model, comm, _ = FH.train_federated_xgb_hist(clients, cfg)
+    hist_events = [e for e in comm.events
+                   if e["what"] == "grad-hess-histograms"]
+    assert len(hist_events) == 2 * 4      # k=2 clients x 4 rounds
+    # broadcast trees still reach all 4 clients
+    tree_events = [e for e in comm.events if e["what"] == "tree"]
+    assert len(tree_events) == 4 * 4
+    m = FH.evaluate_fed_hist(model, test[0], test[1])
+    assert np.isfinite(m["f1"])
+    with pytest.raises(ValueError):  # codecs can't wrap in-jit hists
+        FH.train_federated_xgb_hist(clients, FH.FedHistConfig(
+            num_rounds=1, depth=2, transport="quant"))
+
+
+# --- transport stack ----------------------------------------------------------
+
+def test_transport_registry_and_validation():
+    t = get_transport("full_stack", rho=0.25, dp_clip=1.0)
+    assert [l.name for l in t.layers] == ["topk", "clip", "mask",
+                                          "dpnoise", "frame"]
+    assert t.frame_overhead == 28
+    assert get_transport("plain").layers == []
+    spec = get_transport("topk>frame", rho=0.1)
+    assert [l.name for l in spec.layers] == ["topk", "frame"]
+    with pytest.raises(KeyError):
+        get_transport("carrier-pigeon")
+    with pytest.raises(ValueError):
+        get_transport("topk>int8")   # two codecs double-count bytes
+
+
+def test_transport_encode_bytes_and_codec_state():
+    t = get_transport("topk>frame", rho=0.25)
+    delta = {"w": jnp.asarray(np.random.default_rng(0).normal(
+        size=(32,)), jnp.float32)}
+    msg = t.encode(delta, ctx=CM.WireCtx(round=0, client=0, seed=0))
+    k = int(np.ceil(0.25 * 32))
+    assert msg.nbytes == k * 8 + 28      # topk values+indices + header
+    assert msg.state is not None         # error-feedback residual
+    plain = get_transport("plain").encode(delta)
+    assert plain.nbytes == pytree_bytes(delta)
+
+
+def test_simulate_transport_and_participation():
+    """LM engine: --transport/--participation end to end, and the
+    compression knob composes with (but refuses to duplicate) codecs."""
+    from repro.launch.fed_train import simulate
+    smoke = dict(n_pods=4, rounds=2, local_steps=2, batch=2, seq=32,
+                 verbose=False, seed=0)
+    out = simulate("qwen3_4b", participation="uniform:2",
+                   transport="framed", **smoke)
+    ups = [e for e in out["comm"].events if e["direction"] == "up"]
+    assert len(ups) == 2 * 2
+    n_elems = sum(x.size for x in jax.tree.leaves(out["final_params"]))
+    assert all(e["bytes"] == n_elems * 4 + 28 for e in ups)
+    with pytest.raises(ValueError):
+        simulate("qwen3_4b", compression="topk", transport="sparse",
+                 **smoke)

@@ -16,6 +16,12 @@ Source-side checks (src/, examples/, benchmarks/, tests/, tools/):
   * bare UPPERCASE doc names (``DESIGN.md``, ``EXPERIMENTS.md``) —
     resolved against the repo root, then ``docs/``.
 
+Registry checks: every selectable name in the runtime registries —
+strategies, wire formats, partitioners, participation schedules,
+transport presets and layers (``REGISTRIES`` below) — must appear
+somewhere in the docs corpus, so a registered-but-undocumented knob
+fails CI.
+
 Run:  PYTHONPATH=src python tools/check_docs.py
 Exits non-zero listing every broken reference.
 """
@@ -39,6 +45,15 @@ PATH = re.compile(
     r"\b((?:src|examples|benchmarks|docs|tests|tools)/[\w/.-]+\.(?:py|md))")
 # bare top-level doc names cited from docstrings ("DESIGN.md §Data-gate")
 BARE_MD = re.compile(r"\b([A-Z][A-Z0-9_+-]+\.md)\b")
+# every name registered in these dicts must appear in the docs corpus
+REGISTRIES = [
+    ("repro.core.strategies", "STRATEGIES"),
+    ("repro.core.compression", "WIRE_FORMATS"),
+    ("repro.data.partition", "PARTITIONERS"),
+    ("repro.core.participation", "PARTICIPATION"),
+    ("repro.core.comm", "TRANSPORTS"),
+    ("repro.core.comm", "LAYERS"),
+]
 
 
 def check_dotted(name: str) -> str:
@@ -72,6 +87,22 @@ def check_file_refs(text: str) -> list:
     return errors
 
 
+def check_registries(docs_text: str) -> list:
+    """Every registry name must be documented somewhere in the docs."""
+    errors = []
+    for mod_name, attr in REGISTRIES:
+        try:
+            registry = getattr(importlib.import_module(mod_name), attr)
+        except (ImportError, AttributeError) as e:
+            errors.append(f"registry {mod_name}.{attr} unimportable: {e}")
+            continue
+        for name in sorted(registry):
+            if not re.search(rf"\b{re.escape(name)}\b", docs_text):
+                errors.append(f"registry name {name!r} "
+                              f"({mod_name}.{attr}) is undocumented")
+    return errors
+
+
 def main() -> int:
     sys.path.insert(0, os.path.join(ROOT, "src"))
     sys.path.insert(0, ROOT)  # for benchmarks.*
@@ -81,15 +112,18 @@ def main() -> int:
         print("no docs found", file=sys.stderr)
         return 1
     errors = []
+    docs_corpus = []
     for doc in docs:
         rel = os.path.relpath(doc, ROOT)
         text = open(doc).read()
+        docs_corpus.append(text)
         refs = set(DOTTED.findall(text)) | set(PY_M.findall(text))
         for name in sorted(refs):
             err = check_dotted(name.rstrip("."))
             if err:
                 errors.append(f"{rel}: {err}")
         errors.extend(f"{rel}: {e}" for e in check_file_refs(text))
+    errors.extend(check_registries("\n".join(docs_corpus)))
     sources = sorted(p for g in SRC_GLOBS
                      for p in glob.glob(os.path.join(ROOT, g),
                                         recursive=True))
