@@ -57,6 +57,7 @@ def table2(seed: int = 0) -> Dict:
             out[f"{model}/{samp}"] = {
                 "f1": m["f1"], "precision": m["precision"],
                 "recall": m["recall"],
+                "roc_auc": m["roc_auc"], "brier": m["brier"],
                 "comm_mb": comm.total_mb(),
                 "uplink_mb": comm.uplink_mb(),
                 "agg_s": timer.total_s,
@@ -77,7 +78,7 @@ def table3(seed: int = 0) -> Dict:
         model, comm, timer = TS.train_federated_rf(clients, cfg)
         out[f"rf_full/{samp}"] = {
             **{kk: vv for kk, vv in TS.evaluate_rf(model, te.x, te.y).items()
-               if kk in ("f1", "precision", "recall")},
+               if kk in ("f1", "precision", "recall", "roc_auc", "brier")},
             "uplink_mb": comm.uplink_mb(), "agg_s": timer.total_s}
     # tree-subset variants (the paper's RF (30 Trees) row uses 30%):
     for s, name in [(30, "rf_sub30"), (FCFG.rf_subset_trees, "rf_sub10")]:
@@ -86,7 +87,7 @@ def table3(seed: int = 0) -> Dict:
         model, comm, timer = TS.train_federated_rf(clients, cfg)
         out[f"{name}/smote"] = {
             **{kk: vv for kk, vv in TS.evaluate_rf(model, te.x, te.y).items()
-               if kk in ("f1", "precision", "recall")},
+               if kk in ("f1", "precision", "recall", "roc_auc", "brier")},
             "uplink_mb": comm.uplink_mb(), "agg_s": timer.total_s}
     xcfg0 = FE.FedXGBConfig(num_rounds=FCFG.xgb_trees,
                             depth=FCFG.xgb_max_depth,
@@ -99,13 +100,13 @@ def table3(seed: int = 0) -> Dict:
         out[f"xgb_full/{samp}"] = {
             **{kk: vv for kk, vv in
                FE.evaluate_fed_xgb(ens, te.x, te.y).items()
-               if kk in ("f1", "precision", "recall")},
+               if kk in ("f1", "precision", "recall", "roc_auc", "brier")},
             "uplink_mb": comm.uplink_mb(), "agg_s": timer.total_s}
     xcfg = FE.FedXGBConfig(**{**xcfg0.__dict__, "sampling": "smote"})
     ens, comm, timer = FE.train_federated_xgb_fe(clients, xcfg)
     out["xgb_fe/smote"] = {
         **{kk: vv for kk, vv in FE.evaluate_fe(ens, te.x, te.y).items()
-           if kk in ("f1", "precision", "recall")},
+           if kk in ("f1", "precision", "recall", "roc_auc", "brier")},
         "uplink_mb": comm.uplink_mb(), "agg_s": timer.total_s}
     return out
 
@@ -150,30 +151,45 @@ def table5(t2: Dict, t3: Dict, seed: int = 0) -> Dict:
         _, cm = P.train_centralized(tr.x, tr.y, cfg, test=(te.x, te.y))
         out[model] = {"centralized_f1": cm["f1"],
                       "federated_f1": t2[f"{model}/{samp}"]["f1"],
+                      "centralized_auc": cm["roc_auc"],
+                      "federated_auc": t2[f"{model}/{samp}"]["roc_auc"],
+                      "centralized_brier": cm["brier"],
+                      "federated_brier": t2[f"{model}/{samp}"]["brier"],
                       "sampling": samp}
     # trees centralized
     from repro.trees import forest as RF
     from repro.trees import gbdt as GB
     xs, ys = S.smote(tr.x, tr.y, seed=seed)
+    xte = jnp.asarray(te.x)
     rf = RF.fit(jnp.asarray(xs), jnp.asarray(ys),
                 num_trees=FCFG.rf_trees, depth=10, feature_frac=0.8,
                 rng=jax.random.PRNGKey(seed))
-    rf_m = binary_metrics(np.asarray(RF.predict(rf, jnp.asarray(te.x))),
-                          te.y)
+    rf_m = binary_metrics(np.asarray(RF.predict(rf, xte)), te.y,
+                          scores=np.asarray(RF.predict_proba(rf, xte)))
     gb = GB.fit(jnp.asarray(xs), jnp.asarray(ys), num_rounds=FCFG.xgb_trees,
                 depth=FCFG.xgb_max_depth, learning_rate=FCFG.xgb_lr)
-    gb_m = binary_metrics(np.asarray(GB.predict(gb, jnp.asarray(te.x))),
-                          te.y)
-    best_rf_fed = max(v["f1"] for kk, v in t3.items()
-                      if kk.startswith("rf_full"))
+    gb_m = binary_metrics(np.asarray(GB.predict(gb, xte)), te.y,
+                          scores=np.asarray(GB.predict_proba(gb, xte)))
+    # best federated row by F1; its OWN auc (never pair metrics across
+    # different sampling runs)
+    best_rf = max((v for kk, v in t3.items() if kk.startswith("rf_full")),
+                  key=lambda v: v["f1"])
     out["random_forest"] = {"centralized_f1": rf_m["f1"],
-                            "federated_f1": best_rf_fed}
+                            "federated_f1": best_rf["f1"],
+                            "centralized_auc": rf_m["roc_auc"],
+                            "federated_auc": best_rf["roc_auc"],
+                            "centralized_brier": rf_m["brier"]}
     out["rf_optimized"] = {"centralized_f1": None,
-                           "federated_f1": t3["rf_sub30/smote"]["f1"]}
-    best_xgb_fed = max(v["f1"] for kk, v in t3.items()
-                       if kk.startswith("xgb_full"))
+                           "federated_f1": t3["rf_sub30/smote"]["f1"],
+                           "federated_auc": t3["rf_sub30/smote"]["roc_auc"]}
+    best_xgb = max((v for kk, v in t3.items()
+                    if kk.startswith("xgb_full")),
+                   key=lambda v: v["f1"])
     out["xgboost"] = {"centralized_f1": gb_m["f1"],
-                      "federated_f1": best_xgb_fed}
+                      "federated_f1": best_xgb["f1"],
+                      "centralized_auc": gb_m["roc_auc"],
+                      "federated_auc": best_xgb["roc_auc"],
+                      "centralized_brier": gb_m["brier"]}
     return out
 
 

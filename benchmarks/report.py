@@ -4,6 +4,7 @@
   python -m benchmarks.report roofline  # §Roofline table
   python -m benchmarks.report paper     # §Repro tables vs paper claims
   python -m benchmarks.report perf      # §Perf before/after per tag
+  python -m benchmarks.report serve     # §Serving throughput/latency
 """
 from __future__ import annotations
 
@@ -148,7 +149,27 @@ def perf_section(pairs=None) -> str:
     return "\n".join(out)
 
 
+def serve_section() -> str:
+    """Bucketed-engine throughput/latency per bundle kind + the forest
+    kernel vs the training-side traversal (benchmarks.serve_bench)."""
+    with open("results/serve/serve_bench.json") as f:
+        res = json.load(f)
+    out = ["### §Serving — bundle scoring throughput/latency", "",
+           "| bundle kind / batch | rows/s | p50 ms | p99 ms |",
+           "|---|---|---|---|"]
+    for key, st in res["engine"].items():
+        out.append(f"| {key} | {st['rows_per_s']:,.0f} "
+                   f"| {st['p50_ms']:.3f} | {st['p99_ms']:.3f} |")
+    out.append("")
+    out.append("**Forest inference** (128 trees x depth 8 x 4096 rows):")
+    for key, st in res["kernel"].items():
+        out.append(f"- {key}: {st['us'] / 1e3:.1f}ms/call, "
+                   f"{st['rows_per_s']:,.0f} rows/s")
+    return "\n".join(out)
+
+
 if __name__ == "__main__":
     which = sys.argv[1] if len(sys.argv) > 1 else "roofline"
     print({"dryrun": dryrun_section, "roofline": roofline_section,
-           "paper": paper_section, "perf": perf_section}[which]())
+           "paper": paper_section, "perf": perf_section,
+           "serve": serve_section}[which]())

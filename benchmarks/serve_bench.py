@@ -1,0 +1,169 @@
+"""Serving benchmark: bundle export/score throughput + latency per
+pipeline kind, and the forest-inference kernel vs the training-side
+per-level traversal loop.
+
+Each row is ``(name, us_per_request, derived)`` in the harness CSV
+shape.  ``serve/<kind>/b<batch>`` rows drive the bucketed
+``repro.serve.engine`` over a request stream of that batch size and
+carry ``rows_per_s`` / ``p50_ms`` / ``p99_ms``; ``forest_infer/*`` rows
+time one large forest scored by (a) the per-level vmap traversal the
+training code uses (``trees.growth.predict_forest``), (b) the jitted
+XLA reference, and (c) the Pallas kernel path — the serving hot-path
+before/after.
+
+Full results land in ``results/serve/serve_bench.json`` for
+``benchmarks.report serve``.
+
+Run standalone:  PYTHONPATH=src python -m benchmarks.serve_bench
+Parity gate:     PYTHONPATH=src python -m benchmarks.serve_bench --smoke
+(the CI serve-smoke job; exits non-zero if the kernel, the bucketed
+engine, or a bundle round-trip drifts from its reference).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import framingham as F
+from repro.kernels.forest_infer.ops import forest_infer
+from repro.launch.serve_fed import check_kernel_parity, train_smoke_bundles
+from repro.serve import bundle as B
+from repro.serve.engine import ScoringEngine
+from repro.trees import forest as RF
+from repro.trees.growth import predict_forest
+
+BATCHES = (64, 256, 1024)
+BUCKETS = (64, 256, 1024)
+N_REQUESTS = 30
+
+
+def _engine_rows():
+    bundles, (xt, _) = train_smoke_bundles(seed=0, n_records=1200)
+    stream = F.synthesize(n=max(BATCHES) * 4, seed=7).x
+    rows, stats = [], {}
+    for kind, bundle in bundles.items():
+        engine = ScoringEngine(bundle, bucket_sizes=BUCKETS)
+        engine.warmup(stream.shape[1])
+        for batch in BATCHES:
+            engine.reset_stats()
+            for i in range(N_REQUESTS):
+                lo = (i * batch) % (len(stream) - batch)
+                engine.score(stream[lo:lo + batch])
+            st = engine.stats()
+            stats[f"{kind}/b{batch}"] = st
+            rows.append((f"serve/{kind}/b{batch}",
+                         st["p50_ms"] * 1e3,
+                         f"rows_per_s={st['rows_per_s']:.0f};"
+                         f"p50_ms={st['p50_ms']:.3f};"
+                         f"p99_ms={st['p99_ms']:.3f}"))
+    return rows, stats
+
+
+def _kernel_rows():
+    """One 128-tree depth-8 forest on a 4096-row batch: the per-level
+    training traversal vs the jitted serving paths."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2000, 15)).astype(np.float32))
+    y = jnp.asarray((rng.random(2000) < 0.3).astype(np.float32))
+    rf = RF.fit(x, y, num_trees=128, depth=8,
+                rng=jax.random.PRNGKey(0)).forest
+    xq = jnp.asarray(rng.normal(size=(4096, 15)).astype(np.float32))
+
+    variants = {
+        "loop": lambda: predict_forest(rf, xq),
+        "xla": jax.jit(lambda q: forest_infer(rf, q, impl="xla")),
+    }
+    if jax.default_backend() != "cpu":
+        # compiled kernel only off-CPU; interpret mode is a correctness
+        # tool, not a perf path
+        variants["pallas"] = jax.jit(
+            lambda q: forest_infer(rf, q, impl="pallas"))
+    rows, stats = [], {}
+    for name, fn in variants.items():
+        call = (lambda: fn(xq)) if name != "loop" else fn
+        jax.block_until_ready(call())            # warm / compile
+        times = []
+        for _ in range(10):
+            t0 = time.perf_counter()
+            jax.block_until_ready(call())
+            times.append(time.perf_counter() - t0)
+        us = float(np.median(times) * 1e6)
+        thr = xq.shape[0] / (us / 1e6)
+        stats[f"forest_infer/{name}"] = {"us": us, "rows_per_s": thr}
+        rows.append((f"forest_infer/{name}", us,
+                     f"trees=128;depth=8;rows=4096;"
+                     f"rows_per_s={thr:.0f}"))
+    return rows, stats
+
+
+def run() -> list:
+    engine_rows, engine_stats = _engine_rows()
+    kernel_rows, kernel_stats = _kernel_rows()
+    os.makedirs("results/serve", exist_ok=True)
+    with open("results/serve/serve_bench.json", "w") as f:
+        json.dump({"engine": engine_stats, "kernel": kernel_stats}, f,
+                  indent=1)
+    return engine_rows + kernel_rows
+
+
+def smoke() -> int:
+    """CPU parity gate (the CI serve-smoke job).  Returns an exit code."""
+    failures = []
+
+    def check(name, fn):
+        try:
+            fn()
+            print(f"  ok   {name}")
+        except Exception as e:  # noqa: BLE001 — report, don't crash
+            failures.append((name, e))
+            print(f"  FAIL {name}: {e}")
+
+    # seed differs from serve_fed --smoke so the two CI gates cover two
+    # model draws instead of re-checking one
+    bundles, (xt, yt) = train_smoke_bundles(seed=1)
+
+    def kernel_parity():
+        for bundle in bundles.values():
+            check_kernel_parity(bundle, xt)
+
+    def roundtrip_scores_stable():
+        for kind, bundle in bundles.items():
+            path = f"results/serve/bench_smoke/{kind}"
+            B.save_bundle(path, bundle)
+            a = ScoringEngine(bundle, bucket_sizes=(64,)).score(xt)
+            b = ScoringEngine(B.load_bundle(path),
+                              bucket_sizes=(64,)).score(xt)
+            np.testing.assert_array_equal(a, b)
+
+    def bucketed_matches_unbatched():
+        for bundle in bundles.values():
+            eng = ScoringEngine(bundle, bucket_sizes=(32, 128))
+            np.testing.assert_array_equal(eng.score(xt),
+                                          eng.score_unbatched(xt))
+
+    print("serve_bench --smoke (parity gate)")
+    check("forest kernel == predict_forest (all bundles)", kernel_parity)
+    check("bundle round-trip scores stable", roundtrip_scores_stable)
+    check("bucketed engine == unbatched", bucketed_matches_unbatched)
+    print(f"{len(failures)} parity regressions")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CPU parity gate for CI; exits non-zero "
+                    "on regressions")
+    args = ap.parse_args()
+    if args.smoke:
+        sys.exit(smoke())
+    print("name,us_per_request,derived")
+    for r in run():
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")

@@ -32,16 +32,21 @@ def main():
           f"{len(clients[0][1])} records\n")
 
     print("-- parametric pipeline (FedAvg / FedProx) --")
+    logreg_params = None
     for model in ["logreg", "svm", "mlp"]:
         cfg = P.FedParametricConfig(
             model=model, rounds=n_rounds, local_steps=40,
             lr={"logreg": 0.05, "svm": 0.02, "mlp": 0.01}[model],
             sampling="ros",
             fedprox_mu=0.01 if model == "mlp" else 0.0)
-        _, comm, hist, timer = P.train_federated(clients, cfg, test=test)
+        params, comm, hist, timer = P.train_federated(clients, cfg,
+                                                      test=test)
+        if model == "logreg":
+            logreg_params = params
         m = hist[-1]
         print(f"  {model:7s} ROS: F1={m['f1']:.3f} P={m['precision']:.3f} "
-              f"R={m['recall']:.3f}  comm={comm.total_mb():.2f}MB "
+              f"R={m['recall']:.3f} AUC={m['roc_auc']:.3f}  "
+              f"comm={comm.total_mb():.2f}MB "
               f"agg={timer.total_s*1e3:.0f}ms")
 
     print("\n-- aggregation strategies (registry) on logreg/ROS --")
@@ -125,6 +130,42 @@ def main():
     eh3 = FH.evaluate_fed_hist(hm3, te.x, te.y)
     print(f"  fed_hist site-shift + uniform:2: F1={eh3['f1']:.3f} "
           f"uplink={ch3.uplink_mb():.2f}MB")
+
+    print("\n-- serve: export bundles -> bucketed scoring engine --")
+    # the inference half: every trained artifact round-trips through a
+    # self-describing ModelBundle, then serves through the bucketed
+    # engine (Pallas forest-inference kernel on the tree kinds)
+    from repro.core.metrics import binary_metrics
+    from repro.serve import bundle as B
+    from repro.serve.engine import ScoringEngine
+    exported = {
+        "parametric": B.pack("parametric", logreg_params, model="logreg"),
+        "tree_subset": B.pack("tree_subset", m2),
+        "feature_extract": B.pack("feature_extract", fe),
+        "fed_hist": B.pack("fed_hist", hm),
+    }
+    for kind, bundle in exported.items():
+        path = f"results/serve/example/{kind}"
+        nbytes = B.save_bundle(path, bundle)
+        engine = ScoringEngine(B.load_bundle(path),
+                               bucket_sizes=(64, 256, 1024))
+        engine.warmup(te.x.shape[1])
+        probs = engine.score(te.x)
+        em = binary_metrics(probs > 0.5, te.y, scores=probs)
+        st = engine.stats()
+        print(f"  {kind:16s}: bundle={nbytes/1024:5.1f}KiB  "
+              f"F1={em['f1']:.3f} AUC={em['roc_auc']:.3f}  "
+              f"{st['rows_per_s']:,.0f} rows/s p50={st['p50_ms']:.2f}ms "
+              f"p99={st['p99_ms']:.2f}ms")
+    # compose the zoo into one calibrated ensemble (Platt on train data)
+    ens_engine = ScoringEngine(list(exported.values()),
+                               bucket_sizes=(64, 256, 1024))
+    ens_engine.calibrate(tr.x, tr.y)
+    probs = ens_engine.score(te.x)
+    em = binary_metrics(probs > 0.5, te.y, scores=probs)
+    print(f"  4-model ensemble + Platt: F1={em['f1']:.3f} "
+          f"AUC={em['roc_auc']:.3f} Brier={em['brier']:.3f} "
+          f"(a={ens_engine.calibration[0]:.2f})")
 
     print("\n-- federated SMOTE sync vs local SMOTE (skewed non-IID) --")
     skewed = F.partition_clients(tr, 3, alpha=0.3)

@@ -222,17 +222,23 @@ def train_federated_xgb_fe(clients: Sequence[Tuple[np.ndarray, np.ndarray]],
     return _run_one_shot(clients, cfg, "fe", fed_stats)
 
 
-def predict_fe(ens: FeatureExtractEnsemble, x) -> np.ndarray:
+def score_fe(ens: FeatureExtractEnsemble, x) -> np.ndarray:
+    """Data-size-weighted vote probability in [0,1]."""
     xj = jnp.asarray(x)
     score = np.zeros(x.shape[0])
     for model, w in zip(ens.trees, ens.weights):
         p = jax.nn.sigmoid(gbdt.predict_margin(model, xj))
         score += w * np.asarray(p)
-    return score > 0.5
+    return score
+
+
+def predict_fe(ens: FeatureExtractEnsemble, x) -> np.ndarray:
+    return score_fe(ens, x) > 0.5
 
 
 def evaluate_fe(ens, x, y):
-    return binary_metrics(predict_fe(ens, x), y)
+    scores = score_fe(ens, x)
+    return binary_metrics(scores > 0.5, y, scores=scores)
 
 
 # --- dense federated XGBoost baseline ----------------------------------------
@@ -249,13 +255,19 @@ def train_federated_xgb(clients, cfg: FedXGBConfig, fed_stats=None):
     return _run_one_shot(clients, cfg, "dense", fed_stats)
 
 
-def predict_fed_xgb(ens: FedXGBEnsemble, x) -> np.ndarray:
+def margin_fed_xgb(ens: FedXGBEnsemble, x) -> np.ndarray:
     xj = jnp.asarray(x)
     margin = np.zeros(x.shape[0])
     for m, w in zip(ens.models, ens.weights):
         margin += w * np.asarray(gbdt.predict_margin(m, xj))
-    return margin > 0
+    return margin
+
+
+def predict_fed_xgb(ens: FedXGBEnsemble, x) -> np.ndarray:
+    return margin_fed_xgb(ens, x) > 0
 
 
 def evaluate_fed_xgb(ens, x, y):
-    return binary_metrics(predict_fed_xgb(ens, x), y)
+    margin = margin_fed_xgb(ens, x)
+    return binary_metrics(margin > 0, y,
+                          scores=1.0 / (1.0 + np.exp(-margin)))

@@ -227,5 +227,6 @@ def train_federated_xgb_hist(clients: Sequence[Tuple[np.ndarray,
 
 
 def evaluate_fed_hist(model: gbdt.GBDT, x, y):
-    return binary_metrics(np.asarray(gbdt.predict(model, jnp.asarray(x))),
-                          y)
+    xj = jnp.asarray(x)
+    return binary_metrics(np.asarray(gbdt.predict(model, xj)), y,
+                          scores=np.asarray(gbdt.predict_proba(model, xj)))

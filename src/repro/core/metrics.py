@@ -1,12 +1,46 @@
-"""Binary-classification metrics (paper's primary: F1; plus P/R/acc)."""
+"""Binary-classification metrics (paper's primary: F1; plus P/R/acc,
+and threshold-free ROC-AUC / Brier when scores are available)."""
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Optional
 
 import numpy as np
 
 
-def binary_metrics(pred, y) -> Dict[str, float]:
+def roc_auc(scores, y) -> float:
+    """Rank-based (Mann-Whitney) ROC-AUC with tie-averaged ranks.
+
+    scores: any monotone score (probability or margin); y: {0,1}.
+    Returns NaN when only one class is present."""
+    s = np.asarray(scores, np.float64)
+    y = np.asarray(y).astype(bool)
+    n_pos = int(y.sum())
+    n_neg = len(y) - n_pos
+    if n_pos == 0 or n_neg == 0:
+        return float("nan")
+    order = np.argsort(s, kind="mergesort")
+    _, inv, counts = np.unique(s[order], return_inverse=True,
+                               return_counts=True)
+    starts = np.cumsum(counts) - counts
+    avg_rank = starts + (counts + 1) / 2.0         # 1-based, tie-averaged
+    ranks = np.empty(len(s), np.float64)
+    ranks[order] = avg_rank[inv]
+    return float((ranks[y].sum() - n_pos * (n_pos + 1) / 2.0)
+                 / (n_pos * n_neg))
+
+
+def brier_score(probs, y) -> float:
+    """Mean squared error of predicted probabilities (clipped to [0,1])."""
+    p = np.clip(np.asarray(probs, np.float64), 0.0, 1.0)
+    y = np.asarray(y).astype(np.float64)
+    return float(np.mean((p - y) ** 2))
+
+
+def binary_metrics(pred, y,
+                   scores: Optional[np.ndarray] = None) -> Dict[str, float]:
+    """Thresholded metrics from ``pred`` (bool); when ``scores`` (a
+    probability or monotone margin per row) is given, threshold-free
+    ``roc_auc`` and ``brier`` are added."""
     pred = np.asarray(pred).astype(bool)
     y = np.asarray(y).astype(bool)
     tp = int(np.sum(pred & y))
@@ -17,5 +51,9 @@ def binary_metrics(pred, y) -> Dict[str, float]:
     rec = tp / max(tp + fn, 1)
     f1 = 2 * prec * rec / max(prec + rec, 1e-12)
     acc = (tp + tn) / max(len(y), 1)
-    return {"f1": f1, "precision": prec, "recall": rec, "accuracy": acc,
-            "tp": tp, "fp": fp, "fn": fn, "tn": tn}
+    out = {"f1": f1, "precision": prec, "recall": rec, "accuracy": acc,
+           "tp": tp, "fp": fp, "fn": fn, "tn": tn}
+    if scores is not None:
+        out["roc_auc"] = roc_auc(scores, y)
+        out["brier"] = brier_score(scores, y)
+    return out

@@ -184,9 +184,11 @@ class _ParametricWork(ClientWork, ServerAgg):
                                            state["params"], upd)
         if self.test is not None:
             spec = tabular.MODELS[self.cfg.model]
-            pred = np.asarray(spec["predict"](state["params"],
-                                              jnp.asarray(self.test[0])))
-            self.history.append(binary_metrics(pred, self.test[1]))
+            xt = jnp.asarray(self.test[0])
+            pred = np.asarray(spec["predict"](state["params"], xt))
+            scores = np.asarray(spec["proba"](state["params"], xt))
+            self.history.append(binary_metrics(pred, self.test[1],
+                                               scores=scores))
         return state
 
     def finalize(self, rt, state):
@@ -240,14 +242,16 @@ def train_centralized(x, y, cfg: FedParametricConfig,
                           cfg.rounds * cfg.local_steps, cfg.lr)
     out = {}
     if test is not None:
-        xt = _prep(cfg.model, test[0])
-        pred = np.asarray(spec["predict"](params, jnp.asarray(xt)))
-        out = binary_metrics(pred, test[1])
+        xt = jnp.asarray(_prep(cfg.model, test[0]))
+        pred = np.asarray(spec["predict"](params, xt))
+        out = binary_metrics(pred, test[1],
+                             scores=np.asarray(spec["proba"](params, xt)))
     return params, out
 
 
 def evaluate(model_name: str, params, x, y) -> Dict[str, float]:
     spec = tabular.MODELS[model_name]
-    xp = _prep(model_name, x)
-    pred = np.asarray(spec["predict"](params, jnp.asarray(xp)))
-    return binary_metrics(pred, y)
+    xp = jnp.asarray(_prep(model_name, x))
+    pred = np.asarray(spec["predict"](params, xp))
+    return binary_metrics(pred, y,
+                          scores=np.asarray(spec["proba"](params, xp)))

@@ -177,5 +177,7 @@ def train_federated_rf(clients: Sequence[Tuple[np.ndarray, np.ndarray]],
 
 
 def evaluate_rf(model: RF.RandomForest, x, y):
-    pred = np.asarray(RF.predict_votes(model, jnp.asarray(x)))
-    return binary_metrics(pred, y)
+    xj = jnp.asarray(x)
+    pred = np.asarray(RF.predict_votes(model, xj))
+    return binary_metrics(pred, y,
+                          scores=np.asarray(RF.predict_proba(model, xj)))

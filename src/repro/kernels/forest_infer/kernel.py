@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: batched dense-heap forest inference (serving).
+
+The serving hot path scores every tree of a trained forest on every
+request row (``repro.serve.engine``).  The training-side traversal
+(``trees/growth.predict_tree``) is a per-level Python loop of dynamic
+gathers; TPUs have no efficient per-row gather, so the TPU-native
+formulation turns every gather of the traversal into a small one-hot
+contraction (the same trick the ``hist`` kernel uses for scatters):
+
+    node one-hot (rows, 2^D-1) @ threshold     -> per-row threshold
+    node one-hot @ feature one-hot (2^D-1, F)  -> per-row feature mask
+    sum(x * feature mask, axis=1)              -> per-row feature value
+    leaf one-hot (rows, 2^D) @ leaf            -> per-row leaf value
+
+Each grid cell traverses ONE tree over ONE row tile; the grid is
+(trees, row-tiles), so the whole forest scores in a single
+``pallas_call``.  Every contraction selects exactly one element
+(1.0 * v + 0.0 + ...), so the kernel is bit-exact with the gather-based
+reference — the parity tests assert equality, not closeness.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _infer_kernel(feat_ref, thr_ref, leaf_ref, x_ref, o_ref, *,
+                  depth: int, block_n: int, n_feat: int):
+    feat = feat_ref[0]                       # (2^D - 1,) int32
+    thr = thr_ref[0]                         # (2^D - 1,) f32
+    leaf = leaf_ref[0]                       # (2^D,) f32
+    x = x_ref[...]                           # (block_n, F) f32
+    n_internal = feat.shape[0]
+    n_leaves = leaf.shape[0]
+
+    # feature one-hot per internal node; no-split nodes (feature = -1)
+    # match nothing -> all-zero row -> xv = 0 (routing ignores it anyway)
+    f_iota = jax.lax.broadcasted_iota(jnp.int32, (n_internal, n_feat), 1)
+    feat_oh = (feat[:, None] == f_iota).astype(jnp.float32)
+    no_split = (feat < 0).astype(jnp.float32)
+
+    node = jnp.zeros((block_n,), jnp.int32)
+    for _ in range(depth):
+        n_iota = jax.lax.broadcasted_iota(jnp.int32,
+                                          (block_n, n_internal), 1)
+        node_oh = (node[:, None] == n_iota).astype(jnp.float32)
+        t = node_oh @ thr                                   # (block_n,)
+        dead = node_oh @ no_split                           # 1.0 = no split
+        sel = node_oh @ feat_oh                             # (block_n, F)
+        xv = jnp.sum(x * sel, axis=1)
+        go_left = (dead < 0.5) & (xv <= t)
+        node = 2 * node + jnp.where(go_left, 1, 2)
+
+    leaf_idx = node - n_internal
+    l_iota = jax.lax.broadcasted_iota(jnp.int32, (block_n, n_leaves), 1)
+    leaf_oh = (leaf_idx[:, None] == l_iota).astype(jnp.float32)
+    o_ref[...] = (leaf_oh @ leaf)[None, :]
+
+
+def forest_infer_pallas(feature, threshold, leaf, x, *,
+                        block_n: int = 256, interpret: bool = False):
+    """Score a stacked forest on a batch of rows.
+
+    Usage contract:
+      * feature (T, 2^D - 1) int32 (-1 = no split), threshold
+        (T, 2^D - 1) f32 raw values, leaf (T, 2^D) f32 — the dense-heap
+        layout of ``repro.trees.growth.Tree`` with a leading tree axis.
+      * x (n, F) f32 raw features (thresholds are raw values, so no
+        binning at serve time).
+      * Rows are zero-padded up to a ``block_n`` multiple; traversal is
+        row-independent, so pad rows are sliced off the output unseen.
+      * VMEM per cell is O(block_n * (2^D + F)); shrink ``block_n`` for
+        very deep trees.
+      * interpret=True runs the same program in the Pallas interpreter —
+        the CPU fallback (see ``repro.kernels.forest_infer.ops``).
+
+    Returns (T, n) f32 per-tree leaf values — identical to
+    ``trees.growth.predict_forest`` bit for bit.
+    """
+    T, n_internal = feature.shape
+    n, F = x.shape
+    n_leaves = leaf.shape[1]
+    depth = n_internal.bit_length()  # 2^D - 1 internal -> D levels
+    assert n_leaves == n_internal + 1, "leaf axis must be 2^depth"
+    block_n = min(block_n, max(n, 1))
+    pad_n = (-n) % block_n
+    if pad_n:
+        x = jnp.pad(x, ((0, pad_n), (0, 0)))
+    np_ = x.shape[0]
+    grid = (T, np_ // block_n)
+    out = pl.pallas_call(
+        functools.partial(_infer_kernel, depth=depth, block_n=block_n,
+                          n_feat=F),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n_internal), lambda t, s: (t, 0)),
+            pl.BlockSpec((1, n_internal), lambda t, s: (t, 0)),
+            pl.BlockSpec((1, n_leaves), lambda t, s: (t, 0)),
+            pl.BlockSpec((block_n, F), lambda t, s: (s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda t, s: (t, s)),
+        out_shape=jax.ShapeDtypeStruct((T, np_), jnp.float32),
+        interpret=interpret,
+    )(feature, threshold.astype(jnp.float32), leaf.astype(jnp.float32),
+      x.astype(jnp.float32))
+    return out[:, :n]

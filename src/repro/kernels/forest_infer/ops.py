@@ -1,0 +1,46 @@
+"""Public jit'd wrapper for the forest-inference kernel (serving path)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.forest_infer.kernel import forest_infer_pallas
+from repro.kernels.forest_infer.ref import forest_infer_ref
+
+
+def forest_infer(forest, x, *, impl: str = "auto", block_n: int = 256):
+    """Per-tree leaf values for a stacked forest (the serving hot path).
+
+    Args:
+      forest: any object with dense-heap ``feature`` (T, 2^D - 1) int32,
+        ``threshold`` (T, 2^D - 1) f32, ``leaf`` (T, 2^D) f32 arrays —
+        ``repro.trees.growth.Tree`` with a leading tree axis, as produced
+        by every tree pipeline in the repo.
+      x: (n, F) f32 raw features (thresholds are raw values; no binning
+        needed at serve time).
+      impl: routing table, mirroring ``repro.kernels.hist.ops`` —
+
+        ==================  ==================================================
+        ``"auto"``          Pallas kernel on TPU/GPU, XLA reference on CPU.
+        ``"pallas"``        force the kernel; on CPU degrades to
+                            ``interpret=True`` (same kernel program, no
+                            Mosaic compile) instead of failing.
+        ``"pallas_interpret"``  force interpreter mode on any backend.
+        ``"xla"``           force the vmapped gather reference.
+        ==================  ==================================================
+
+    Returns (T, n) f32 — bit-exact with
+    ``trees.growth.predict_forest(forest, x)`` on every impl (the kernel's
+    one-hot contractions each select exactly one element).
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() != "cpu" else "xla"
+    if impl in ("pallas", "pallas_interpret"):
+        interpret = (impl == "pallas_interpret"
+                     or jax.default_backend() == "cpu")
+        return forest_infer_pallas(forest.feature, forest.threshold,
+                                   forest.leaf, x, block_n=block_n,
+                                   interpret=interpret)
+    if impl != "xla":
+        raise ValueError(f"unknown forest_infer impl {impl!r}")
+    return forest_infer_ref(forest.feature, forest.threshold, forest.leaf,
+                            x)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the forest-inference kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def forest_infer_ref(feature, threshold, leaf, x):
+    """feature/threshold (T, 2^D - 1), leaf (T, 2^D), x (n, F) ->
+    (T, n) f32 per-tree leaf values.
+
+    Gather-based heap traversal, vmapped over the tree axis — the same
+    arithmetic as ``trees.growth.predict_tree`` (go left iff the node
+    splits and x[feature] <= threshold; no-split nodes route right)."""
+    depth = int(feature.shape[1]).bit_length()
+
+    def one_tree(feat, thr, lf):
+        node = jnp.zeros((x.shape[0],), jnp.int32)
+        for _ in range(depth):
+            f = feat[node]
+            t = thr[node]
+            xv = jnp.take_along_axis(x, jnp.maximum(f, 0)[:, None],
+                                     axis=1)[:, 0]
+            go_left = (f >= 0) & (xv <= t)
+            node = 2 * node + jnp.where(go_left, 1, 2)
+        return lf[node - feat.shape[0]]
+
+    return jax.vmap(one_tree)(feature, threshold.astype(jnp.float32),
+                              leaf.astype(jnp.float32))

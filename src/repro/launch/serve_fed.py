@@ -1,0 +1,171 @@
+"""Federated-model serving driver: train -> export bundle -> score.
+
+The tabular twin of ``launch/serve.py`` (which decodes language models):
+load an exported :class:`~repro.serve.bundle.ModelBundle` — or, under
+``--smoke``, freshly train all four federated pipelines on the synthetic
+Framingham twin and export each — then drive the bucketed scoring engine
+(``repro.serve.engine``) over a request stream and report throughput and
+p50/p99 latency.
+
+Run:
+  PYTHONPATH=src python -m repro.launch.serve_fed --smoke
+  PYTHONPATH=src python -m repro.launch.serve_fed --bundle results/serve/smoke/fed_hist \
+      --batch 256 --bucket-sizes 64,256,1024 --requests 50
+
+``--smoke`` is the CI gate: it round-trips a bundle from each pipeline
+(parametric, tree_subset, feature_extract, fed_hist), asserts the Pallas
+forest-inference kernel matches ``trees.growth.predict_forest`` exactly
+in interpret mode, asserts bucketed == unbatched scoring, and exits
+non-zero on any mismatch.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fed_hist as FH
+from repro.core import feature_extract as FE
+from repro.core import parametric as P
+from repro.core import tree_subset as TS
+from repro.data import framingham as F
+from repro.kernels.forest_infer.ops import forest_infer
+from repro.serve import bundle as B
+from repro.serve.engine import ScoringEngine
+from repro.trees.growth import predict_forest
+
+
+def train_smoke_bundles(seed: int = 0, n_records: int = 800):
+    """Train all four pipelines fast on the Framingham twin and pack
+    each artifact.  Returns (bundles dict, (x_test, y_test))."""
+    ds = F.synthesize(n=n_records, seed=seed)
+    tr, te = F.train_test_split(ds)
+    clients = [(c.x, c.y) for c in F.partition_clients(tr, 3, seed)]
+
+    params, _, _, _ = P.train_federated(
+        clients, P.FedParametricConfig(model="logreg", rounds=3,
+                                       local_steps=10, seed=seed))
+    rf, _, _ = TS.train_federated_rf(
+        clients, TS.FedForestConfig(trees_per_client=6, subset=4, depth=3,
+                                    n_bins=16, seed=seed))
+    fe, _, _ = FE.train_federated_xgb_fe(
+        clients, FE.FedXGBConfig(num_rounds=6, shallow_rounds=2, depth=3,
+                                 shallow_depth=2, top_features=6,
+                                 n_bins=16, seed=seed))
+    gb, _, _ = FH.train_federated_xgb_hist(
+        clients, FH.FedHistConfig(num_rounds=5, depth=3, n_bins=16,
+                                  seed=seed))
+    bundles = {
+        "parametric": B.pack("parametric", params, model="logreg"),
+        "tree_subset": B.pack("tree_subset", rf),
+        "feature_extract": B.pack("feature_extract", fe),
+        "fed_hist": B.pack("fed_hist", gb),
+    }
+    return bundles, (te.x, te.y)
+
+
+def _forests_of(bundle: B.ModelBundle):
+    """The stacked Tree forests a bundle carries (for kernel parity)."""
+    if bundle.kind == "tree_subset":
+        return [bundle.model().forest]
+    if bundle.kind == "fed_hist":
+        return [bundle.model().forest]
+    if bundle.kind == "feature_extract":
+        return [m.forest for m in bundle.model().trees]
+    return []
+
+
+def check_kernel_parity(bundle: B.ModelBundle, x) -> None:
+    """Pallas forest kernel (interpret) must equal predict_forest bit
+    for bit on every forest in the bundle."""
+    xj = jnp.asarray(x, jnp.float32)
+    for forest in _forests_of(bundle):
+        ref = np.asarray(predict_forest(forest, xj))
+        pal = np.asarray(forest_infer(forest, xj,
+                                      impl="pallas_interpret"))
+        xla = np.asarray(forest_infer(forest, xj, impl="xla"))
+        np.testing.assert_array_equal(pal, ref)
+        np.testing.assert_array_equal(xla, ref)
+
+
+def serve_bundle(path: str, *, batch: int, bucket_sizes, requests: int,
+                 impl: str = "auto", seed: int = 0):
+    """Load one bundle and score a synthetic request stream."""
+    bundle = B.load_bundle(path)
+    ds = F.synthesize(n=max(batch * requests, batch), seed=seed + 1)
+    engine = ScoringEngine(bundle, bucket_sizes=bucket_sizes, impl=impl)
+    engine.warmup(ds.x.shape[1])
+    for i in range(requests):
+        engine.score(ds.x[i * batch:(i + 1) * batch])
+    st = engine.stats()
+    print(f"{bundle.kind}: {st['rows']} rows in {st['calls']} calls  "
+          f"{st['rows_per_s']:,.0f} rows/s  p50={st['p50_ms']:.2f}ms "
+          f"p99={st['p99_ms']:.2f}ms")
+    return st
+
+
+def smoke(out_dir: str = "results/serve/smoke", *, bucket_sizes=(64, 256),
+          seed: int = 0) -> int:
+    """Train, export, reload, parity-check, and serve all four kinds.
+    Returns a process exit code (CI gate)."""
+    failures = []
+    bundles, (xt, yt) = train_smoke_bundles(seed)
+    for kind, bundle in bundles.items():
+        try:
+            path = f"{out_dir}/{kind}"
+            nbytes = B.save_bundle(path, bundle)
+            loaded = B.load_bundle(path)
+            assert loaded.kind == kind and loaded.meta == bundle.meta
+            for k, v in bundle.arrays.items():
+                np.testing.assert_array_equal(np.asarray(loaded.arrays[k]),
+                                              np.asarray(v))
+            check_kernel_parity(loaded, xt)
+            # interpret-mode engine so the CI gate exercises the same
+            # kernel program that runs compiled on TPU/GPU
+            engine = ScoringEngine(loaded, bucket_sizes=bucket_sizes,
+                                   impl="pallas_interpret")
+            engine.warmup(xt.shape[1])
+            bucketed = engine.score(xt)
+            np.testing.assert_array_equal(bucketed,
+                                          engine.score_unbatched(xt))
+            engine.calibrate(xt, yt)
+            assert engine.calibration[0] > 0, "Platt slope must be > 0"
+            st = engine.stats()
+            print(f"  ok   {kind:16s} ckpt={nbytes / 1024:.1f}KiB  "
+                  f"{st['rows_per_s']:,.0f} rows/s  "
+                  f"p50={st['p50_ms']:.2f}ms p99={st['p99_ms']:.2f}ms")
+        except Exception as e:  # noqa: BLE001 — report all kinds, then fail
+            failures.append((kind, e))
+            print(f"  FAIL {kind}: {e}")
+    print(f"serve_fed --smoke: {len(failures)} failures")
+    return 1 if failures else 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bundle", help="path to an exported bundle dir")
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--bucket-sizes", default="64,256,1024",
+                    help="comma-separated padding buckets")
+    ap.add_argument("--requests", type=int, default=20)
+    ap.add_argument("--impl", default="auto",
+                    help="forest kernel routing: auto | pallas | "
+                    "pallas_interpret | xla")
+    ap.add_argument("--smoke", action="store_true",
+                    help="train+export+parity-gate all four pipelines "
+                    "(CI); exits non-zero on mismatch")
+    args = ap.parse_args()
+    buckets = tuple(int(b) for b in args.bucket_sizes.split(","))
+    if args.smoke:
+        return smoke(bucket_sizes=buckets)
+    if not args.bundle:
+        ap.error("--bundle is required unless --smoke")
+    serve_bundle(args.bundle, batch=args.batch, bucket_sizes=buckets,
+                 requests=args.requests, impl=args.impl)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -105,15 +105,22 @@ def _bce(logits, y):
     return jax.nn.softplus(logits) - logits * y
 
 
+# 'proba' is the serving/score head: a monotone [0,1] score per row
+# (sigmoid of the logit/margin — for the SVM this is a Platt-style
+# squashing of the margin, not a true posterior; calibrate downstream
+# via repro.serve.engine.fit_platt when probabilities matter).
 MODELS: Dict[str, Dict] = {
     "logreg": dict(init=logreg_init, loss=logreg_loss,
                    predict=lambda p, x: logreg_logits(p, x) > 0,
+                   proba=lambda p, x: jax.nn.sigmoid(logreg_logits(p, x)),
                    needs_poly=False),
     "svm": dict(init=svm_init, loss=svm_loss,
                 predict=lambda p, x: svm_margin(p, x) > 0,
+                proba=lambda p, x: jax.nn.sigmoid(svm_margin(p, x)),
                 needs_poly=True),
     "mlp": dict(init=mlp_init, loss=mlp_loss,
                 predict=lambda p, x: mlp_logits(p, x) > 0,
+                proba=lambda p, x: jax.nn.sigmoid(mlp_logits(p, x)),
                 needs_poly=False),
 }
 

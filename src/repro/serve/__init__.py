@@ -1,0 +1,3 @@
+from repro.serve.bundle import (BUNDLE_KINDS, ModelBundle, load_bundle,  # noqa: F401
+                                pack, save_bundle)
+from repro.serve.engine import ScoringEngine, fit_platt  # noqa: F401

@@ -1,0 +1,215 @@
+"""Exportable model bundles: the train -> serve handoff.
+
+Every federated pipeline in the repo ends in a different artifact — a
+parametric pytree (``core/parametric.py``), a ``RandomForest`` of
+shipped tree subsets (``core/tree_subset.py``), a per-client
+``FeatureExtractEnsemble`` cascade (``core/feature_extract.py``), or a
+single global ``GBDT`` (``core/fed_hist.py``).  A :class:`ModelBundle`
+packages any of them into one on-disk format the scoring engine
+(``repro.serve.engine``) can load without knowing which pipeline
+produced it:
+
+* ``arrays`` — a flat ``{name: array}`` pytree, saved with
+  ``repro.checkpoint.save_pytree`` (zstd/zlib framing, same bytes
+  guarantees as training checkpoints);
+* ``meta`` — JSON-safe scalars the arrays can't carry (model kind,
+  learning rate, parametric model name, schema version);
+* a **self-describing manifest** (``manifest.json``) recording every
+  array's dtype and shape, so ``load_bundle`` reconstructs the
+  ``load_pytree`` template itself — no caller-supplied template, the
+  bundle file is the contract.
+
+Bundle kinds are registry-addressable (``BUNDLE_KINDS``): each kind owns
+``pack`` (typed artifact -> bundle) and ``unpack`` (bundle -> typed
+artifact), and the engine keys its score functions off the same names.
+The four registered kinds mirror the paper's four pipelines:
+``parametric``, ``tree_subset``, ``feature_extract``, ``fed_hist``.
+
+On disk a bundle is a directory::
+
+    <path>/manifest.json   # version, kind, meta, array specs
+    <path>/arrays.ckpt     # checkpoint.save_pytree of the arrays dict
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+from typing import Callable, Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_pytree, save_pytree
+from repro.core.feature_extract import FeatureExtractEnsemble
+from repro.trees import forest as RF
+from repro.trees import gbdt as GB
+from repro.trees.growth import Tree
+
+BUNDLE_VERSION = 1
+_MANIFEST = "manifest.json"
+_ARRAYS = "arrays.ckpt"
+
+
+@dataclass
+class ModelBundle:
+    """One exported model: kind + JSON-safe meta + flat array dict."""
+    kind: str
+    meta: Dict
+    arrays: Dict[str, jnp.ndarray]
+    version: int = BUNDLE_VERSION
+
+    def model(self):
+        """Reconstruct the typed training-side artifact."""
+        return get_kind(self.kind).unpack(self)
+
+
+@dataclass(frozen=True)
+class BundleKind:
+    name: str
+    pack: Callable          # (model, **meta) -> ModelBundle
+    unpack: Callable        # (bundle) -> model
+
+
+def _tree_arrays(prefix: str, tree: Tree) -> Dict[str, jnp.ndarray]:
+    return {f"{prefix}.feature": tree.feature,
+            f"{prefix}.threshold": tree.threshold,
+            f"{prefix}.leaf": tree.leaf,
+            f"{prefix}.gain": tree.gain}
+
+
+def _tree_from(arrays: Dict, prefix: str) -> Tree:
+    return Tree(arrays[f"{prefix}.feature"], arrays[f"{prefix}.threshold"],
+                arrays[f"{prefix}.leaf"], arrays[f"{prefix}.gain"])
+
+
+# --- parametric (LR / poly-SVM / MLP pytrees) --------------------------------
+
+def _pack_parametric(params, *, model: str) -> ModelBundle:
+    arrays = {f"params.{k}": jnp.asarray(v) for k, v in params.items()}
+    return ModelBundle("parametric", {"model": model}, arrays)
+
+
+def _unpack_parametric(b: ModelBundle):
+    return {k.split(".", 1)[1]: v for k, v in b.arrays.items()
+            if k.startswith("params.")}
+
+
+# --- tree_subset (union Random Forest, majority vote) ------------------------
+
+def _pack_tree_subset(model: RF.RandomForest, *, edges=None) -> ModelBundle:
+    arrays = _tree_arrays("forest", model.forest)
+    if edges is not None:
+        arrays["edges"] = jnp.asarray(edges)
+    return ModelBundle("tree_subset", {}, arrays)
+
+
+def _unpack_tree_subset(b: ModelBundle) -> RF.RandomForest:
+    return RF.RandomForest(_tree_from(b.arrays, "forest"))
+
+
+# --- fed_hist (one global GBDT: margins + base + learning rate) --------------
+
+def _pack_fed_hist(model: GB.GBDT, *, edges=None) -> ModelBundle:
+    arrays = _tree_arrays("forest", model.forest)
+    if edges is not None:
+        arrays["edges"] = jnp.asarray(edges)
+    meta = {"learning_rate": float(model.learning_rate),
+            "base_margin": float(model.base_margin)}
+    return ModelBundle("fed_hist", meta, arrays)
+
+
+def _unpack_fed_hist(b: ModelBundle) -> GB.GBDT:
+    return GB.GBDT(_tree_from(b.arrays, "forest"),
+                   b.meta["learning_rate"], b.meta["base_margin"])
+
+
+# --- feature_extract (per-client shallow GBDT cascade, weighted vote) --------
+
+def _pack_feature_extract(ens: FeatureExtractEnsemble) -> ModelBundle:
+    # every client ships the same (rounds, depth) shallow ensemble, so
+    # the C forests stack onto a leading client axis
+    stacked = Tree(*(jnp.stack([getattr(m.forest, f) for m in ens.trees])
+                     for f in Tree._fields))
+    arrays = _tree_arrays("forests", stacked)
+    arrays["weights"] = jnp.asarray(ens.weights, jnp.float32)
+    arrays["base_margins"] = jnp.asarray(ens.base_margins, jnp.float32)
+    arrays["top_features"] = jnp.asarray(
+        np.stack([np.asarray(t, np.int32) for t in ens.top_features]))
+    meta = {"learning_rate": float(ens.trees[0].learning_rate),
+            "n_clients": len(ens.trees)}
+    return ModelBundle("feature_extract", meta, arrays)
+
+
+def _unpack_feature_extract(b: ModelBundle) -> FeatureExtractEnsemble:
+    stacked = _tree_from(b.arrays, "forests")
+    lr = b.meta["learning_rate"]
+    margins = np.asarray(b.arrays["base_margins"])
+    trees = [GB.GBDT(Tree(*(a[c] for a in stacked)), lr, float(margins[c]))
+             for c in range(b.meta["n_clients"])]
+    return FeatureExtractEnsemble(
+        trees, [float(w) for w in np.asarray(b.arrays["weights"])],
+        [float(m) for m in margins],
+        [np.asarray(t) for t in np.asarray(b.arrays["top_features"])])
+
+
+BUNDLE_KINDS: Dict[str, BundleKind] = {
+    "parametric": BundleKind("parametric", _pack_parametric,
+                             _unpack_parametric),
+    "tree_subset": BundleKind("tree_subset", _pack_tree_subset,
+                              _unpack_tree_subset),
+    "feature_extract": BundleKind("feature_extract", _pack_feature_extract,
+                                  _unpack_feature_extract),
+    "fed_hist": BundleKind("fed_hist", _pack_fed_hist, _unpack_fed_hist),
+}
+
+
+def get_kind(name: str) -> BundleKind:
+    if name not in BUNDLE_KINDS:
+        raise KeyError(f"unknown bundle kind {name!r}; "
+                       f"registered: {sorted(BUNDLE_KINDS)}")
+    return BUNDLE_KINDS[name]
+
+
+def pack(kind: str, artifact, **meta) -> ModelBundle:
+    """Package a trained artifact under a registered kind."""
+    return get_kind(kind).pack(artifact, **meta)
+
+
+def save_bundle(path: str, bundle: ModelBundle) -> int:
+    """Write ``<path>/manifest.json`` + ``<path>/arrays.ckpt``.
+
+    Returns the compressed checkpoint size in bytes."""
+    os.makedirs(path, exist_ok=True)
+    arrays = {k: jnp.asarray(v) for k, v in bundle.arrays.items()}
+    manifest = {
+        "version": bundle.version,
+        "kind": bundle.kind,
+        "meta": bundle.meta,
+        "arrays": {k: {"dtype": str(np.asarray(v).dtype),
+                       "shape": list(np.asarray(v).shape)}
+                   for k, v in arrays.items()},
+    }
+    with open(os.path.join(path, _MANIFEST), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    return save_pytree(os.path.join(path, _ARRAYS), arrays)
+
+
+def load_bundle(path: str) -> ModelBundle:
+    """Load a bundle with no caller-supplied template: the manifest's
+    dtype/shape specs build the ``load_pytree`` template, and the
+    checkpoint layer still validates structure + shapes against it."""
+    with open(os.path.join(path, _MANIFEST)) as f:
+        manifest = json.load(f)
+    if manifest["version"] != BUNDLE_VERSION:
+        raise ValueError(
+            f"{path}: bundle version {manifest['version']} != "
+            f"supported {BUNDLE_VERSION}")
+    if manifest["kind"] not in BUNDLE_KINDS:
+        raise KeyError(f"{path}: unknown bundle kind "
+                       f"{manifest['kind']!r}")
+    template = {k: np.zeros(s["shape"], dtype=s["dtype"])
+                for k, s in manifest["arrays"].items()}
+    arrays = load_pytree(os.path.join(path, _ARRAYS), template)
+    return ModelBundle(manifest["kind"], manifest["meta"], arrays,
+                       manifest["version"])

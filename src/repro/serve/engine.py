@@ -1,0 +1,260 @@
+"""Bucketed batch scoring engine over exported model bundles.
+
+The serving half of the repro (ROADMAP north star: serve heavy traffic
+as fast as the hardware allows).  Three pieces:
+
+* **Score functions** — one per bundle kind, composing the paper's model
+  zoo: parametric LR / poly-SVM / MLP probabilities, Random Forest vote
+  averaging (``tree_subset``; thresholding the vote fraction reproduces
+  the paper's majority vote), global-GBDT margins (``fed_hist``), and
+  the feature-extract cascade (per-client XGBoost frontends -> weighted
+  sigmoid vote).  All tree kinds run through the Pallas forest-inference
+  kernel (``repro.kernels.forest_infer``) instead of the per-level
+  training-side traversal loop.
+* **Padding-bucket microbatching** — request batches are padded up to
+  the smallest configured bucket size, so XLA compiles exactly one
+  program per bucket shape and every later call of that shape replays
+  it.  Traversal and scoring are row-independent, so pad rows are
+  sliced off unseen.
+* **Platt-scaling calibration** — a 2-parameter sigmoid fit on held-out
+  data (Newton iterations on the log-loss) mapping raw ensemble scores
+  to calibrated probabilities; strictly monotone for a > 0, so ranking
+  metrics (ROC-AUC) are invariant under it.
+
+An engine scores one bundle or an ensemble of bundles (weighted mean of
+per-bundle probabilities) and keeps per-call latency stats for the
+serving benchmarks (``launch/serve_fed.py``, ``benchmarks/serve_bench``).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.forest_infer.ops import forest_infer
+from repro.models import tabular
+from repro.serve.bundle import ModelBundle
+from repro.trees.growth import Tree
+
+
+# --- per-kind score functions (x (n, F) raw -> probs (n,)) -------------------
+
+def _parametric_scorer(bundle: ModelBundle, impl: str):
+    params = bundle.model()
+    spec = tabular.MODELS[bundle.meta["model"]]
+
+    def score(x):
+        if spec["needs_poly"]:
+            pairs, triples = tabular.poly3_indices(x.shape[1])
+            x = tabular.poly3_features(x, pairs, triples)
+        return spec["proba"](params, x)
+    return score
+
+
+def _tree_subset_scorer(bundle: ModelBundle, impl: str):
+    forest = bundle.model().forest
+
+    def score(x):
+        vals = forest_infer(forest, x, impl=impl) + 0.5  # (k, n) p(y=1)
+        # vote averaging: fraction of trees voting positive, so that
+        # thresholding at 0.5 reproduces the paper's majority-vote
+        # aggregation (forest.predict_votes) exactly
+        return jnp.mean((vals > 0.5).astype(jnp.float32), axis=0)
+    return score
+
+
+def _fed_hist_scorer(bundle: ModelBundle, impl: str):
+    model = bundle.model()
+
+    def score(x):
+        vals = forest_infer(model.forest, x, impl=impl)  # (rounds, n)
+        margin = model.base_margin \
+            + model.learning_rate * jnp.sum(vals, axis=0)
+        return jax.nn.sigmoid(margin)
+    return score
+
+
+def _feature_extract_scorer(bundle: ModelBundle, impl: str):
+    stacked = Tree(*(bundle.arrays[f"forests.{f}"] for f in Tree._fields))
+    C, R = stacked.feature.shape[:2]
+    flat = Tree(*(a.reshape((C * R,) + a.shape[2:]) for a in stacked))
+    w = jnp.asarray(bundle.arrays["weights"], jnp.float32)
+    base = jnp.asarray(bundle.arrays["base_margins"], jnp.float32)
+    lr = bundle.meta["learning_rate"]
+
+    def score(x):
+        vals = forest_infer(flat, x, impl=impl)        # (C*R, n)
+        margins = base[:, None] \
+            + lr * jnp.sum(vals.reshape(C, R, -1), axis=1)
+        return jnp.sum(w[:, None] * jax.nn.sigmoid(margins), axis=0)
+    return score
+
+
+SCORERS = {
+    "parametric": _parametric_scorer,
+    "tree_subset": _tree_subset_scorer,
+    "fed_hist": _fed_hist_scorer,
+    "feature_extract": _feature_extract_scorer,
+}
+
+
+# --- Platt scaling ------------------------------------------------------------
+
+def fit_platt(scores, y, *, iters: int = 50,
+              ridge: float = 1e-6) -> Tuple[float, float]:
+    """Fit p = sigmoid(a*s + b) on held-out (score, label) pairs.
+
+    Newton iterations on the binary log-loss; the 2x2 Hessian is solved
+    in closed form.  Returns (a, b); a > 0 whenever higher scores mean
+    higher positive rate, which makes the calibration map strictly
+    monotone (rank metrics unchanged)."""
+    s = np.asarray(scores, np.float64)
+    yv = np.asarray(y, np.float64)
+    a, b = 1.0, 0.0
+    for _ in range(iters):
+        p = 1.0 / (1.0 + np.exp(-(a * s + b)))
+        g = p - yv
+        ga, gb = float(np.sum(g * s)), float(np.sum(g))
+        w = np.maximum(p * (1.0 - p), 1e-12)
+        haa = float(np.sum(w * s * s)) + ridge
+        hab = float(np.sum(w * s))
+        hbb = float(np.sum(w)) + ridge
+        det = haa * hbb - hab * hab
+        da = (hbb * ga - hab * gb) / det
+        db = (haa * gb - hab * ga) / det
+        a, b = a - da, b - db
+        if abs(da) + abs(db) < 1e-10:
+            break
+    return float(a), float(b)
+
+
+def apply_platt(scores, ab: Tuple[float, float]):
+    a, b = ab
+    return 1.0 / (1.0 + np.exp(-(a * np.asarray(scores, np.float64) + b)))
+
+
+# --- the engine ---------------------------------------------------------------
+
+class ScoringEngine:
+    """Ensemble scorer with padding-bucket microbatching.
+
+    Args:
+      bundles: one ``ModelBundle`` or a sequence (ensemble: weighted
+        mean of per-bundle probabilities).
+      weights: per-bundle ensemble weights (default uniform); normalized.
+      bucket_sizes: ascending padding buckets.  A request batch of n
+        rows is cut into chunks of at most ``max(bucket_sizes)`` rows
+        and each chunk is zero-padded up to the smallest bucket that
+        fits, so only ``len(bucket_sizes)`` distinct shapes ever reach
+        the jitted scorer (one XLA compile per bucket).
+      impl: forest-inference kernel routing (``auto`` | ``pallas`` |
+        ``pallas_interpret`` | ``xla`` — see
+        ``repro.kernels.forest_infer.ops``).
+    """
+
+    def __init__(self, bundles, weights: Optional[Sequence[float]] = None,
+                 bucket_sizes: Sequence[int] = (64, 256, 1024),
+                 impl: str = "auto"):
+        if isinstance(bundles, ModelBundle):
+            bundles = [bundles]
+        if not bundles:
+            raise ValueError("ScoringEngine needs at least one bundle")
+        self.bundles: List[ModelBundle] = list(bundles)
+        w = np.asarray(weights if weights is not None
+                       else np.ones(len(self.bundles)), np.float32)
+        self.weights = w / w.sum()
+        self.buckets = tuple(sorted(int(b) for b in bucket_sizes))
+        if not self.buckets or min(self.buckets) < 1:
+            raise ValueError(f"bad bucket_sizes {bucket_sizes!r}")
+        self.calibration: Optional[Tuple[float, float]] = None
+        self.latencies_s: List[float] = []
+        self.rows_scored = 0
+        scorers = [SCORERS[b.kind](b, impl) for b in self.bundles]
+        wj = jnp.asarray(self.weights)
+
+        def ensemble(x):
+            probs = jnp.stack([s(x) for s in scorers])   # (models, n)
+            return jnp.sum(wj[:, None] * probs, axis=0)
+
+        self._jit_score = jax.jit(ensemble)
+
+    # -- bucketing ------------------------------------------------------------
+
+    def _bucket_for(self, n: int) -> int:
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return self.buckets[-1]
+
+    def score_unbatched(self, x) -> np.ndarray:
+        """Raw ensemble probabilities with no bucketing/padding — the
+        parity reference for the bucketed path (and the calibration
+        input)."""
+        probs = np.asarray(self._jit_score(jnp.asarray(x, jnp.float32)))
+        return (apply_platt(probs, self.calibration).astype(np.float32)
+                if self.calibration is not None else probs)
+
+    def score(self, x) -> np.ndarray:
+        """Bucketed scoring: chunk, pad to bucket, jit-replay, unpad.
+
+        Row-independent models make padding invisible; the timed span
+        (one entry in ``latencies_s`` per call) covers the full
+        request — chunking, device work, and calibration."""
+        x = np.asarray(x, np.float32)
+        n = len(x)
+        out = np.empty((n,), np.float32)
+        t0 = time.perf_counter()
+        step = self.buckets[-1]
+        for i in range(0, n, step):
+            chunk = x[i:i + step]
+            bucket = self._bucket_for(len(chunk))
+            pad = bucket - len(chunk)
+            if pad:
+                chunk = np.pad(chunk, ((0, pad), (0, 0)))
+            probs = np.asarray(self._jit_score(jnp.asarray(chunk)))
+            out[i:i + bucket - pad] = probs[:bucket - pad]
+        if self.calibration is not None:
+            out = apply_platt(out, self.calibration).astype(np.float32)
+        self.latencies_s.append(time.perf_counter() - t0)
+        self.rows_scored += n
+        return out
+
+    def predict(self, x, threshold: float = 0.5) -> np.ndarray:
+        return self.score(x) > threshold
+
+    # -- calibration ----------------------------------------------------------
+
+    def calibrate(self, x_held, y_held) -> Tuple[float, float]:
+        """Fit Platt scaling on held-out data; subsequent ``score``
+        calls return calibrated probabilities."""
+        raw = self.score_unbatched(np.asarray(x_held, np.float32))
+        self.calibration = fit_platt(raw, y_held)
+        return self.calibration
+
+    # -- serving stats --------------------------------------------------------
+
+    def warmup(self, n_features: int) -> None:
+        """Compile every bucket shape up front (not counted in stats)."""
+        for b in self.buckets:
+            self._jit_score(jnp.zeros((b, n_features), jnp.float32))
+
+    def stats(self) -> Dict[str, float]:
+        """Throughput + latency percentiles over recorded score() calls."""
+        lat = np.asarray(self.latencies_s, np.float64)
+        if lat.size == 0:
+            return {"calls": 0, "rows": 0, "rows_per_s": 0.0,
+                    "p50_ms": 0.0, "p99_ms": 0.0}
+        return {
+            "calls": int(lat.size),
+            "rows": int(self.rows_scored),
+            "rows_per_s": self.rows_scored / float(lat.sum()),
+            "p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "p99_ms": float(np.percentile(lat, 99) * 1e3),
+        }
+
+    def reset_stats(self) -> None:
+        self.latencies_s = []
+        self.rows_scored = 0

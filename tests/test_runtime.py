@@ -69,8 +69,10 @@ def _legacy_train(clients, cfg, test=None):
             mean, sst = strat.server_update(sst, mean)
             gp = jax.tree.map(lambda g, u: g + u, gp, mean)
         if test is not None:
-            pred = np.asarray(spec["predict"](gp, jnp.asarray(test[0])))
-            history.append(binary_metrics(pred, test[1]))
+            xt = jnp.asarray(test[0])
+            pred = np.asarray(spec["predict"](gp, xt))
+            history.append(binary_metrics(
+                pred, test[1], scores=np.asarray(spec["proba"](gp, xt))))
     return gp, comm, history
 
 

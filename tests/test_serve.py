@@ -1,0 +1,245 @@
+"""Serving subsystem: forest-kernel parity, bundle round-trips, the
+bucketed engine, Platt calibration, and the new threshold-free metrics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from proptest import cases, for_cases, ints
+
+from repro.core.metrics import binary_metrics, brier_score, roc_auc
+from repro.kernels.forest_infer.kernel import forest_infer_pallas
+from repro.kernels.forest_infer.ops import forest_infer
+from repro.kernels.forest_infer.ref import forest_infer_ref
+from repro.serve import bundle as B
+from repro.serve.engine import (ScoringEngine, apply_platt, fit_platt)
+from repro.trees import forest as RF
+from repro.trees import gbdt as GB
+from repro.trees.growth import predict_forest
+
+RNG = np.random.default_rng(5)
+
+
+def _data(n=400, F=7):
+    X = RNG.normal(size=(n, F)).astype(np.float32)
+    y = (X[:, 0] + 0.5 * X[:, 1] + RNG.normal(size=n) * 0.5
+         > 0).astype(np.float32)
+    return X, y
+
+
+# --- forest-inference kernel --------------------------------------------------
+
+FOREST_CASES = cases(4, seed=9, depth=ints(1, 6), trees=ints(1, 12),
+                     n=ints(33, 700))
+
+
+@for_cases(FOREST_CASES)
+def test_forest_kernel_parity(depth, trees, n):
+    """Pallas (interpret) == vmapped ref == the training-side
+    predict_forest, bit for bit."""
+    X, y = _data()
+    rf = RF.fit(jnp.asarray(X), jnp.asarray(y), num_trees=trees,
+                depth=depth, rng=jax.random.PRNGKey(depth))
+    xq = jnp.asarray(RNG.normal(size=(n, X.shape[1])).astype(np.float32))
+    base = np.asarray(predict_forest(rf.forest, xq))
+    ref = np.asarray(forest_infer_ref(rf.forest.feature,
+                                      rf.forest.threshold,
+                                      rf.forest.leaf, xq))
+    pal = np.asarray(forest_infer_pallas(rf.forest.feature,
+                                         rf.forest.threshold,
+                                         rf.forest.leaf, xq, block_n=64,
+                                         interpret=True))
+    np.testing.assert_array_equal(ref, base)
+    np.testing.assert_array_equal(pal, base)
+
+
+def test_forest_ops_routing():
+    X, y = _data(200)
+    rf = RF.fit(jnp.asarray(X), jnp.asarray(y), num_trees=3, depth=3,
+                rng=jax.random.PRNGKey(0))
+    xq = jnp.asarray(X[:50])
+    base = np.asarray(predict_forest(rf.forest, xq))
+    for impl in ("auto", "xla", "pallas", "pallas_interpret"):
+        np.testing.assert_array_equal(
+            np.asarray(forest_infer(rf.forest, xq, impl=impl)), base)
+    with pytest.raises(ValueError):
+        forest_infer(rf.forest, xq, impl="nope")
+
+
+# --- bundles ------------------------------------------------------------------
+
+def _tiny_artifacts():
+    """One artifact per pipeline kind, trained fast on one shard set."""
+    from repro.core import fed_hist as FH
+    from repro.core import feature_extract as FE
+    from repro.core import parametric as P
+    from repro.core import tree_subset as TS
+    from repro.data import framingham as F
+
+    ds = F.synthesize(n=400, seed=0)
+    tr, te = F.train_test_split(ds)
+    clients = [(c.x, c.y) for c in F.partition_clients(tr, 2)]
+    params, _, _, _ = P.train_federated(
+        clients, P.FedParametricConfig(model="logreg", rounds=2,
+                                       local_steps=5))
+    rf, _, _ = TS.train_federated_rf(
+        clients, TS.FedForestConfig(trees_per_client=4, subset=2, depth=3,
+                                    n_bins=16))
+    fe, _, _ = FE.train_federated_xgb_fe(
+        clients, FE.FedXGBConfig(num_rounds=3, shallow_rounds=2, depth=3,
+                                 shallow_depth=2, top_features=4,
+                                 n_bins=16))
+    gb, _, _ = FH.train_federated_xgb_hist(
+        clients, FH.FedHistConfig(num_rounds=3, depth=3, n_bins=16))
+    return {
+        "parametric": B.pack("parametric", params, model="logreg"),
+        "tree_subset": B.pack("tree_subset", rf),
+        "feature_extract": B.pack("feature_extract", fe),
+        "fed_hist": B.pack("fed_hist", gb),
+    }, (te.x, te.y)
+
+
+@pytest.fixture(scope="module")
+def artifacts():
+    return _tiny_artifacts()
+
+
+def test_bundle_roundtrip_all_kinds(artifacts, tmp_path):
+    bundles, (xt, _) = artifacts
+    assert set(bundles) == set(B.BUNDLE_KINDS)
+    for kind, bundle in bundles.items():
+        path = str(tmp_path / kind)
+        B.save_bundle(path, bundle)
+        loaded = B.load_bundle(path)
+        assert loaded.kind == kind
+        assert loaded.version == B.BUNDLE_VERSION
+        assert loaded.meta == bundle.meta
+        assert set(loaded.arrays) == set(bundle.arrays)
+        for k in bundle.arrays:
+            np.testing.assert_array_equal(np.asarray(loaded.arrays[k]),
+                                          np.asarray(bundle.arrays[k]))
+        # the reloaded bundle scores identically
+        a = ScoringEngine(bundle, bucket_sizes=(128,)).score(xt)
+        b = ScoringEngine(loaded, bucket_sizes=(128,)).score(xt)
+        np.testing.assert_array_equal(a, b)
+
+
+def test_bundle_version_and_kind_validation(artifacts, tmp_path):
+    import json
+    import os
+    bundles, _ = artifacts
+    path = str(tmp_path / "v")
+    B.save_bundle(path, bundles["fed_hist"])
+    mpath = os.path.join(path, "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    manifest["version"] = 999
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(ValueError):
+        B.load_bundle(path)
+    manifest["version"] = B.BUNDLE_VERSION
+    manifest["kind"] = "nope"
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(KeyError):
+        B.load_bundle(path)
+    with pytest.raises(KeyError):
+        B.pack("nope", None)
+
+
+def test_bundle_unpack_matches_training_artifact(artifacts):
+    """fed_hist round-trip reconstructs a GBDT that predicts like the
+    original model object."""
+    bundles, (xt, _) = artifacts
+    gb = bundles["fed_hist"].model()
+    assert isinstance(gb, GB.GBDT)
+    probs = np.asarray(GB.predict_proba(gb, jnp.asarray(xt)))
+    eng = ScoringEngine(bundles["fed_hist"], bucket_sizes=(len(xt),),
+                        impl="xla")
+    # tree leaf values are bit-exact (test_forest_kernel_parity); the
+    # margin fold differs only by jit fusion (fma) of base + lr * sum
+    np.testing.assert_allclose(eng.score(xt), probs, rtol=1e-6,
+                               atol=1e-6)
+
+
+def test_tree_subset_serving_matches_majority_vote(artifacts):
+    """Thresholded serve-time predictions must reproduce the paper's
+    majority-vote aggregation (the training-side predict_votes)."""
+    bundles, (xt, _) = artifacts
+    eng = ScoringEngine(bundles["tree_subset"], bucket_sizes=(128,),
+                        impl="pallas_interpret")
+    votes = np.asarray(RF.predict_votes(bundles["tree_subset"].model(),
+                                        jnp.asarray(xt)))
+    np.testing.assert_array_equal(eng.predict(xt), votes)
+
+
+# --- engine -------------------------------------------------------------------
+
+def test_bucketed_equals_unbatched_every_kind(artifacts):
+    bundles, (xt, _) = artifacts
+    for bundle in bundles.values():
+        eng = ScoringEngine(bundle, bucket_sizes=(16, 64, 256),
+                            impl="pallas_interpret")
+        np.testing.assert_array_equal(eng.score(xt),
+                                      eng.score_unbatched(xt))
+
+
+def test_engine_ensemble_composes_and_tracks_stats(artifacts):
+    bundles, (xt, yt) = artifacts
+    eng = ScoringEngine(list(bundles.values()), bucket_sizes=(64, 256))
+    probs = eng.score(xt)
+    assert probs.shape == (len(xt),)
+    assert float(probs.min()) >= 0.0 and float(probs.max()) <= 1.0
+    # ensemble = weighted mean of the per-bundle probabilities
+    singles = np.stack([ScoringEngine(b, bucket_sizes=(64, 256)).score(xt)
+                        for b in bundles.values()])
+    np.testing.assert_allclose(probs, singles.mean(axis=0), atol=1e-6)
+    st = eng.stats()
+    assert st["calls"] == 1 and st["rows"] == len(xt)
+    assert st["rows_per_s"] > 0 and st["p99_ms"] >= st["p50_ms"]
+
+
+def test_calibration_monotone_and_improves_brier(artifacts):
+    bundles, (xt, yt) = artifacts
+    eng = ScoringEngine(bundles["fed_hist"], bucket_sizes=(256,))
+    raw = eng.score(xt).copy()
+    a, b = eng.calibrate(xt, yt)
+    assert a > 0  # higher score -> higher calibrated probability
+    cal = eng.score(xt)
+    # strictly monotone map preserves the score ordering (same AUC)
+    order = np.argsort(raw)
+    assert np.all(np.diff(cal[order]) >= 0)
+    np.testing.assert_allclose(roc_auc(cal, yt), roc_auc(raw, yt),
+                               atol=1e-9)
+    assert brier_score(cal, yt) <= brier_score(raw, yt) + 1e-6
+
+
+def test_platt_recovers_known_sigmoid():
+    s = np.linspace(-4, 4, 2000)
+    rng = np.random.default_rng(0)
+    y = (rng.random(2000) < 1 / (1 + np.exp(-(2.0 * s - 1.0)))).astype(
+        np.float32)
+    a, b = fit_platt(s, y)
+    assert abs(a - 2.0) < 0.3 and abs(b + 1.0) < 0.3
+    p = apply_platt(np.asarray([0.0]), (a, b))
+    assert 0 < p[0] < 1
+
+
+# --- threshold-free metrics ---------------------------------------------------
+
+def test_roc_auc_known_values():
+    y = np.asarray([0, 0, 1, 1])
+    assert roc_auc([0.1, 0.2, 0.8, 0.9], y) == 1.0
+    assert roc_auc([0.9, 0.8, 0.2, 0.1], y) == 0.0
+    assert roc_auc([0.5, 0.5, 0.5, 0.5], y) == 0.5       # all tied
+    assert np.isnan(roc_auc([0.1, 0.2], [1, 1]))         # one class
+
+
+def test_binary_metrics_scores_optional():
+    y = np.asarray([0, 1, 0, 1, 1])
+    s = np.asarray([0.2, 0.8, 0.4, 0.9, 0.6])
+    m = binary_metrics(s > 0.5, y, scores=s)
+    assert m["roc_auc"] == 1.0
+    assert m["brier"] == pytest.approx(np.mean((s - y) ** 2))
+    assert "roc_auc" not in binary_metrics(s > 0.5, y)
