@@ -1,23 +1,31 @@
 """Federated-engine benchmark: sequential per-pod loop vs the batched
 vmapped client-parallel round, a strategy / wire-format sweep, the tree
-engines (client-batched RF rounds, ``fed_hist`` GBDT), and the
-FedRuntime axes — uniform-k vs full participation and transport-stack
-variants — reporting ledger MB and F1 deltas.
+engines (client-batched RF rounds, ``fed_hist`` GBDT), the FedRuntime
+axes — uniform-k vs full participation and transport-stack variants —
+and the **virtual-time schedule rows**: sync vs ``async:K`` buffered
+aggregation under heterogeneous client latency, reported as
+time-to-target-F1 on the shared virtual clock (written to
+``results/async/async_bench.json``; rendered by ``python -m
+benchmarks.report async``).
 
 Each row is ``(name, us_per_round, derived)`` in the harness CSV shape.
 Engine rows time local training only (``round_s`` from ``simulate``,
 first jitted round included), so the vmap speedup is end-to-end honest;
 tree rows time local forest growth / server tree growth the same way and
-carry bytes-per-round from the CommLog ledger.
+carry bytes-per-round from the CommLog ledger.  Async rows report
+*virtual* seconds from the runtime timeline, not host wall time.
 
 Run standalone:  PYTHONPATH=src python -m benchmarks.fed_engine_bench
 Parity gate:     PYTHONPATH=src python -m benchmarks.fed_engine_bench --smoke
-(the CI smoke job; exits non-zero if the batched engines or the
-runtime-routed pipelines drift from their parity references).
+(the CI smoke job; exits non-zero if the batched engines, the
+runtime-routed pipelines, or the async→sync reduction drift from their
+parity references).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 
 from repro.launch.fed_train import simulate, simulate_fed_hist
@@ -114,6 +122,58 @@ def _transport_rows() -> list:
     return rows
 
 
+LATENCY_SPEC = "lognormal:0:1"       # heterogeneous hospitals: heavy tail
+ASYNC_SCHEDULES = ("sync", "async:1", "async:2")
+
+
+def _time_to_target(history, target: float):
+    """First virtual time at which the metrics trace reaches the target
+    F1 (None if it never does).  Entries carry ``t`` whenever the run
+    models time (``repro.core.parametric`` stamps them)."""
+    for h in history:
+        if h["f1"] >= target:
+            return h["t"]
+    return None
+
+
+def _async_rows() -> list:
+    """Sync vs buffered-async aggregation under heterogeneous latency:
+    the same parametric workload, the same latency model, `rounds`
+    server aggregations each — who reaches the target F1 first on the
+    virtual clock?  Writes results/async/async_bench.json."""
+    from repro.core import parametric as P
+
+    clients, test = _framingham_clients()
+    runs = {}
+    for sched in ASYNC_SCHEDULES:
+        cfg = P.FedParametricConfig(model="logreg", sampling="ros",
+                                    rounds=12, local_steps=10, lr=0.05,
+                                    schedule=sched, latency=LATENCY_SPEC)
+        _, comm, hist, _ = P.train_federated(clients, cfg, test=test)
+        runs[sched] = {"history": hist,
+                       "final_f1": hist[-1]["f1"],
+                       "vt_total": hist[-1]["t"],
+                       "uplink_mb": comm.total_mb("up")}
+    # target: sync's own 90%-of-final F1 — reachable by construction
+    target = 0.9 * runs["sync"]["final_f1"]
+    rows = []
+    out = {"latency": LATENCY_SPEC, "target_f1": target, "rows": {}}
+    for sched, r in runs.items():
+        tt = _time_to_target(r["history"], target)
+        out["rows"][sched] = {
+            "time_to_target_s": tt, "final_f1": r["final_f1"],
+            "vt_total_s": r["vt_total"], "uplink_mb": r["uplink_mb"]}
+        rows.append((f"fed_async/{sched.replace(':', '_')}", 0.0,
+                     f"vt_to_target_s={tt if tt is not None else 'never'};"
+                     f"vt_total_s={r['vt_total']:.2f};"
+                     f"f1={r['final_f1']:.3f};"
+                     f"up_mb={r['uplink_mb']:.3f}"))
+    os.makedirs("results/async", exist_ok=True)
+    with open("results/async/async_bench.json", "w") as f:
+        json.dump(out, f, indent=1)
+    return rows
+
+
 def run(arch: str = ARCH) -> list:
     rows = []
     for engine in ("sequential", "vmap"):
@@ -138,6 +198,7 @@ def run(arch: str = ARCH) -> list:
     rows.extend(_fed_hist_rows())
     rows.extend(_participation_rows())
     rows.extend(_transport_rows())
+    rows.extend(_async_rows())
     return rows
 
 
@@ -218,12 +279,32 @@ def smoke(arch: str = ARCH) -> int:
         _, cs, _, _ = P.train_federated(clients, sub)
         assert cs.total_bytes() * 2 == cf.total_bytes()
 
+    def async_reduction():
+        """async:K with zero latency and K=n_clients must reproduce the
+        synchronous run bit-exactly (params, metrics trace, ledger)."""
+        from repro.core import parametric as P
+        clients, test = _framingham_clients(3, 600)
+        base = dict(model="logreg", rounds=3, local_steps=4, lr=0.05)
+        ps, cs, hs, _ = P.train_federated(
+            clients, P.FedParametricConfig(**base), test=test)
+        pa, ca, ha, _ = P.train_federated(
+            clients, P.FedParametricConfig(schedule="async:3", **base),
+            test=test)
+        for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(ps)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        strip = lambda es: [{k: v for k, v in e.items() if k != "t"}
+                            for e in es]
+        assert strip(ca.events) == strip(cs.events)
+        assert [{k: v for k, v in h.items()
+                 if k not in ("t", "round")} for h in ha] == hs
+
     print("fed_engine_bench --smoke (parity gate)")
     check("lm vmap == sequential", lm_parity)
     check("lm int8_sr ledger exact", lm_ledger)
     check("rf batched == sequential", tree_parity)
     check("fed_hist batched == sequential", hist_parity)
     check("runtime uniform-k halves ledger", runtime_participation)
+    check("async:n zero-latency == sync", async_reduction)
     print(f"{len(failures)} parity regressions")
     return 1 if failures else 0
 

@@ -5,6 +5,7 @@
   python -m benchmarks.report paper     # §Repro tables vs paper claims
   python -m benchmarks.report perf      # §Perf before/after per tag
   python -m benchmarks.report serve     # §Serving throughput/latency
+  python -m benchmarks.report async     # §Async — time-to-target-F1
 """
 from __future__ import annotations
 
@@ -168,8 +169,26 @@ def serve_section() -> str:
     return "\n".join(out)
 
 
+def async_section() -> str:
+    """Sync vs buffered-async aggregation under heterogeneous latency:
+    virtual time to the target F1 (benchmarks.fed_engine_bench writes
+    results/async/async_bench.json from the runtime timeline)."""
+    with open("results/async/async_bench.json") as f:
+        res = json.load(f)
+    out = [f"### §Async — time to F1 ≥ {res['target_f1']:.3f} "
+           f"(latency `{res['latency']}`, virtual clock)", "",
+           "| schedule | t→target (vs) | total (vs) | final F1 | "
+           "uplink MB |", "|---|---|---|---|---|"]
+    for sched, r in res["rows"].items():
+        tt = ("never" if r["time_to_target_s"] is None
+              else f"{r['time_to_target_s']:.2f}")
+        out.append(f"| {sched} | {tt} | {r['vt_total_s']:.2f} "
+                   f"| {r['final_f1']:.3f} | {r['uplink_mb']:.2f} |")
+    return "\n".join(out)
+
+
 if __name__ == "__main__":
     which = sys.argv[1] if len(sys.argv) > 1 else "roofline"
     print({"dryrun": dryrun_section, "roofline": roofline_section,
            "paper": paper_section, "perf": perf_section,
-           "serve": serve_section}[which]())
+           "serve": serve_section, "async": async_section}[which]())

@@ -39,10 +39,16 @@ class CommLog:
     events: List[Dict] = field(default_factory=list)
 
     def log(self, round_idx: int, client: str, direction: str,
-            nbytes: int, what: str = ""):
-        self.events.append(dict(round=round_idx, client=client,
-                                direction=direction, bytes=int(nbytes),
-                                what=what))
+            nbytes: int, what: str = "", t: Optional[float] = None):
+        """``t`` is the virtual wall-clock stamp — recorded by the
+        runtime when a latency model or the async schedule is active,
+        omitted otherwise so untimed ledgers stay bit-identical to the
+        pre-virtual-time format."""
+        e = dict(round=round_idx, client=client, direction=direction,
+                 bytes=int(nbytes), what=what)
+        if t is not None:
+            e["t"] = float(t)
+        self.events.append(e)
 
     def total_bytes(self, direction: str = None) -> int:
         return sum(e["bytes"] for e in self.events

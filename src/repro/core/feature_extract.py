@@ -57,6 +57,8 @@ class FedXGBConfig:
     # 'sequential' (per-client loop — the parity reference)
     participation: str = "full"  # repro.core.participation spec
     transport: str = "plain"     # size-level layers only (framing)
+    schedule: str = "sync"       # repro.core.runtime.SCHEDULES spec
+    latency: Optional[str] = None  # repro.core.latency.LATENCY spec
     seed: int = 0
 
     @property
@@ -168,7 +170,11 @@ class _XGBWork(ClientWork, ServerAgg):
                                 num_rounds=cfg.shallow_rounds_,
                                 depth=cfg.shallow_depth,
                                 feature_masks=masks, prepped=prepped)
-            self.tops = tops
+            # keyed by global client id: the aggregation cohort need not
+            # equal the dispatch cohort (async buffered aggregation)
+            by_client = dict(getattr(self, "tops", {}))
+            by_client.update(zip(rnd.computing, tops))
+            self.tops = by_client
             extras = [4 + 4 * len(t) for t in tops]  # count + feature ids
         msgs = []
         for slot, i in enumerate(rnd.computing):
@@ -199,7 +205,7 @@ class _XGBWork(ClientWork, ServerAgg):
         else:
             state["model"] = FeatureExtractEnsemble(
                 models, weights, [m.base_margin for m in models],
-                [self.tops[rnd.computing.index(m.client)] for m in msgs])
+                [self.tops[m.client] for m in msgs])
         return state
 
     def finalize(self, rt, state):
@@ -210,7 +216,8 @@ def _run_one_shot(clients, cfg: FedXGBConfig, mode: str, fed_stats=None):
     work = _XGBWork(clients, cfg, mode, fed_stats)
     rt = FedRuntime(n_clients=len(clients), rounds=1,
                     participation=cfg.participation,
-                    transport=cfg.transport, seed=cfg.seed,
+                    transport=cfg.transport, schedule=cfg.schedule,
+                    latency=cfg.latency, seed=cfg.seed,
                     allow_stale=False)
     model = rt.run(work)
     return model, rt.comm, rt.timer

@@ -41,7 +41,7 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -75,6 +75,8 @@ class FedHistConfig:
     dp_sensitivity: float = 1.0
     participation: str = "full"  # repro.core.participation spec
     transport: str = "plain"     # mask/dpnoise/frame layers (no codecs)
+    schedule: str = "sync"       # repro.core.runtime.SCHEDULES spec
+    latency: Optional[str] = None  # repro.core.latency.LATENCY spec
     seed: int = 0
 
 
@@ -220,7 +222,8 @@ def train_federated_xgb_hist(clients: Sequence[Tuple[np.ndarray,
     work = _HistWork(clients, cfg, fed_stats)
     rt = FedRuntime(n_clients=len(clients), rounds=cfg.num_rounds,
                     participation=cfg.participation,
-                    transport=cfg.transport, seed=cfg.seed,
+                    transport=cfg.transport, schedule=cfg.schedule,
+                    latency=cfg.latency, seed=cfg.seed,
                     allow_stale=False)
     model = rt.run(work)
     return model, rt.comm, rt.timer

@@ -1,0 +1,162 @@
+"""Client latency / availability models for the virtual-time runtime.
+
+Real cross-silo federations (the FedCVD++ setting) pair a handful of
+well-resourced hospitals with sites on shared clusters and flaky links:
+a synchronous round idles on the slowest site, and the async runtime
+(``repro.core.runtime`` ``--schedule async:K``) exists to quantify that.
+Both schedules need the same ingredient — a per-client model of how long
+one local round takes on the (virtual) wall clock, and whether the
+resulting upload ever arrives.
+
+A model maps ``(client, k)`` — the client's *k*-th dispatch — to a
+:class:`Draw` (virtual seconds + a dropped flag).  Draws are pure
+functions of ``(seed, client, k)``: the same spec + seed replays the
+same trace regardless of event-processing order, which is what makes
+async runs deterministic and resumable.
+
+Select by name through :data:`LATENCY` / :func:`get_latency`.  Spec
+strings carry parameters after colons and compose with ``+`` (delays
+add; a dispatch is dropped if *any* component drops)::
+
+    constant              every round takes 1.0 virtual seconds
+    constant:3.5          ... or a fixed 3.5 s
+    lognormal:0:0.5       heavy-tailed per-dispatch delay exp(N(mu, sigma))
+    trace:lat.json        per-client delays from a recorded trace file
+    dropout:0.1           the upload is lost with p=0.1 (delay 0)
+    lognormal:0:1+dropout:0.05   heterogeneous compute AND a lossy uplink
+
+``trace`` files are JSON: either a list (``[1.0, 4.0, 2.5]`` — constant
+per-client delay, indexed modulo clients) or a dict of per-client delay
+sequences (``{"0": [1.0, 1.2], "1": [4.0]}`` — cycled over dispatches).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class Draw:
+    """One dispatch's fate: the local round occupies ``delay`` virtual
+    seconds; ``dropped`` means the upload never reaches the server (the
+    client still computed and re-enters the dispatch pool)."""
+    delay: float
+    dropped: bool = False
+
+
+@dataclass(frozen=True)
+class LatencyModel:
+    """A named model: ``draw(client, k)`` → :class:`Draw` for the
+    client's k-th dispatch, deterministic in the construction seed."""
+    name: str
+    draw_fn: Callable[[int, int], Draw]
+
+    def draw(self, client: int, k: int) -> Draw:
+        return self.draw_fn(client, k)
+
+
+def _rng(seed: int, comp: int, client: int, k: int) -> np.random.Generator:
+    # keyed per (component, client, dispatch): draws are order-free
+    return np.random.default_rng([seed, 0x1A7, comp, client, k])
+
+
+def _constant(t: float = 1.0):
+    def make(seed: int, comp: int) -> Callable[[int, int], Draw]:
+        return lambda client, k: Draw(float(t))
+    return make
+
+
+def _lognormal(mu: float = 0.0, sigma: float = 0.5):
+    def make(seed: int, comp: int):
+        def draw(client, k):
+            return Draw(float(_rng(seed, comp, client, k)
+                              .lognormal(mu, sigma)))
+        return draw
+    return make
+
+
+def _dropout(p: float):
+    def make(seed: int, comp: int):
+        def draw(client, k):
+            return Draw(0.0,
+                        dropped=bool(_rng(seed, comp, client, k).random()
+                                     < p))
+        return draw
+    return make
+
+
+def _trace(path: str):
+    """Per-client delays from a recorded JSON trace (list: one constant
+    delay per client, indexed modulo; dict: per-client sequences cycled
+    over dispatches)."""
+    with open(path) as f:
+        data = json.load(f)
+    if not data:
+        raise ValueError(f"trace {path!r} is empty")
+
+    keys = sorted(data) if isinstance(data, dict) else None
+
+    def make(seed: int, comp: int):
+        def draw(client, k):
+            if keys is not None:
+                # exact client key if recorded, else cycle over the
+                # recorded clients (keys need not be contiguous)
+                key = (str(client) if str(client) in data
+                       else keys[client % len(keys)])
+                seq = data[key]
+                if not seq:
+                    raise KeyError(f"trace {path!r}: empty delay "
+                                   f"sequence for client key {key!r}")
+                return Draw(float(seq[k % len(seq)]))
+            return Draw(float(data[client % len(data)]))
+        return draw
+    return make
+
+
+#: model name -> factory(*args) -> (seed, component_idx) -> draw fn.
+#: Resolved via :func:`get_latency` spec strings, composable with '+'
+#: ("lognormal:0:1+dropout:0.05").
+LATENCY: Dict[str, Callable] = {
+    "constant": _constant,
+    "lognormal": _lognormal,
+    "trace": _trace,
+    "dropout": _dropout,
+}
+
+
+def get_latency(spec, seed: int = 0) -> Optional[LatencyModel]:
+    """Resolve a latency model from a spec string (or pass one through).
+
+    ``None`` / ``"none"`` / ``"zero"`` mean no model: zero delay, no
+    drops — the bit-exact-reduction default."""
+    if spec is None or isinstance(spec, LatencyModel):
+        return spec
+    text = str(spec)
+    if text in ("none", "zero", ""):
+        return None
+    draws: List[Callable[[int, int], Draw]] = []
+    for comp, part in enumerate(text.split("+")):
+        tokens = part.strip().split(":")
+        name, args = tokens[0], tokens[1:]
+        if name not in LATENCY:
+            raise KeyError(f"unknown latency model {part!r} in {spec!r}; "
+                           f"available: {sorted(LATENCY)} (spec: "
+                           f"name[:arg...], composed with '+')")
+        coerced = [a if name == "trace" else float(a) for a in args]
+        try:
+            draws.append(LATENCY[name](*coerced)(seed, comp))
+        except TypeError as e:
+            raise ValueError(f"bad latency spec {part!r}: {e}") from e
+
+    def combined(client: int, k: int) -> Draw:
+        delay, dropped = 0.0, False
+        for d in draws:
+            out = d(client, k)
+            delay += out.delay
+            dropped = dropped or out.dropped
+        return Draw(delay, dropped)
+
+    return LatencyModel(text, combined)

@@ -47,6 +47,8 @@ class FedParametricConfig:
     dp_clip: float = 1.0
     participation: str = "full"      # repro.core.participation spec
     transport: str = "plain"         # repro.core.comm.TRANSPORTS spec
+    schedule: str = "sync"           # repro.core.runtime.SCHEDULES spec
+    latency: Optional[str] = None    # repro.core.latency.LATENCY spec
     seed: int = 0
 
 
@@ -150,10 +152,25 @@ class _ParametricWork(ClientWork, ServerAgg):
 
     def client_round(self, rt, state, rnd):
         cfg, params = self.cfg, state["params"]
-        ws = self.strat.norm_weights(
-            [len(self.clients[i][1]) for i in rnd.computing])
-        state["max_w"] = max(ws)
         n_active = len(rnd.computing)
+        if rt.schedule_mode == "async":
+            # buffered aggregation: the server averages over whatever K
+            # messages fill the buffer, which need not be this dispatch
+            # cohort — so fold a cohort-independent weight (normalized
+            # over ALL clients, scaled by n_clients) that stays
+            # consistent across a client's re-dispatches.  With zero
+            # latency and K = n the cohort IS all clients, so this
+            # reduces to the sync fold bit-exactly.
+            ws_all = self.strat.norm_weights(
+                [len(y) for _, y in self.clients])
+            ws = [ws_all[i] for i in rnd.computing]
+            state["max_w"] = max(ws_all)
+            scale = rt.n_clients
+        else:
+            ws = self.strat.norm_weights(
+                [len(self.clients[i][1]) for i in rnd.computing])
+            state["max_w"] = max(ws)
+            scale = n_active
         msgs = []
         for slot, i in enumerate(rnd.computing):
             x, y = self.clients[i]
@@ -164,7 +181,7 @@ class _ParametricWork(ClientWork, ServerAgg):
             wire = rt.encode(update, round_idx=rnd.index, client=i,
                              slot=slot, n_active=n_active,
                              state=state["codec"].get(i),
-                             weight_scale=ws[slot] * n_active)
+                             weight_scale=ws[slot] * scale)
             state["codec"][i] = wire.state
             rt.log_up(rnd.index, i, wire.nbytes, "update")
             msgs.append(ClientMsg(i, wire.payload, wire.nbytes,
@@ -187,8 +204,12 @@ class _ParametricWork(ClientWork, ServerAgg):
             xt = jnp.asarray(self.test[0])
             pred = np.asarray(spec["predict"](state["params"], xt))
             scores = np.asarray(spec["proba"](state["params"], xt))
-            self.history.append(binary_metrics(pred, self.test[1],
-                                               scores=scores))
+            entry = binary_metrics(pred, self.test[1], scores=scores)
+            if rt._stamp() is not None:  # virtual-time runs: stamp the
+                # metrics trace so time-to-target curves fall out of the
+                # history directly (untimed runs keep the legacy dicts)
+                entry = dict(entry, t=rt.now, round=rnd.index)
+            self.history.append(entry)
         return state
 
     def finalize(self, rt, state):
@@ -223,6 +244,7 @@ def train_federated(clients: Sequence[Tuple[np.ndarray, np.ndarray]],
     rt = FedRuntime(n_clients=len(clients), rounds=cfg.rounds,
                     participation=cfg.participation,
                     transport=_parametric_transport(cfg, strat),
+                    schedule=cfg.schedule, latency=cfg.latency,
                     seed=cfg.seed)
     params = rt.run(work)
     return params, rt.comm, work.history, rt.timer

@@ -32,11 +32,39 @@ the in-repo pipelines do it.  Under ``participation='full'`` and
 ``transport='plain'`` every refactored pipeline reproduces its
 pre-runtime losses/forests/ledger bytes exactly
 (``tests/test_runtime.py``).
+
+**Schedules** (:data:`SCHEDULES`): the engine runs the same plugins
+under two execution modes, selected by ``schedule``:
+
+* ``sync`` (default) — the round loop above, bit-exact with every
+  pre-runtime pipeline.  When a ``latency`` model is set the virtual
+  clock advances by the *slowest* computing client per round (the
+  synchronous barrier), so sync and async runs are comparable on the
+  same virtual timeline.
+* ``async:K`` — FedBuff-style buffered asynchronous aggregation on a
+  deterministic virtual-clock event loop.  Every client computes
+  continuously: it is dispatched with the current model, its upload
+  arrives after a delay drawn from its
+  :mod:`~repro.core.latency` model, and the server aggregates whenever
+  **K** uploads have arrived.  A message aggregated ``s`` server
+  versions after its dispatch is delivered with ``staleness=s`` and its
+  payload scaled by ``stale_discount ** s`` — the same stale-update
+  machinery the sync loop applies to straggler deliveries, generalized
+  from one-round buffering to arbitrary staleness.  With zero latency
+  and ``K = n_clients`` the event loop reduces to the synchronous round
+  loop bit-exactly (``tests/test_async.py``, CI-gated).
+
+Every aggregation appends to :attr:`FedRuntime.timeline` (server
+version, virtual time, arrivals, staleness), and ledger events carry a
+``t`` stamp whenever a latency model or the async schedule is active —
+the time-to-target-F1 rows in ``benchmarks/fed_engine_bench.py`` are
+read from exactly these records.
 """
 from __future__ import annotations
 
+import heapq
 from dataclasses import dataclass, field
-from typing import Any, List, Optional
+from typing import Any, Dict, List, Optional
 
 import numpy as np
 
@@ -44,7 +72,41 @@ import jax
 
 from repro.core.comm import (CommLog, MaskLayer, Timer, Transport, WireCtx,
                              WireMsg, get_transport)
+from repro.core.latency import Draw, get_latency
 from repro.core.participation import Participation, get_participation
+
+
+#: schedule name -> what the mode does.  Resolved via
+#: :func:`get_schedule` spec strings ("sync", "async:K").
+SCHEDULES: Dict[str, str] = {
+    "sync": "round-synchronous: every round barriers on all scheduled "
+            "arrivals before aggregating",
+    "async": "async[:K] — buffered asynchronous aggregation: the server "
+             "aggregates every K arrivals (default 1), staleness-"
+             "discounted; clients compute continuously on a virtual "
+             "clock driven by their latency models",
+}
+
+
+def get_schedule(spec) -> tuple:
+    """Resolve a schedule spec to ``(mode, K)``: ``"sync"`` → ``("sync",
+    0)``; ``"async"`` / ``"async:K"`` → ``("async", K)`` (default K=1,
+    clamped to ``n_clients`` by the runtime)."""
+    parts = str(spec).split(":")
+    name, args = parts[0], parts[1:]
+    if name not in SCHEDULES:
+        raise KeyError(f"unknown schedule {spec!r}; "
+                       f"available: {sorted(SCHEDULES)} "
+                       f"(spec: sync | async[:K])")
+    if name == "sync":
+        if args:
+            raise ValueError(f"schedule 'sync' takes no args, got {spec!r}")
+        return "sync", 0
+    k = int(args[0]) if args else 1
+    if k < 1 or len(args) > 1:
+        raise ValueError(f"bad schedule spec {spec!r}: async:K needs one "
+                         f"integer K >= 1")
+    return "async", k
 
 
 @dataclass
@@ -100,17 +162,34 @@ class ServerAgg:
 
 @dataclass
 class FedRuntime:
-    """The engine.  ``participation`` / ``transport`` accept registry
-    spec strings (see :data:`~repro.core.participation.PARTICIPATION`,
-    :data:`~repro.core.comm.TRANSPORTS`) or prebuilt objects;
+    """The engine.  ``participation`` / ``transport`` / ``schedule`` /
+    ``latency`` accept registry spec strings (see
+    :data:`~repro.core.participation.PARTICIPATION`,
+    :data:`~repro.core.comm.TRANSPORTS`, :data:`SCHEDULES`,
+    :data:`~repro.core.latency.LATENCY`) or prebuilt objects;
     ``transport_cfg`` carries layer knobs (rho, rank, dp_*,
     frame_header).  ``allow_stale=False`` turns stragglers into plain
     drops for pipelines whose payloads cannot be replayed a round late
-    (histogram aggregation fused into tree growth)."""
+    (histogram aggregation fused into tree growth).  ``allow_stale``
+    governs only the sync straggler path: under ``async`` staleness is
+    inherent and every late payload is discounted — safe for the
+    in-repo ``allow_stale=False`` pipelines because their message
+    *content* is either computed at aggregation time from current
+    server state (fed_hist histograms; the ``None`` payload makes the
+    discount a no-op) or structurally fresh (one-shot protocols run a
+    single server version, so staleness is always 0; ``async:K`` there
+    means "publish from the first K uploads").
+
+    ``rounds`` is the number of *server aggregations* in both schedule
+    modes, so sync and ``async:K`` runs of the same config do the same
+    amount of server work and are comparable on the shared virtual
+    clock (:attr:`now` / :attr:`timeline`)."""
     n_clients: int
     rounds: int
     participation: Any = "full"
     transport: Any = "plain"
+    schedule: Any = "sync"
+    latency: Any = None
     seed: int = 0
     stale_discount: float = 0.5
     allow_stale: bool = True
@@ -123,9 +202,14 @@ class FedRuntime:
         self.participation = get_participation(self.participation)
         self.transport = get_transport(self.transport,
                                        **(self.transport_cfg or {}))
+        self.schedule_mode, self.agg_every = get_schedule(self.schedule)
+        self.latency = get_latency(self.latency, seed=self.seed)
+        self.now = 0.0            # virtual wall clock (seconds)
+        self.timeline: List[Dict] = []   # one record per aggregation
+        has_mask = any(isinstance(l, MaskLayer)
+                       for l in self.transport.layers)
         if (self.allow_stale and self.participation.may_straggle
-                and any(isinstance(l, MaskLayer)
-                        for l in self.transport.layers)):
+                and has_mask):
             raise ValueError(
                 f"participation {self.participation.name!r} can deliver "
                 f"straggler updates a round late, but transport "
@@ -134,20 +218,42 @@ class FedRuntime:
                 f"would never cancel in the server sum.  Use "
                 f"'dropout:p' (stragglers lost, p_straggle=0) or drop "
                 f"the mask layer")
+        if self.schedule_mode == "async":
+            if self.participation.name != "full":
+                raise ValueError(
+                    f"schedule 'async' needs participation 'full' (got "
+                    f"{self.participation.name!r}): who computes when is "
+                    f"driven by the latency/availability model, not a "
+                    f"round schedule")
+            if has_mask:
+                raise ValueError(
+                    f"transport {self.transport.name!r} carries secure-"
+                    f"agg masks keyed to a dispatch cohort, but buffered "
+                    f"async aggregation mixes cohorts — the pairwise "
+                    f"masks would never cancel in the server sum.  Drop "
+                    f"the mask layer or use schedule 'sync'")
         self._rng = np.random.default_rng([self.seed, 0xFED])
 
     # -- ledger helpers ----------------------------------------------------
 
+    def _stamp(self) -> Optional[float]:
+        """Virtual-time ledger stamp — recorded whenever time is being
+        modeled (async schedule, or sync with a latency model)."""
+        if self.schedule_mode == "async" or self.latency is not None:
+            return self.now
+        return None
+
     def log_up(self, round_idx: int, client: int, nbytes: int, what: str):
         self.comm.log(round_idx, f"{self.client_prefix}{client}", "up",
-                      nbytes, what)
+                      nbytes, what, t=self._stamp())
 
     def log_down(self, round_idx: int, client: int, nbytes: int,
                  what: str):
         """Broadcast accounting; framing overhead applies to the
         downlink too."""
         self.comm.log(round_idx, f"{self.client_prefix}{client}", "down",
-                      nbytes + self.transport.frame_overhead, what)
+                      nbytes + self.transport.frame_overhead, what,
+                      t=self._stamp())
 
     # -- transport helpers -------------------------------------------------
 
@@ -174,6 +280,22 @@ class FedRuntime:
     def run(self, work: ClientWork, agg: Optional[ServerAgg] = None):
         agg = agg if agg is not None else work
         state = work.setup(self)
+        self._n_dispatch = [0] * self.n_clients
+        if self.schedule_mode == "async":
+            state = self._run_async(work, agg, state)
+        else:
+            state = self._run_sync(work, agg, state)
+        return work.finalize(self, state)
+
+    def _draw(self, client: int) -> Draw:
+        """One latency draw for the client's next dispatch (zero-delay,
+        never-dropped when no model is configured)."""
+        k = self._n_dispatch[client]
+        self._n_dispatch[client] = k + 1
+        return (self.latency.draw(client, k)
+                if self.latency is not None else Draw(0.0))
+
+    def _run_sync(self, work: ClientWork, agg: ServerAgg, state):
         pending: List[ClientMsg] = []
         for r in range(self.rounds):
             plan = self.participation.plan(r, self.n_clients, self._rng)
@@ -190,6 +312,12 @@ class FedRuntime:
             rnd = RoundInfo(r, computing, arrive, stragglers)
             msgs = (work.client_round(self, state, rnd)
                     if computing else [])
+            # the synchronous barrier: the round takes as long as the
+            # slowest computing client (drops are a participation-axis
+            # concern in sync mode, so the dropped flag is ignored)
+            self.now += (max(self._draw(c).delay for c in computing)
+                         if self.latency is not None and computing
+                         else 1.0)
             late_set = set(stragglers)
             fresh = [m for m in msgs if m.client not in late_set]
             late = [m for m in msgs if m.client in late_set]
@@ -205,4 +333,81 @@ class FedRuntime:
             pending = late
             if deliver:
                 state = agg.aggregate(self, state, deliver, rnd)
-        return work.finalize(self, state)
+                self.timeline.append(
+                    {"round": r, "t": self.now, "n_msgs": len(deliver),
+                     "staleness": [m.staleness for m in deliver]})
+        return state
+
+    def _run_async(self, work: ClientWork, agg: ServerAgg, state):
+        """Deterministic virtual-clock event loop (FedBuff-style).
+
+        Every client computes continuously: dispatched with the current
+        model, its upload arrives ``delay`` virtual seconds later (its
+        :mod:`~repro.core.latency` draw) and is buffered; every
+        ``agg_every``-th arrival triggers an aggregation and bumps the
+        server version.  A message dispatched at version ``v0`` and
+        aggregated at version ``v`` carries ``staleness = v - v0`` and
+        its payload is scaled by ``stale_discount ** staleness``.
+        Clients re-enter the dispatch pool when their upload is consumed
+        (or lost — a dropped upload is retried on the then-current
+        model).  Arrivals are totally ordered by ``(time, dispatch
+        seq)``, so a fixed seed replays the identical event sequence.
+        """
+        K = min(self.agg_every, self.n_clients)
+        heap: List[tuple] = []   # (arrival_t, seq, client, msg|None, v0)
+        buffer: List[ClientMsg] = []
+        ready = list(range(self.n_clients))
+        version, seq = 0, 0
+        # with a drop-everything availability model arrivals never come;
+        # bound total dispatches so the loop fails loudly instead
+        budget = 64 * (self.rounds + 1) * max(self.n_clients, 1)
+        dispatched = 0
+        while version < self.rounds:
+            if ready:
+                group = sorted(ready)
+                ready = []
+                dispatched += len(group)
+                if dispatched > budget:
+                    raise RuntimeError(
+                        f"async runtime exceeded {budget} dispatches "
+                        f"before {self.rounds} aggregations — the "
+                        f"latency model "
+                        f"{getattr(self.latency, 'name', None)!r} drops "
+                        f"(almost) every upload")
+                rnd = RoundInfo(version, group, list(group), [])
+                for m in work.client_round(self, state, rnd):
+                    d = self._draw(m.client)
+                    heapq.heappush(heap, (self.now + d.delay, seq,
+                                          m.client,
+                                          None if d.dropped else m,
+                                          version))
+                    seq += 1
+                continue
+            if not heap:
+                raise RuntimeError("async runtime stalled: no client "
+                                   "ready and nothing in flight")
+            t, _, client, msg, v0 = heapq.heappop(heap)
+            self.now = max(self.now, t)
+            if msg is None:          # upload lost in transit: the bytes
+                ready.append(client)  # were spent; the client retries
+                continue              # on the then-current model
+            msg.staleness = version - v0
+            buffer.append(msg)
+            if len(buffer) < K:
+                continue
+            for m in buffer:
+                if m.staleness > 0:  # same stale-update discounting as
+                    # the sync loop's straggler path (payload scaling
+                    # holds under any aggregator normalization)
+                    f = self.stale_discount ** m.staleness
+                    m.payload = jax.tree.map(lambda x: x * f, m.payload)
+            arrived = sorted(m.client for m in buffer)
+            rnd = RoundInfo(version, arrived, arrived, [])
+            state = agg.aggregate(self, state, buffer, rnd)
+            self.timeline.append(
+                {"round": version, "t": self.now, "n_msgs": len(buffer),
+                 "staleness": [m.staleness for m in buffer]})
+            version += 1
+            ready.extend(m.client for m in buffer)
+            buffer = []
+        return state

@@ -54,6 +54,8 @@ class FedForestConfig:
     # 'sequential' (per-client loop — the parity reference)
     participation: str = "full"       # repro.core.participation spec
     transport: str = "plain"          # size-level layers only (framing)
+    schedule: str = "sync"            # repro.core.runtime.SCHEDULES spec
+    latency: Optional[str] = None     # repro.core.latency.LATENCY spec
     seed: int = 0
 
 
@@ -170,7 +172,8 @@ def train_federated_rf(clients: Sequence[Tuple[np.ndarray, np.ndarray]],
     work = _ForestWork(clients, cfg, fed_stats)
     rt = FedRuntime(n_clients=len(clients), rounds=1,
                     participation=cfg.participation,
-                    transport=cfg.transport, seed=cfg.seed,
+                    transport=cfg.transport, schedule=cfg.schedule,
+                    latency=cfg.latency, seed=cfg.seed,
                     allow_stale=False)
     model = rt.run(work)
     return model, rt.comm, rt.timer

@@ -230,6 +230,7 @@ def simulate(arch: str, *, n_pods: int = 3, rounds: int = 10,
              rho: float = 0.05, rank: int = 8,
              non_iid_alpha: float = 0.5, partition: Optional[str] = None,
              participation: str = "full", transport: str = "plain",
+             schedule: str = "sync", latency: Optional[str] = None,
              sync_sampler: bool = False, seed: int = 0,
              run: Optional[RunConfig] = None, verbose: bool = True,
              strategy: str = "fedavg", engine: str = "vmap"):
@@ -257,11 +258,17 @@ def simulate(arch: str, *, n_pods: int = 3, rounds: int = 10,
         "stratified:k" | "dropout:p[:p_straggle]") — stragglers deliver
         stale, weight-discounted updates next round.
       transport: wire layer stack spec (``repro.core.comm.TRANSPORTS``).
+      schedule: execution mode ("sync" | "async:K",
+        ``repro.core.runtime.SCHEDULES``) — async:K aggregates every K
+        pod arrivals, staleness-discounted, on the virtual clock.
+      latency: per-pod latency/availability model spec
+        (``repro.core.latency.LATENCY``, e.g. "lognormal:0:1").
       sync_sampler: synchronize pod samplers (fed-SMOTE analog).
 
-    Returns a dict with ``loss_history`` (per-round mean loss),
+    Returns a dict with ``loss_history`` (per-aggregation mean loss),
     ``comm`` (CommLog, exact bytes up/down per pod per round),
-    ``uplink_mb``, ``final_params``, and ``round_s`` (engine wall time).
+    ``uplink_mb``, ``final_params``, ``round_s`` (engine wall time), and
+    ``timeline`` (per-aggregation virtual-clock records).
     """
     if engine not in ("vmap", "sequential"):
         raise ValueError(f"unknown engine {engine!r}; "
@@ -304,13 +311,14 @@ def simulate(arch: str, *, n_pods: int = 3, rounds: int = 10,
                     rounds=rounds)
     rt = FedRuntime(n_clients=n_pods, rounds=rounds,
                     participation=participation, transport=transport,
+                    schedule=schedule, latency=latency,
                     seed=seed, client_prefix="pod")
     state = rt.run(work)
     return {"loss_history": state["history"], "comm": rt.comm,
             "uplink_mb": rt.comm.total_mb("up"),
             "final_params": state["params"],
             "strategy": strat.name, "engine": engine,
-            "round_s": rt.timer.total_s}
+            "round_s": rt.timer.total_s, "timeline": rt.timeline}
 
 
 # --- histogram-aggregation federated trees (fed_hist) -------------------------
@@ -322,7 +330,9 @@ def simulate_fed_hist(*, n_clients: int = 3, rounds: int = 20,
                       hist_impl: str = "auto",
                       partition: str = "iid", alpha: float = 0.5,
                       participation: str = "full",
-                      transport: str = "plain", seed: int = 0,
+                      transport: str = "plain",
+                      schedule: str = "sync",
+                      latency: Optional[str] = None, seed: int = 0,
                       n_records: int = 4238, verbose: bool = True):
     """Histogram-aggregation federated GBDT on the Framingham twin.
 
@@ -358,7 +368,8 @@ def simulate_fed_hist(*, n_clients: int = 3, rounds: int = 20,
                            secure_agg=secure_agg, dp_epsilon=dp_epsilon,
                            hist_impl=hist_impl,
                            participation=participation,
-                           transport=transport, seed=seed)
+                           transport=transport, schedule=schedule,
+                           latency=latency, seed=seed)
     model, comm, timer = FH.train_federated_xgb_hist(clients, cfg)
     metrics = FH.evaluate_fed_hist(model, te.x, te.y)
     if verbose:
@@ -370,6 +381,122 @@ def simulate_fed_hist(*, n_clients: int = 3, rounds: int = 20,
     return {"metrics": metrics, "comm": comm,
             "uplink_mb": comm.total_mb("up"), "round_s": timer.total_s,
             "engine": engine}
+
+
+# --- tabular pipeline drivers (paper C1-C3 on the Framingham twin) ------------
+
+def _tabular_clients(n_clients: int, partition: str, alpha: float,
+                     seed: int, n_records: int):
+    from repro.data import framingham as F
+    from repro.data import partition as P
+
+    ds = F.synthesize(n=n_records, seed=seed)
+    tr, te = F.train_test_split(ds)
+    if partition == "iid":
+        shards = F.partition_clients(tr, n_clients, seed)
+    else:
+        kw = {"alpha": alpha} if partition in ("dirichlet",
+                                               "quantity") else {}
+        shards = P.partition_dataset(partition, tr, n_clients,
+                                     seed=seed + 2, **kw)
+    return [(c.x, c.y) for c in shards], (te.x, te.y)
+
+
+def simulate_parametric(*, model: str = "logreg", n_clients: int = 3,
+                        rounds: int = 20, local_steps: int = 20,
+                        sampling: str = "none", strategy: str = "fedavg",
+                        partition: str = "iid", alpha: float = 0.5,
+                        participation: str = "full",
+                        transport: str = "plain",
+                        schedule: str = "sync",
+                        latency: Optional[str] = None, seed: int = 0,
+                        n_records: int = 4238, verbose: bool = True):
+    """Parametric FL (paper C1) on the Framingham twin — the CLI face of
+    ``repro.core.parametric.train_federated``, sharing the partition /
+    participation / transport / schedule axes with every other mode."""
+    from repro.core import parametric as P
+
+    clients, test = _tabular_clients(n_clients, partition, alpha, seed,
+                                     n_records)
+    cfg = P.FedParametricConfig(model=model, rounds=rounds,
+                                local_steps=local_steps,
+                                sampling=sampling, strategy=strategy,
+                                participation=participation,
+                                transport=transport, schedule=schedule,
+                                latency=latency, seed=seed)
+    params, comm, history, timer = P.train_federated(clients, cfg,
+                                                     test=test)
+    metrics = history[-1] if history else {}
+    if verbose and metrics:
+        print(f"parametric/{model}: F1={metrics['f1']:.3f} "
+              f"uplink={comm.uplink_mb():.2f}MB agg {timer.total_s:.2f}s "
+              f"({schedule})")
+    return {"params": params, "metrics": metrics, "history": history,
+            "comm": comm, "uplink_mb": comm.total_mb("up"),
+            "round_s": timer.total_s}
+
+
+def simulate_tree_subset(*, n_clients: int = 3, trees_per_client: int = 20,
+                         subset: Optional[int] = None, depth: int = 6,
+                         n_bins: int = 32, sampling: str = "none",
+                         engine: str = "batched", hist_impl: str = "auto",
+                         partition: str = "iid", alpha: float = 0.5,
+                         participation: str = "full",
+                         transport: str = "plain",
+                         schedule: str = "sync",
+                         latency: Optional[str] = None, seed: int = 0,
+                         n_records: int = 4238, verbose: bool = True):
+    """Tree-subset federated RF (paper C2) on the Framingham twin."""
+    from repro.core import tree_subset as TS
+
+    clients, test = _tabular_clients(n_clients, partition, alpha, seed,
+                                     n_records)
+    cfg = TS.FedForestConfig(trees_per_client=trees_per_client,
+                             subset=subset, depth=depth, n_bins=n_bins,
+                             sampling=sampling, engine=engine,
+                             hist_impl=hist_impl,
+                             participation=participation,
+                             transport=transport, schedule=schedule,
+                             latency=latency, seed=seed)
+    model, comm, timer = TS.train_federated_rf(clients, cfg)
+    metrics = TS.evaluate_rf(model, test[0], test[1])
+    if verbose:
+        print(f"tree_subset: F1={metrics['f1']:.3f} "
+              f"uplink={comm.uplink_mb():.2f}MB ({schedule})")
+    return {"model": model, "metrics": metrics, "comm": comm,
+            "uplink_mb": comm.total_mb("up"), "round_s": timer.total_s}
+
+
+def simulate_feature_extract(*, n_clients: int = 3, rounds: int = 15,
+                             depth: int = 4, n_bins: int = 32,
+                             sampling: str = "none",
+                             engine: str = "batched",
+                             hist_impl: str = "auto",
+                             partition: str = "iid", alpha: float = 0.5,
+                             participation: str = "full",
+                             transport: str = "plain",
+                             schedule: str = "sync",
+                             latency: Optional[str] = None, seed: int = 0,
+                             n_records: int = 4238,
+                             verbose: bool = True):
+    """XGBoost feature-extraction FL (paper C3) on the Framingham twin."""
+    from repro.core import feature_extract as FE
+
+    clients, test = _tabular_clients(n_clients, partition, alpha, seed,
+                                     n_records)
+    cfg = FE.FedXGBConfig(num_rounds=rounds, depth=depth, n_bins=n_bins,
+                          sampling=sampling, engine=engine,
+                          hist_impl=hist_impl,
+                          participation=participation,
+                          transport=transport, schedule=schedule,
+                          latency=latency, seed=seed)
+    model, comm, timer = FE.train_federated_xgb_fe(clients, cfg)
+    metrics = FE.evaluate_fe(model, test[0], test[1])
+    if verbose:
+        print(f"feature_extract: F1={metrics['f1']:.3f} "
+              f"uplink={comm.uplink_mb():.2f}MB ({schedule})")
+    return {"model": model, "metrics": metrics, "comm": comm,
+            "uplink_mb": comm.total_mb("up"), "round_s": timer.total_s}
 
 
 # --- multi-pod dry-run artifact -----------------------------------------------
@@ -409,10 +536,14 @@ def build_fed_round(cfg, run: RunConfig, mesh, shape: ShapeConfig,
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", default="lm", choices=["lm", "fed_hist"],
-                    help="lm: federated LM pods; fed_hist: "
-                    "histogram-aggregation federated GBDT on the "
-                    "Framingham twin")
+    ap.add_argument("--mode", default="lm",
+                    choices=["lm", "parametric", "tree_subset",
+                             "feature_extract", "fed_hist"],
+                    help="lm: federated LM pods; parametric / "
+                    "tree_subset / feature_extract / fed_hist: the four "
+                    "paper pipelines on the Framingham twin — all five "
+                    "share the partition / participation / transport / "
+                    "schedule / latency axes")
     ap.add_argument("--arch", default="qwen3_4b")
     ap.add_argument("--pods", type=int, default=3)
     ap.add_argument("--rounds", type=int, default=5)
@@ -442,25 +573,53 @@ def main():
                     help="wire layer stack (repro.core.comm.TRANSPORTS "
                     "preset or '>'-joined layer spec, e.g. "
                     "'topk>mask>frame')")
+    ap.add_argument("--schedule", default="sync",
+                    help="execution schedule (repro.core.runtime."
+                    "SCHEDULES): sync | async:K (buffered async "
+                    "aggregation every K arrivals)")
+    ap.add_argument("--latency", default=None,
+                    help="client latency/availability model (repro.core."
+                    "latency.LATENCY): constant[:t] | lognormal:mu:sigma "
+                    "| trace:<file> | dropout:p, composable with '+'")
     ap.add_argument("--sync-sampler", action="store_true")
-    # fed_hist knobs
+    # tabular knobs
+    ap.add_argument("--model", default="logreg",
+                    help="parametric mode: logreg | svm | mlp")
     ap.add_argument("--depth", type=int, default=4)
     ap.add_argument("--n-bins", type=int, default=32)
     ap.add_argument("--sampling", default="none")
     ap.add_argument("--secure-agg", action="store_true")
     ap.add_argument("--dp-epsilon", type=float, default=0.0)
     args = ap.parse_args()
+    axes = dict(partition=args.partition or "iid", alpha=args.alpha,
+                participation=args.participation,
+                transport=args.transport, schedule=args.schedule,
+                latency=args.latency)
+    tree_engine = ("batched" if args.engine == "vmap" else args.engine)
     if args.mode == "fed_hist":
-        engine = ("batched" if args.engine == "vmap" else args.engine)
         simulate_fed_hist(n_clients=args.pods, rounds=args.rounds,
                           depth=args.depth, n_bins=args.n_bins,
-                          sampling=args.sampling, engine=engine,
+                          sampling=args.sampling, engine=tree_engine,
                           secure_agg=args.secure_agg,
-                          dp_epsilon=args.dp_epsilon,
-                          partition=args.partition or "iid",
-                          alpha=args.alpha,
-                          participation=args.participation,
-                          transport=args.transport)
+                          dp_epsilon=args.dp_epsilon, **axes)
+        return
+    if args.mode == "parametric":
+        simulate_parametric(model=args.model, n_clients=args.pods,
+                            rounds=args.rounds,
+                            local_steps=args.local_steps,
+                            sampling=args.sampling,
+                            strategy=args.strategy, **axes)
+        return
+    if args.mode == "tree_subset":
+        simulate_tree_subset(n_clients=args.pods, depth=args.depth,
+                             n_bins=args.n_bins, sampling=args.sampling,
+                             engine=tree_engine, **axes)
+        return
+    if args.mode == "feature_extract":
+        simulate_feature_extract(n_clients=args.pods, rounds=args.rounds,
+                                 depth=args.depth, n_bins=args.n_bins,
+                                 sampling=args.sampling,
+                                 engine=tree_engine, **axes)
         return
     out = simulate(args.arch, n_pods=args.pods, rounds=args.rounds,
                    local_steps=args.local_steps,
@@ -468,7 +627,8 @@ def main():
                    rank=args.rank, partition=args.partition,
                    non_iid_alpha=args.alpha,
                    participation=args.participation,
-                   transport=args.transport,
+                   transport=args.transport, schedule=args.schedule,
+                   latency=args.latency,
                    strategy=args.strategy, engine=args.engine,
                    sync_sampler=args.sync_sampler)
     print(f"final round loss {out['loss_history'][-1]:.4f}, "

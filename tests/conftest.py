@@ -1,0 +1,29 @@
+"""Tiered test suite.
+
+Tier-1 (the default, CI's fast gate):  ``pytest -x -q`` — tests marked
+``slow`` are deselected, keeping the suite a few minutes on CPU.  The
+fast tier keeps at least one test on every subsystem; the heavyweight
+end-to-end sweeps (multi-arch smoke, LM system runs, multi-device
+subprocesses, big kernel oracle sweeps) live in tier 2.
+
+Tier-2 (nightly-style CI job):  ``pytest -q -m "slow or not slow"``
+runs everything.  Any explicit ``-m`` expression disables the default
+deselection, so ``-m slow`` runs only the slow tier.
+"""
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: tier-2 test — deselected by default; run the full suite "
+        "with -m 'slow or not slow'")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("-m"):
+        return                     # explicit marker expression wins
+    deselected = [i for i in items if "slow" in i.keywords]
+    if deselected:
+        config.hook.pytest_deselected(items=deselected)
+        items[:] = [i for i in items if "slow" not in i.keywords]

@@ -37,6 +37,7 @@ def for_cases(case_list: List[Dict]):
                         f"case {i} failed: {case}: {e}") from e
         wrapper.__name__ = fn.__name__
         wrapper.__doc__ = fn.__doc__
+        wrapper.body = fn   # reusable: run one case (tiered subsets)
         return wrapper
     return deco
 

@@ -16,7 +16,13 @@ from repro.sharding import ShardingCtx
 
 RUN = RunConfig()
 CTX = ShardingCtx.null()
-ARCHS = R.LM_ARCH_IDS
+# tier 1 keeps two cheap-to-compile representative archs (dense +
+# SSM-free attention); the other compiles run in the slow tier
+# (full suite: -m "slow or not slow")
+SLOW_ARCHS = {"dbrx_132b", "whisper_medium", "hymba_15b", "internvl2_2b",
+              "phi35_moe", "mamba2_13b", "yi_34b", "minitron_4b"}
+ARCHS = [pytest.param(a, marks=pytest.mark.slow) if a in SLOW_ARCHS
+         else a for a in R.LM_ARCH_IDS]
 
 
 def _batch(cfg, B, T, rng):

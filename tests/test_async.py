@@ -1,0 +1,284 @@
+"""Async virtual-time runtime invariants: the sync reduction (async:n +
+zero latency == the synchronous loop bit-exactly), event-order and
+metric determinism under a fixed seed, dropout ledger accounting, the
+latency-model registry, and the one-shot tree pipelines under buffered
+aggregation."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import parametric as P
+from repro.core.latency import get_latency
+from repro.core.runtime import (ClientMsg, ClientWork, FedRuntime,
+                                ServerAgg, get_schedule)
+from repro.data import framingham as F
+
+
+def _clients(n=500, k=3, seed=1):
+    ds = F.synthesize(n=n, seed=seed)
+    tr, te = F.train_test_split(ds)
+    return [(c.x, c.y) for c in F.partition_clients(tr, k)], (te.x, te.y)
+
+
+def _strip(events):
+    return [{k: v for k, v in e.items() if k != "t"} for e in events]
+
+
+# --- registries ---------------------------------------------------------------
+
+def test_schedule_registry():
+    assert get_schedule("sync") == ("sync", 0)
+    assert get_schedule("async") == ("async", 1)
+    assert get_schedule("async:4") == ("async", 4)
+    with pytest.raises(KeyError):
+        get_schedule("eventually")
+    with pytest.raises(ValueError):
+        get_schedule("sync:2")        # sync takes no args
+    with pytest.raises(ValueError):
+        get_schedule("async:0")
+
+
+def test_latency_registry_and_composition(tmp_path):
+    assert get_latency(None) is None and get_latency("none") is None
+    c = get_latency("constant:2.5")
+    assert c.draw(0, 0).delay == 2.5 and not c.draw(0, 0).dropped
+    ln = get_latency("lognormal:0:0.5", seed=3)
+    d = ln.draw(1, 4)
+    assert d.delay > 0
+    assert ln.draw(1, 4).delay == d.delay       # seeded, order-free
+    assert ln.draw(1, 5).delay != d.delay
+    # composition: delays add, drops OR together
+    comp = get_latency("constant:1+dropout:1.0", seed=0)
+    out = comp.draw(0, 0)
+    assert out.delay == 1.0 and out.dropped
+    # trace files: list = per-client constants; dict = cycled sequences
+    p = tmp_path / "lat.json"
+    p.write_text(json.dumps([1.0, 4.0]))
+    tr = get_latency(f"trace:{p}")
+    assert tr.draw(0, 7).delay == 1.0 and tr.draw(1, 0).delay == 4.0
+    assert tr.draw(2, 0).delay == 1.0           # modulo clients
+    p.write_text(json.dumps({"0": [1.0, 2.0]}))
+    tr = get_latency(f"trace:{p}")
+    assert [tr.draw(0, k).delay for k in range(3)] == [1.0, 2.0, 1.0]
+    with pytest.raises(KeyError):
+        get_latency("warp-speed")
+
+
+# --- the sync reduction -------------------------------------------------------
+
+@pytest.mark.parametrize("kw", [
+    dict(),
+    dict(strategy="fedadam", sampling="ros"),
+    dict(strategy="fedavg_weighted"),  # cohort-independent weight fold
+])
+def test_async_n_zero_latency_equals_sync_parametric(kw):
+    """The acceptance bar: with zero latency and K = n_clients the
+    async event loop IS the synchronous round loop — same params, same
+    metrics trace, same ledger events (modulo the virtual-time stamp)."""
+    clients, test = _clients()
+    base = dict(model="logreg", rounds=3, local_steps=6, lr=0.05, **kw)
+    ps, cs, hs, _ = P.train_federated(
+        clients, P.FedParametricConfig(**base), test=test)
+    pa, ca, ha, _ = P.train_federated(
+        clients, P.FedParametricConfig(schedule=f"async:{len(clients)}",
+                                       **base), test=test)
+    for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(ps)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert _strip(ca.events) == cs.events
+    assert [{k: v for k, v in h.items() if k not in ("t", "round")}
+            for h in ha] == hs
+    # async events all carry the virtual-time stamp
+    assert all("t" in e for e in ca.events)
+
+
+def test_async_n_zero_latency_equals_sync_fed_hist():
+    from repro.core import fed_hist as FH
+    clients, test = _clients(n=400, k=3)
+    base = dict(num_rounds=3, depth=3, n_bins=16, seed=0)
+    ms, cs, _ = FH.train_federated_xgb_hist(clients,
+                                            FH.FedHistConfig(**base))
+    ma, ca, _ = FH.train_federated_xgb_hist(
+        clients, FH.FedHistConfig(schedule="async:3", **base))
+    np.testing.assert_array_equal(np.asarray(ms.forest.feature),
+                                  np.asarray(ma.forest.feature))
+    np.testing.assert_array_equal(np.asarray(ms.forest.leaf),
+                                  np.asarray(ma.forest.leaf))
+    assert _strip(ca.events) == _strip(cs.events)
+    assert ca.total_bytes() == cs.total_bytes()
+
+
+def test_sync_latency_model_does_not_change_results():
+    """In sync mode the latency model only drives the virtual clock (the
+    barrier waits for the slowest client) — params and ledger bytes are
+    untouched; the timeline is monotone with one record per round."""
+    clients, test = _clients()
+    base = dict(model="logreg", rounds=3, local_steps=5)
+    p0, c0, h0, _ = P.train_federated(
+        clients, P.FedParametricConfig(**base), test=test)
+    work = P._ParametricWork(clients, P.FedParametricConfig(**base),
+                             P.get_strategy("fedavg"), 0.0,
+                             (P._prep("logreg", test[0]), test[1]))
+    rt = FedRuntime(n_clients=len(clients), rounds=3,
+                    latency="lognormal:0:1", seed=0)
+    p1 = rt.run(work)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p0)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert _strip(rt.comm.events) == c0.events
+    ts = [rec["t"] for rec in rt.timeline]
+    assert len(ts) == 3 and ts == sorted(ts) and ts[0] > 0
+
+
+# --- determinism --------------------------------------------------------------
+
+def test_async_run_is_deterministic_under_fixed_seed():
+    clients, test = _clients()
+    cfg = P.FedParametricConfig(model="logreg", rounds=3, local_steps=4,
+                                schedule="async:2",
+                                latency="lognormal:0:1+dropout:0.2",
+                                seed=7)
+    out = [P.train_federated(clients, cfg, test=test) for _ in range(2)]
+    (pa, ca, ha, _), (pb, cb, hb, _) = out
+    for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ca.events == cb.events
+    assert ha == hb
+
+
+# --- ledger accounting under drops --------------------------------------------
+
+class _CountingWork(ClientWork, ServerAgg):
+    """Synthetic plugin: fixed 8-byte uplink per dispatch, sum server."""
+
+    def __init__(self):
+        self.aggregated = []
+
+    def setup(self, rt):
+        return {"sum": np.zeros(2)}
+
+    def client_round(self, rt, state, rnd):
+        msgs = []
+        for i in rnd.computing:
+            rt.log_up(rnd.index, i, 8, "update")
+            msgs.append(ClientMsg(i, jnp.ones(2), 8))
+        return msgs
+
+    def aggregate(self, rt, state, msgs, rnd):
+        self.aggregated.extend(m.client for m in msgs)
+        state["sum"] = state["sum"] + sum(np.asarray(m.payload)
+                                          for m in msgs)
+        return state
+
+
+def test_dropout_model_preserves_ledger_byte_accounting():
+    """Every dispatch ships (and logs) its bytes whether or not the
+    upload survives: up-bytes == 8 * dispatches, aggregated messages ==
+    rounds * K, and lost uploads are exactly the difference."""
+    work = _CountingWork()
+    rt = FedRuntime(n_clients=3, rounds=4, schedule="async:2",
+                    latency="constant:1+dropout:0.4", seed=11)
+    rt.run(work)
+    ups = [e for e in rt.comm.events if e["direction"] == "up"]
+    dispatches = sum(rt._n_dispatch)
+    assert len(ups) == dispatches
+    assert rt.comm.total_bytes("up") == 8 * dispatches
+    assert len(work.aggregated) == 4 * 2
+    assert dispatches >= len(work.aggregated)   # drops only add retries
+
+
+def test_async_all_drops_raises():
+    with pytest.raises(RuntimeError, match="drops"):
+        FedRuntime(n_clients=2, rounds=2, schedule="async:1",
+                   latency="dropout:1.0").run(_CountingWork())
+
+
+def test_async_rejects_masks_and_partial_participation():
+    with pytest.raises(ValueError, match="mask"):
+        FedRuntime(n_clients=2, rounds=1, schedule="async:1",
+                   transport="secure")
+    with pytest.raises(ValueError, match="participation"):
+        FedRuntime(n_clients=2, rounds=1, schedule="async:1",
+                   participation="uniform:1")
+
+
+# --- staleness ----------------------------------------------------------------
+
+def test_async_staleness_is_discounted_and_recorded():
+    """With one very slow client under async:1, its update aggregates
+    several versions after dispatch: the payload must arrive scaled by
+    stale_discount ** staleness and the timeline must record it."""
+    from repro.core.latency import Draw, LatencyModel
+    work = _CountingWork()
+    slow = LatencyModel("c0-slow", lambda c, k: Draw(2.5 if c == 0
+                                                     else 1.0))
+    rt = FedRuntime(n_clients=2, rounds=4, schedule="async:1",
+                    latency=slow, stale_discount=0.5)
+    state = rt.run(work)
+    stale = [s for rec in rt.timeline for s in rec["staleness"] if s > 0]
+    assert stale, "slow client never aggregated stale"
+    # sum reflects the discounts: fresh contribute 1, stale 0.5**s
+    expect = sum(0.5 ** s for rec in rt.timeline
+                 for s in rec["staleness"])
+    np.testing.assert_allclose(state["sum"], np.full(2, expect))
+
+
+# --- one-shot tree pipelines under buffered aggregation -----------------------
+
+def test_tree_pipelines_async_first_k_arrivals():
+    """async:K on the one-shot protocols publishes after the first K
+    uploads; the shipped per-client models must still be keyed to the
+    right client (the feature_extract tops fix)."""
+    from repro.core import feature_extract as FE
+    from repro.core import tree_subset as TS
+    clients, test = _clients(n=400, k=4)
+    lat = "lognormal:0:1"
+    rf_cfg = TS.FedForestConfig(trees_per_client=4, subset=2, depth=3,
+                                n_bins=16, schedule="async:2",
+                                latency=lat, seed=0)
+    model, comm, _ = TS.train_federated_rf(clients, rf_cfg)
+    assert int(model.forest.feature.shape[0]) == 4   # 2 clients x s=2
+    assert len([e for e in comm.events if e["what"] == "trees"]) == 4
+    assert np.isfinite(TS.evaluate_rf(model, *test)["f1"])
+
+    fe_cfg = FE.FedXGBConfig(num_rounds=2, depth=3, shallow_depth=2,
+                             shallow_rounds=1, top_features=4, n_bins=16,
+                             schedule="async:2", latency=lat, seed=0)
+    ens, _, _ = FE.train_federated_xgb_fe(clients, fe_cfg)
+    assert len(ens.trees) == 2 and len(ens.top_features) == 2
+    # sync run with the same cohort: each async (model, tops) pair must
+    # match the sync pair of the SAME client — weights identify clients
+    # (shard sizes are distinct under the dirichlet-free iid partition)
+    sync_cfg = FE.FedXGBConfig(num_rounds=2, depth=3, shallow_depth=2,
+                               shallow_rounds=1, top_features=4,
+                               n_bins=16, seed=0)
+    full, _, _ = FE.train_federated_xgb_fe(clients, sync_cfg)
+    for tree, top in zip(ens.trees, ens.top_features):
+        # find the sync client whose shallow trees bit-match this one
+        hit = [i for i, t in enumerate(full.trees)
+               if t.forest.feature.shape == tree.forest.feature.shape
+               and np.array_equal(np.asarray(t.forest.feature),
+                                  np.asarray(tree.forest.feature))
+               and np.array_equal(np.asarray(t.forest.threshold),
+                                  np.asarray(tree.forest.threshold))]
+        assert hit, "async shipped a model no sync client produced"
+        assert any(np.array_equal(full.top_features[i], top)
+                   for i in hit), "tops mis-keyed to the wrong client"
+
+
+def test_fed_hist_async_k_partial_buffers():
+    """fed_hist under async:2/4 clients: every aggregation grows one
+    tree from exactly 2 client histograms; trees still broadcast to all
+    clients so margins stay in sync."""
+    from repro.core import fed_hist as FH
+    clients, test = _clients(n=400, k=4)
+    cfg = FH.FedHistConfig(num_rounds=3, depth=3, n_bins=16,
+                           schedule="async:2", latency="lognormal:0:1",
+                           seed=0)
+    model, comm, _ = FH.train_federated_xgb_hist(clients, cfg)
+    assert int(model.forest.feature.shape[0]) == 3   # one tree per agg
+    tree_events = [e for e in comm.events if e["what"] == "tree"]
+    assert len(tree_events) == 3 * 4                 # broadcast to all
+    m = FH.evaluate_fed_hist(model, *test)
+    assert np.isfinite(m["f1"])

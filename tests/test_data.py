@@ -1,5 +1,6 @@
 """Data pipeline: Framingham twin card-matching, partitioning, LM corpus."""
 import numpy as np
+import pytest
 
 from repro.data import framingham as F
 from repro.data.pipeline import (CorpusConfig, SyntheticCorpus, lm_batches,
@@ -23,6 +24,7 @@ def test_framingham_matches_dataset_card():
     assert np.all(raw["cigsPerDay"][raw["currentSmoker"] == 0] == 0)
 
 
+@pytest.mark.slow
 def test_teacher_importance_ordering():
     """The twin must induce the paper's Table-1 top features."""
     import jax.numpy as jnp

@@ -20,9 +20,11 @@ def _tree(seed=0):
 
 # --- engine parity ------------------------------------------------------------
 
+@pytest.mark.slow
 def test_vmap_engine_matches_sequential():
     """The batched multi-client engine must reproduce the per-pod loop:
-    same losses, same uplink bytes, same final params."""
+    same losses, same uplink bytes, same final params.  (Tier 2: the
+    same parity is CI-gated by fed_engine_bench --smoke.)"""
     from repro.launch.fed_train import simulate
     v = simulate("qwen3_4b", engine="vmap", **SMOKE)
     s = simulate("qwen3_4b", engine="sequential", **SMOKE)
@@ -91,9 +93,11 @@ def test_int8_sr_is_unbiased():
                                atol=4 * step / np.sqrt(n))
 
 
+@pytest.mark.slow
 def test_simulate_ledger_accounts_wire_bytes():
     """CommLog uplink bytes must equal the wire format's exact size —
-    the bandwidth claims are measured, never asserted."""
+    the bandwidth claims are measured, never asserted.  (Tier 2: the
+    same invariant is CI-gated by fed_engine_bench --smoke.)"""
     from repro.launch.fed_train import simulate
     out = simulate("qwen3_4b", compression="int8_sr", **SMOKE)
     n_leaves = len(jax.tree.leaves(out["final_params"]))
@@ -106,7 +110,10 @@ def test_simulate_ledger_accounts_wire_bytes():
     assert out["uplink_mb"] < dense["uplink_mb"] / 3.5  # ~4x for fp32
 
 
+@pytest.mark.slow
 def test_strategies_selectable_in_simulate():
+    """Tier 2: three full LM simulations; tier 1 keeps strategy-registry
+    coverage in tests/test_strategies.py."""
     from repro.launch.fed_train import simulate
     losses = {}
     for name in ("fedavg", "fedavg_weighted", "fedavgm"):
@@ -135,9 +142,12 @@ def test_gradient_histogram_pallas_cpu_fallback():
                                atol=1e-4)
 
 
+@pytest.mark.slow
 def test_fed_rf_runs_on_pallas_histogram():
     """Federated RF local training routed through the Pallas kernel
-    (interpret on CPU) agrees with the XLA route."""
+    (interpret on CPU) agrees with the XLA route.  (Tier 2: kernel
+    routing itself stays tier-1 via the gradient_histogram fallback
+    test above.)"""
     from repro.core import tree_subset as TS
     from repro.data import framingham as F
     ds = F.synthesize(n=400, seed=0)

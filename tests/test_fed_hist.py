@@ -87,7 +87,7 @@ def test_batched_hist_matches_per_client_loop():
 # --- federated growth ≡ centralized growth -----------------------------------
 
 def test_grow_tree_fed_equals_centralized_on_union():
-    sizes = [300, 180, 240]
+    sizes = [160, 100, 130]
     xs = [jnp.asarray(RNG.normal(size=(n, 6)), jnp.float32)
           for n in sizes]
     ys = [jnp.asarray((RNG.random(n) > 0.7).astype(np.float32))
@@ -119,8 +119,9 @@ def test_fed_hist_matches_centralized_gbdt_and_ledger():
     """The acceptance bar: fed_hist GBDT ≡ centralized GBDT on the union
     of shards over the same shared bins, with histogram bytes accounted
     in the ledger."""
-    clients, te = _clients()
-    cfg = FH.FedHistConfig(num_rounds=8, depth=4, n_bins=32,
+    R_ = 4  # boosting rounds (tier-1 budget; parity holds per round)
+    clients, te = _clients(n=500)
+    cfg = FH.FedHistConfig(num_rounds=R_, depth=4, n_bins=32,
                            sketch_size=256, seed=0)
     model, comm, _ = FH.train_federated_xgb_hist(clients, cfg)
     # centralized twin: same shared edges, pooled shards
@@ -131,7 +132,7 @@ def test_fed_hist_matches_centralized_gbdt_and_ledger():
     cen = gbdt.fit_binned(jnp.asarray(ux), jnp.asarray(uy),
                           binning.apply_bins(jnp.asarray(ux), edges),
                           edges, jnp.ones(len(uy), jnp.float32),
-                          num_rounds=8, depth=4, n_bins=32)
+                          num_rounds=R_, depth=4, n_bins=32)
     mf = np.asarray(gbdt.predict_margin(model, jnp.asarray(te.x)))
     mc = np.asarray(gbdt.predict_margin(cen, jnp.asarray(te.x)))
     np.testing.assert_allclose(mf, mc, atol=1e-3)
@@ -143,20 +144,22 @@ def test_fed_hist_matches_centralized_gbdt_and_ledger():
     per_tree = fed_hist_bytes(15, 32, 4)
     hist_events = [e for e in comm.events
                    if e["what"] == "grad-hess-histograms"]
-    assert len(hist_events) == len(clients) * 8
+    assert len(hist_events) == len(clients) * R_
     assert all(e["bytes"] == per_tree for e in hist_events)
     assert comm.per_what_bytes()["grad-hess-histograms"] == \
-        per_tree * len(clients) * 8
+        per_tree * len(clients) * R_
     # sample-count independence: histogram uplink depends on
     # (F, n_bins, depth) only
     assert per_tree == sum(15 * 2 ** lv * 32 * 2 * 4 for lv in range(4))
 
 
 def test_fed_hist_engines_agree():
+    # n=500 avoids a split-gain tie where the two engines' argmax order
+    # legitimately diverges (parity is to numerical tolerance)
     clients, te = _clients(n=500)
     outs = {}
     for engine in ("batched", "sequential"):
-        cfg = FH.FedHistConfig(num_rounds=4, depth=3, n_bins=16,
+        cfg = FH.FedHistConfig(num_rounds=2, depth=3, n_bins=16,
                                engine=engine, seed=0)
         model, comm, _ = FH.train_federated_xgb_hist(clients, cfg)
         outs[engine] = (model, comm.total_bytes())
@@ -171,16 +174,16 @@ def test_fed_hist_engines_agree():
 def test_fed_hist_privacy_hooks():
     """Secure-agg masks cancel in the sum (model ≈ unmasked); DP noise
     actually perturbs the grown trees."""
-    clients, te = _clients(n=500)
-    base_cfg = FH.FedHistConfig(num_rounds=3, depth=3, n_bins=16, seed=0)
+    clients, te = _clients(n=350)
+    base_cfg = FH.FedHistConfig(num_rounds=2, depth=3, n_bins=16, seed=0)
     plain, _, _ = FH.train_federated_xgb_hist(clients, base_cfg)
-    sec_cfg = FH.FedHistConfig(num_rounds=3, depth=3, n_bins=16, seed=0,
+    sec_cfg = FH.FedHistConfig(num_rounds=2, depth=3, n_bins=16, seed=0,
                                secure_agg=True)
     sec, _, _ = FH.train_federated_xgb_hist(clients, sec_cfg)
     m_plain = np.asarray(gbdt.predict_margin(plain, jnp.asarray(te.x)))
     m_sec = np.asarray(gbdt.predict_margin(sec, jnp.asarray(te.x)))
     np.testing.assert_allclose(m_sec, m_plain, atol=1e-2)
-    dp_cfg = FH.FedHistConfig(num_rounds=3, depth=3, n_bins=16, seed=0,
+    dp_cfg = FH.FedHistConfig(num_rounds=2, depth=3, n_bins=16, seed=0,
                               dp_epsilon=0.5, dp_sensitivity=1.0)
     dp, _, _ = FH.train_federated_xgb_hist(clients, dp_cfg)
     m_dp = np.asarray(gbdt.predict_margin(dp, jnp.asarray(te.x)))
@@ -192,10 +195,10 @@ def test_fed_hist_privacy_hooks():
 def test_rf_engine_batched_matches_sequential():
     """Identical forests and ledger bytes from both engines (uneven,
     resampled shards included)."""
-    clients, _ = _clients()
+    clients, _ = _clients(n=400)
     out = {}
     for engine in ("sequential", "batched"):
-        cfg = TS.FedForestConfig(trees_per_client=6, subset=4, depth=3,
+        cfg = TS.FedForestConfig(trees_per_client=4, subset=3, depth=3,
                                  n_bins=16, engine=engine, seed=0,
                                  sampling="ros")
         model, comm, _ = TS.train_federated_rf(clients, cfg)
@@ -213,10 +216,10 @@ def test_rf_engine_batched_matches_sequential():
 def test_xgb_engine_batched_matches_sequential():
     """Dense fed-XGB and the C3 feature-extraction pipeline: same trees,
     same selected features, same ledger bytes under both engines."""
-    clients, te = _clients(n=500)
+    clients, te = _clients(n=350)
     res = {}
     for engine in ("sequential", "batched"):
-        cfg = FE.FedXGBConfig(num_rounds=5, depth=3, shallow_depth=2,
+        cfg = FE.FedXGBConfig(num_rounds=2, depth=3, shallow_depth=2,
                               n_bins=16, engine=engine, seed=0)
         dense, comm_d, _ = FE.train_federated_xgb(clients, cfg)
         fe, comm_f, _ = FE.train_federated_xgb_fe(clients, cfg)

@@ -1,0 +1,47 @@
+"""Golden regression: every pipeline's seeded small-config test-set
+metrics must match the committed snapshot (``results/golden/
+metrics.json``) within tolerance.  Regenerate intentionally with
+``PYTHONPATH=src python tools/refresh_golden.py``."""
+import importlib.util
+import json
+import os
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _refresh_mod():
+    spec = importlib.util.spec_from_file_location(
+        "refresh_golden", os.path.join(ROOT, "tools", "refresh_golden.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+# one module-level compute: the five runs share their jit caches
+RG = _refresh_mod()
+with open(RG.GOLDEN_PATH) as f:
+    GOLDEN = json.load(f)
+
+
+@pytest.fixture(scope="module")
+def computed():
+    return RG.compute_metrics()
+
+
+def test_golden_covers_every_pipeline():
+    assert set(GOLDEN["metrics"]) == set(RG.GOLDEN_RUNS)
+
+
+@pytest.mark.parametrize("pipeline", sorted(RG.GOLDEN_RUNS))
+def test_golden_metrics_within_tolerance(computed, pipeline):
+    want = GOLDEN["metrics"][pipeline]
+    got = computed[pipeline]
+    assert set(got) == set(want), (
+        f"{pipeline}: metric keys changed — rerun tools/refresh_golden.py")
+    drift = {k: (got[k], want[k]) for k in want
+             if abs(got[k] - want[k]) > RG.TOLERANCE}
+    assert not drift, (
+        f"{pipeline} drifted beyond ±{RG.TOLERANCE} (ours, golden): "
+        f"{drift} — if intentional, regenerate with "
+        f"`PYTHONPATH=src python tools/refresh_golden.py`")

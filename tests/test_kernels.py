@@ -25,8 +25,14 @@ FLASH_CASES = grid(
     causal=[True, False],
     dtype=[jnp.float32, jnp.bfloat16],
 )
+# tier 1 runs the aligned + unaligned fp32 causal cases; the full
+# shape/dtype sweep is tier 2
+FLASH_FAST = [c for c in FLASH_CASES
+              if c["dtype"] == jnp.float32 and c["causal"]
+              and c["shape"][1] == 64]
 
 
+@pytest.mark.slow
 @for_cases(FLASH_CASES)
 def test_flash_attention_matches_oracle(shape, causal, dtype):
     B, T, S, H, K, dh = shape
@@ -42,6 +48,11 @@ def test_flash_attention_matches_oracle(shape, causal, dtype):
     np.testing.assert_allclose(np.asarray(pal, np.float32),
                                np.asarray(ref, np.float32),
                                atol=tol, rtol=tol)
+
+
+@for_cases(FLASH_FAST)
+def test_flash_attention_matches_oracle_fast(shape, causal, dtype):
+    test_flash_attention_matches_oracle.body(shape, causal, dtype)
 
 
 def test_flash_attention_sliding_window():
@@ -67,6 +78,7 @@ SSD_CASES = grid(
 )
 
 
+@pytest.mark.slow
 @for_cases(SSD_CASES)
 def test_ssd_kernel_matches_sequential(dims):
     B, T, H, P, G, N, Q = dims
@@ -88,10 +100,21 @@ def test_ssd_kernel_matches_sequential(dims):
                                atol=1e-3)
 
 
+def test_ssd_kernel_matches_sequential_fast():
+    test_ssd_kernel_matches_sequential.body((1, 64, 4, 32, 1, 16, 16))
+
+
 HIST_CASES = cases(6, seed=7, n=ints(64, 3000), F=ints(1, 24),
                    nb=choice(16, 64, 128))
+HIST_FAST = HIST_CASES[:2]
 
 
+@for_cases(HIST_FAST)
+def test_hist_kernel_matches_oracle_fast(n, F, nb):
+    test_hist_kernel_matches_oracle.body(n, F, nb)
+
+
+@pytest.mark.slow
 @for_cases(HIST_CASES)
 def test_hist_kernel_matches_oracle(n, F, nb):
     ks = [jax.random.fold_in(RNG, i) for i in range(3)]

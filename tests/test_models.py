@@ -27,9 +27,14 @@ def _hi_cap(cfg):
         cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
 
 
-@pytest.mark.parametrize("arch", ["qwen3_4b", "yi_34b", "mamba2_13b",
-                                  "hymba_15b", "phi35_moe",
-                                  "whisper_medium", "internvl2_2b"])
+@pytest.mark.parametrize("arch", [
+    "qwen3_4b",
+    pytest.param("yi_34b", marks=pytest.mark.slow),
+    pytest.param("mamba2_13b", marks=pytest.mark.slow),
+    pytest.param("hymba_15b", marks=pytest.mark.slow),
+    pytest.param("phi35_moe", marks=pytest.mark.slow),
+    pytest.param("whisper_medium", marks=pytest.mark.slow),
+    pytest.param("internvl2_2b", marks=pytest.mark.slow)])
 def test_decode_matches_prefill(arch):
     """Autoregressive consistency: decoding token T on a prefix cache must
     reproduce the full-prefill logits at T (capacity drops disabled)."""
@@ -59,6 +64,7 @@ def test_decode_matches_prefill(arch):
     assert float(jnp.max(jnp.abs(lg_dec - lg_full))) / scale < 2e-2, arch
 
 
+@pytest.mark.slow
 def test_chunk_size_invariance():
     """Attention and SSD results must not depend on chunk sizes."""
     B, T, H, dh = 2, 96, 4, 32

@@ -6,6 +6,10 @@ import sys
 
 import pytest
 
+# tier 2: each test spawns a fresh interpreter that recompiles under a
+# forced 8-device host platform
+pytestmark = pytest.mark.slow
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 SCRIPT_EP = r"""

@@ -10,7 +10,7 @@ from repro.checkpoint import load_pytree, save_pytree
 from repro.optim import adam, adamw, cosine_schedule, fedprox_grad, sgd
 
 
-def _quadratic_converges(opt, lr, steps=300):
+def _quadratic_converges(opt, lr, steps=150):
     target = jnp.asarray([1.0, -2.0, 3.0])
     params = {"w": jnp.zeros(3)}
     state = opt.init(params)

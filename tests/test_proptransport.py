@@ -1,0 +1,129 @@
+"""Property tests (tests/proptest.py driver) for the wire layer:
+
+* every ``TRANSPORTS`` preset round-trips a float update pytree through
+  ``encode`` — structure/shape/dtype identity always, value identity for
+  the lossless stacks, bounded/structured error for the codec stacks,
+  and determinism (same payload + ctx → bit-identical wire msg);
+* secure aggregation cancels: the server's sum of per-client masked
+  updates equals the plain sum across random client counts and shapes,
+  both through ``privacy.mask_update`` directly and through a
+  mask-layer transport stack.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from proptest import cases, for_cases, ints
+
+from repro.core import privacy
+from repro.core.comm import TRANSPORTS, WireCtx, get_transport
+from repro.core.privacy import mask_update, secure_sum
+
+#: presets whose client-side encode is value-preserving when the payload
+#: is inside the clip ball and the round has a single active client
+#: (clip scales by 1, a 1-client mask has no peers, dpnoise/weight act
+#: server-side / as *1.0): everything without a codec layer.
+LOSSLESS = ("plain", "framed", "secure", "dp", "secure_dp")
+CODECS = ("sparse", "quant", "full_stack")
+
+
+def _payload(rng, scale=0.01):
+    """Small-norm float32 pytree (inside every preset's clip ball)."""
+    return {
+        "w": jnp.asarray(rng.normal(size=(6, 5)) * scale, jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(5,)) * scale, jnp.float32),
+    }
+
+
+def _leaves(t):
+    return [np.asarray(x) for x in jax.tree.leaves(t)]
+
+
+def test_every_preset_roundtrips_structure_and_determinism():
+    rng = np.random.default_rng(0)
+    delta = _payload(rng)
+    for name in sorted(TRANSPORTS):
+        t = get_transport(name, rho=0.25, dp_clip=1.0)
+        ctx = WireCtx(round=1, client=0, slot=0, n_active=1, seed=3)
+        msg = t.encode(delta, ctx=ctx)
+        # structure/shape/dtype identity: the wire msg stays decodable
+        assert (jax.tree.structure(msg.payload)
+                == jax.tree.structure(delta)), name
+        for a, b in zip(_leaves(msg.payload), _leaves(delta)):
+            assert a.shape == b.shape and a.dtype == b.dtype, name
+        assert msg.nbytes > 0, name
+        # determinism: bit-identical on re-encode
+        msg2 = get_transport(name, rho=0.25, dp_clip=1.0).encode(
+            delta, ctx=ctx)
+        assert msg.nbytes == msg2.nbytes, name
+        for a, b in zip(_leaves(msg.payload), _leaves(msg2.payload)):
+            np.testing.assert_array_equal(a, b, err_msg=name)
+        if name in LOSSLESS:
+            for a, b in zip(_leaves(msg.payload), _leaves(delta)):
+                np.testing.assert_array_equal(a, b, err_msg=name)
+
+
+CODEC_CASES = cases(4, seed=13, n=ints(4, 40), m=ints(2, 12),
+                    seed2=ints(0, 10 ** 6))
+
+
+@for_cases(CODEC_CASES)
+def test_codec_presets_error_is_structured(n, m, seed2):
+    """sparse: kept entries are the original values, the rest zero;
+    quant (int8_sr): elementwise error below one quantization step."""
+    rng = np.random.default_rng(seed2)
+    delta = {"w": jnp.asarray(rng.normal(size=(n, m)), jnp.float32)}
+    ctx = WireCtx(round=0, client=1, slot=0, n_active=1, seed=seed2)
+    sp = get_transport("sparse", rho=0.25).encode(delta, ctx=ctx)
+    w, ww = np.asarray(delta["w"]), np.asarray(sp.payload["w"])
+    assert np.all((ww == 0) | (ww == w))
+    assert np.count_nonzero(ww) <= max(int(np.ceil(0.25 * w.size)), 1)
+    assert sp.nbytes < w.size * 4 or w.size <= 4   # sparser on the wire
+    q = get_transport("quant").encode(delta, ctx=ctx)
+    step = np.abs(w).max() / 127.0
+    assert np.abs(np.asarray(q.payload["w"]) - w).max() <= step + 1e-7
+
+
+MASK_CASES = cases(8, seed=5, c=ints(2, 6), n=ints(1, 30),
+                   m=ints(1, 8), seed2=ints(0, 10 ** 6))
+
+
+@for_cases(MASK_CASES)
+def test_secure_agg_masks_cancel_in_sum(c, n, m, seed2):
+    """privacy invariant: sum_i mask(u_i) == sum_i u_i — the server only
+    ever sees the aggregate, for any client count and leaf shapes."""
+    rng = np.random.default_rng(seed2)
+    updates = [{"w": jnp.asarray(rng.normal(size=(n, m)), jnp.float32),
+                "b": jnp.asarray(rng.normal(size=(m,)), jnp.float32)}
+               for _ in range(c)]
+    masked = [mask_update(u, i, c, round_seed=seed2 * 7919 + 1)
+              for i, u in enumerate(updates)]
+    plain_sum = secure_sum(updates)
+    masked_sum = secure_sum(masked)
+    scale = max(1.0, max(float(np.abs(x).max())
+                         for x in _leaves(masked)))
+    for a, b in zip(_leaves(masked_sum), _leaves(plain_sum)):
+        np.testing.assert_allclose(a, b, atol=2e-4 * scale * c)
+    # a single masked update is NOT the plain update (masks exist)
+    if c >= 2:
+        assert any(not np.allclose(a, b, atol=1e-6)
+                   for a, b in zip(_leaves(masked[0]),
+                                   _leaves(updates[0])))
+
+
+@for_cases(cases(4, seed=3, c=ints(2, 5), seed2=ints(0, 10 ** 6)))
+def test_mask_transport_stack_cancels_like_privacy(c, seed2):
+    """The 'secure' transport preset must realize exactly the
+    privacy.mask_update math: summing every slot's encoded payload over
+    the round's active set recovers the plain sum."""
+    rng = np.random.default_rng(seed2)
+    t = get_transport("secure")
+    updates = [{"w": jnp.asarray(rng.normal(size=(5, 3)), jnp.float32)}
+               for _ in range(c)]
+    msgs = [t.encode(u, ctx=WireCtx(round=2, client=i, slot=i,
+                                    n_active=c, seed=seed2))
+            for i, u in enumerate(updates)]
+    plain = secure_sum(updates)
+    wire = secure_sum([m.payload for m in msgs])
+    for a, b in zip(_leaves(wire), _leaves(plain)):
+        np.testing.assert_allclose(a, b, atol=1e-3)

@@ -17,7 +17,7 @@ from repro.core.strategies import get_strategy
 from repro.data import framingham as F
 
 
-def _clients(n=600, k=3, seed=1):
+def _clients(n=500, k=3, seed=1):
     ds = F.synthesize(n=n, seed=seed)
     tr, te = F.train_test_split(ds)
     return [(c.x, c.y) for c in F.partition_clients(tr, k)], (te.x, te.y)
@@ -87,7 +87,7 @@ def test_parametric_runtime_matches_legacy_loop(kw):
     transport the runtime path reproduces the pre-refactor losses,
     params, and ledger events bit-for-bit."""
     clients, test = _clients()
-    cfg = P.FedParametricConfig(model="logreg", rounds=3, local_steps=8,
+    cfg = P.FedParametricConfig(model="logreg", rounds=3, local_steps=6,
                                 lr=0.05, **kw)
     p_new, c_new, h_new, _ = P.train_federated(clients, cfg, test=test)
     p_old, c_old, h_old = _legacy_train(clients, cfg, test=test)
@@ -100,11 +100,11 @@ def test_parametric_runtime_matches_legacy_loop(kw):
 def test_cfg_flags_equal_explicit_transport_stack():
     """secure_agg/dp_epsilon config flags and the 'secure_dp' transport
     preset must build the same wire pipeline (same masks, same noise)."""
-    clients, test = _clients(n=400)
-    a = P.FedParametricConfig(model="logreg", rounds=2, local_steps=5,
+    clients, test = _clients(n=350)
+    a = P.FedParametricConfig(model="logreg", rounds=2, local_steps=4,
                               secure_agg=True, dp_epsilon=0.5,
                               dp_clip=2.0)
-    b = P.FedParametricConfig(model="logreg", rounds=2, local_steps=5,
+    b = P.FedParametricConfig(model="logreg", rounds=2, local_steps=4,
                               transport="secure_dp", dp_epsilon=0.5,
                               dp_clip=2.0)
     pa, ca, ha, _ = P.train_federated(clients, a, test=test)
@@ -118,14 +118,14 @@ def test_cfg_flags_equal_explicit_transport_stack():
 
 def test_uniform_k_cuts_ledger_proportionally():
     clients, test = _clients(k=4)
-    full = P.FedParametricConfig(model="logreg", rounds=4, local_steps=5)
-    sub = P.FedParametricConfig(model="logreg", rounds=4, local_steps=5,
+    full = P.FedParametricConfig(model="logreg", rounds=3, local_steps=5)
+    sub = P.FedParametricConfig(model="logreg", rounds=3, local_steps=5,
                                 participation="uniform:2")
     _, cf, _, _ = P.train_federated(clients, full)
     _, cs, _, _ = P.train_federated(clients, sub)
     ups_f = [e for e in cf.events if e["direction"] == "up"]
     ups_s = [e for e in cs.events if e["direction"] == "up"]
-    assert len(ups_f) == 4 * 4 and len(ups_s) == 2 * 4
+    assert len(ups_f) == 4 * 3 and len(ups_s) == 2 * 3
     assert cs.total_bytes() == cf.total_bytes() // 2
     # schedule is deterministic in the runtime seed
     _, cs2, _, _ = P.train_federated(clients, sub)
@@ -146,7 +146,7 @@ def test_dropout_stragglers_deliver_stale():
     """With p_straggle=1 every dropped client computes and delivers next
     round: no update is lost, and stateful strategies stay finite."""
     clients, test = _clients(k=3)
-    cfg = P.FedParametricConfig(model="logreg", rounds=5, local_steps=4,
+    cfg = P.FedParametricConfig(model="logreg", rounds=4, local_steps=4,
                                 strategy="fedavgm",
                                 participation="dropout:0.5:1.0")
     params, comm, hist, _ = P.train_federated(clients, cfg, test=test)
@@ -154,7 +154,7 @@ def test_dropout_stragglers_deliver_stale():
         assert np.isfinite(np.asarray(leaf)).all()
     # every computed update was shipped (logged) exactly once
     ups = [e for e in comm.events if e["direction"] == "up"]
-    assert len(ups) >= 5  # at least one client per round
+    assert len(ups) >= 4  # at least one client per round
 
 
 def test_participation_registry_errors():
@@ -236,8 +236,8 @@ def test_one_shot_survives_all_straggler_round():
 
 def test_tree_subset_participation_and_framing():
     from repro.core import tree_subset as TS
-    clients, test = _clients(k=4)
-    base = dict(trees_per_client=4, subset=2, depth=3, n_bins=16, seed=0)
+    clients, test = _clients(n=450, k=4)
+    base = dict(trees_per_client=3, subset=2, depth=3, n_bins=16, seed=0)
     m_full, c_full, _ = TS.train_federated_rf(
         clients, TS.FedForestConfig(**base))
     assert len([e for e in c_full.events
@@ -304,9 +304,12 @@ def test_transport_encode_bytes_and_codec_state():
     assert plain.nbytes == pytree_bytes(delta)
 
 
+@pytest.mark.slow
 def test_simulate_transport_and_participation():
     """LM engine: --transport/--participation end to end, and the
-    compression knob composes with (but refuses to duplicate) codecs."""
+    compression knob composes with (but refuses to duplicate) codecs.
+    (Tier 2: LM-scale; the ledger-exactness half is CI-gated by
+    fed_engine_bench --smoke.)"""
     from repro.launch.fed_train import simulate
     smoke = dict(n_pods=4, rounds=2, local_steps=2, batch=2, seq=32,
                  verbose=False, seed=0)

@@ -31,8 +31,17 @@ def _data(n=400, F=7):
 
 FOREST_CASES = cases(4, seed=9, depth=ints(1, 6), trees=ints(1, 12),
                      n=ints(33, 700))
+# tier 1: two small cases; the full depth/size sweep is tier 2
+FOREST_FAST = cases(1, seed=21, depth=ints(1, 4), trees=ints(1, 6),
+                    n=ints(33, 260))
 
 
+@for_cases(FOREST_FAST)
+def test_forest_kernel_parity_fast(depth, trees, n):
+    test_forest_kernel_parity.body(depth, trees, n)
+
+
+@pytest.mark.slow
 @for_cases(FOREST_CASES)
 def test_forest_kernel_parity(depth, trees, n):
     """Pallas (interpret) == vmapped ref == the training-side
@@ -54,8 +63,8 @@ def test_forest_kernel_parity(depth, trees, n):
 
 
 def test_forest_ops_routing():
-    X, y = _data(200)
-    rf = RF.fit(jnp.asarray(X), jnp.asarray(y), num_trees=3, depth=3,
+    X, y = _data(120)
+    rf = RF.fit(jnp.asarray(X), jnp.asarray(y), num_trees=2, depth=2,
                 rng=jax.random.PRNGKey(0))
     xq = jnp.asarray(X[:50])
     base = np.asarray(predict_forest(rf.forest, xq))
@@ -76,21 +85,21 @@ def _tiny_artifacts():
     from repro.core import tree_subset as TS
     from repro.data import framingham as F
 
-    ds = F.synthesize(n=400, seed=0)
+    ds = F.synthesize(n=300, seed=0)
     tr, te = F.train_test_split(ds)
     clients = [(c.x, c.y) for c in F.partition_clients(tr, 2)]
     params, _, _, _ = P.train_federated(
         clients, P.FedParametricConfig(model="logreg", rounds=2,
-                                       local_steps=5))
+                                       local_steps=4))
     rf, _, _ = TS.train_federated_rf(
-        clients, TS.FedForestConfig(trees_per_client=4, subset=2, depth=3,
+        clients, TS.FedForestConfig(trees_per_client=3, subset=2, depth=2,
                                     n_bins=16))
     fe, _, _ = FE.train_federated_xgb_fe(
-        clients, FE.FedXGBConfig(num_rounds=3, shallow_rounds=2, depth=3,
+        clients, FE.FedXGBConfig(num_rounds=2, shallow_rounds=1, depth=2,
                                  shallow_depth=2, top_features=4,
                                  n_bins=16))
     gb, _, _ = FH.train_federated_xgb_hist(
-        clients, FH.FedHistConfig(num_rounds=3, depth=3, n_bins=16))
+        clients, FH.FedHistConfig(num_rounds=2, depth=2, n_bins=16))
     return {
         "parametric": B.pack("parametric", params, model="logreg"),
         "tree_subset": B.pack("tree_subset", rf),
@@ -176,7 +185,10 @@ def test_tree_subset_serving_matches_majority_vote(artifacts):
 
 # --- engine -------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_bucketed_equals_unbatched_every_kind(artifacts):
+    """Tier 2: one XLA compile per (kind, bucket) pair; the same
+    bucketed==unbatched invariant is CI-gated by serve_bench --smoke."""
     bundles, (xt, _) = artifacts
     for bundle in bundles.values():
         eng = ScoringEngine(bundle, bucket_sizes=(16, 64, 256),
@@ -185,6 +197,7 @@ def test_bucketed_equals_unbatched_every_kind(artifacts):
                                       eng.score_unbatched(xt))
 
 
+@pytest.mark.slow
 def test_engine_ensemble_composes_and_tracks_stats(artifacts):
     bundles, (xt, yt) = artifacts
     eng = ScoringEngine(list(bundles.values()), bucket_sizes=(64, 256))
@@ -200,6 +213,7 @@ def test_engine_ensemble_composes_and_tracks_stats(artifacts):
     assert st["rows_per_s"] > 0 and st["p99_ms"] >= st["p50_ms"]
 
 
+@pytest.mark.slow
 def test_calibration_monotone_and_improves_brier(artifacts):
     bundles, (xt, yt) = artifacts
     eng = ScoringEngine(bundles["fed_hist"], bucket_sizes=(256,))

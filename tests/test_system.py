@@ -17,6 +17,11 @@ from repro.core import parametric as P
 from repro.core import tree_subset as TS
 from repro.data import framingham as F
 
+# tier 2: full-size end-to-end runs.  Tier-1 keeps fast end-to-end
+# coverage of the same pipelines via tests/test_golden.py and the
+# bench parity gates (benchmarks/fed_engine_bench.py --smoke).
+pytestmark = pytest.mark.slow
+
 
 def _small_setup(seed=0):
     ds = F.synthesize(n=900, seed=seed)

@@ -46,8 +46,8 @@ def test_tree_consistency_train_vs_raw_thresholds():
 
 
 def test_gbdt_reduces_train_loss_monotonically_ish():
-    x, y = _data()
-    m = gbdt.fit(x, y, num_rounds=15, depth=3, learning_rate=0.4)
+    x, y = _data(n=400)
+    m = gbdt.fit(x, y, num_rounds=10, depth=3, learning_rate=0.4)
     margins = [m.base_margin * jnp.ones(len(y))]
     from repro.trees.growth import predict_forest
     vals = predict_forest(m.forest, x)
@@ -64,8 +64,8 @@ def test_gbdt_reduces_train_loss_monotonically_ish():
 
 
 def test_gbdt_learns_and_importance_finds_signal():
-    x, y = _data(n=800)
-    m = gbdt.fit(x, y, num_rounds=25, depth=4)
+    x, y = _data(n=500)
+    m = gbdt.fit(x, y, num_rounds=12, depth=4)
     pred = gbdt.predict(m, x)
     acc = float(jnp.mean(pred == (y > 0.5)))
     assert acc > 0.9
@@ -75,20 +75,20 @@ def test_gbdt_learns_and_importance_finds_signal():
 
 
 def test_rf_vote_and_bytes():
-    x, y = _data()
-    rf = forest.fit(x, y, num_trees=10, depth=4)
+    x, y = _data(n=400)
+    rf = forest.fit(x, y, num_trees=6, depth=3)
     votes = forest.predict_votes(rf, x)
     proba = forest.predict_proba(rf, x)
     assert votes.shape == (len(y),)
     assert float(jnp.min(proba)) >= 0 and float(jnp.max(proba)) <= 1
     # nbytes is linear in the number of trees
     from repro.trees.growth import take_trees
-    b10 = nbytes(rf.forest)
-    b5 = nbytes(take_trees(rf.forest, jnp.arange(5)))
-    assert b10 == 2 * b5
+    b6 = nbytes(rf.forest)
+    b3 = nbytes(take_trees(rf.forest, jnp.arange(3)))
+    assert b6 == 2 * b3
 
 
-PROP_CASES = cases(4, seed=11, depth=ints(2, 5), nb=ints(8, 64))
+PROP_CASES = cases(2, seed=11, depth=ints(2, 5), nb=ints(8, 64))
 
 
 @for_cases(PROP_CASES)

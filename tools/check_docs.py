@@ -53,6 +53,8 @@ REGISTRIES = [
     ("repro.core.participation", "PARTICIPATION"),
     ("repro.core.comm", "TRANSPORTS"),
     ("repro.core.comm", "LAYERS"),
+    ("repro.core.runtime", "SCHEDULES"),
+    ("repro.core.latency", "LATENCY"),
     ("repro.serve.bundle", "BUNDLE_KINDS"),
     ("repro.serve.engine", "SCORERS"),
 ]

@@ -1,0 +1,123 @@
+"""Golden end-to-end metrics snapshot: one small seeded run per
+federated pipeline (plus an async-schedule variant), with test-set
+F1/AUC committed under ``results/golden/metrics.json``.
+
+``tests/test_golden.py`` replays exactly these configs (it imports
+:data:`GOLDEN_RUNS` from this file) and compares within
+:data:`TOLERANCE` — a drive-by change to any pipeline's training math
+shows up as a golden diff even when no invariant test names it.
+
+Regenerate after an *intentional* behaviour change:
+
+    PYTHONPATH=src python tools/refresh_golden.py
+
+and commit the updated ``results/golden/metrics.json`` alongside the
+change that explains it.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+GOLDEN_PATH = os.path.join(ROOT, "results", "golden", "metrics.json")
+
+#: |ours - golden| bound per metric — wide enough for BLAS/platform
+#: jitter on these tiny models, tight enough to catch real regressions.
+TOLERANCE = 0.03
+#: metrics compared (binary_metrics keys that are rates in [0, 1]).
+METRIC_KEYS = ("f1", "precision", "recall", "accuracy", "roc_auc",
+               "brier")
+SEED = 0
+
+
+def _clients(n=500, k=3):
+    from repro.data import framingham as F
+    ds = F.synthesize(n=n, seed=1)
+    tr, te = F.train_test_split(ds)
+    return ([(c.x, c.y) for c in F.partition_clients(tr, k)],
+            (te.x, te.y))
+
+
+def _parametric(schedule="sync", latency=None):
+    def run():
+        from repro.core import parametric as P
+        clients, test = _clients()
+        cfg = P.FedParametricConfig(model="logreg", rounds=3,
+                                    local_steps=8, lr=0.05,
+                                    sampling="ros", schedule=schedule,
+                                    latency=latency, seed=SEED)
+        _, _, hist, _ = P.train_federated(clients, cfg, test=test)
+        return hist[-1]
+    return run
+
+
+def _tree_subset():
+    from repro.core import tree_subset as TS
+    clients, test = _clients()
+    cfg = TS.FedForestConfig(trees_per_client=4, subset=3, depth=3,
+                             n_bins=16, seed=SEED)
+    model, _, _ = TS.train_federated_rf(clients, cfg)
+    return TS.evaluate_rf(model, *test)
+
+
+def _feature_extract():
+    from repro.core import feature_extract as FE
+    clients, test = _clients()
+    # ros sampling keeps the pinned model off the degenerate
+    # all-negative point (F1=0 would mask quality regressions)
+    cfg = FE.FedXGBConfig(num_rounds=3, depth=3, shallow_depth=2,
+                          shallow_rounds=2, top_features=4, n_bins=16,
+                          sampling="ros", seed=SEED)
+    model, _, _ = FE.train_federated_xgb_fe(clients, cfg)
+    return FE.evaluate_fe(model, *test)
+
+
+def _fed_hist():
+    from repro.core import fed_hist as FH
+    clients, test = _clients()
+    cfg = FH.FedHistConfig(num_rounds=3, depth=3, n_bins=16, seed=SEED)
+    model, _, _ = FH.train_federated_xgb_hist(clients, cfg)
+    return FH.evaluate_fed_hist(model, *test)
+
+
+#: pipeline name -> zero-arg callable returning its metrics dict.  The
+#: async_parametric row pins the virtual-time event loop end to end
+#: (fixed seed => deterministic dispatch/arrival order => stable F1).
+GOLDEN_RUNS = {
+    "parametric": _parametric(),
+    "parametric_async": _parametric(schedule="async:2",
+                                    latency="lognormal:0:1"),
+    "tree_subset": _tree_subset,
+    "feature_extract": _feature_extract,
+    "fed_hist": _fed_hist,
+}
+
+
+def compute_metrics() -> dict:
+    out = {}
+    for name, run in GOLDEN_RUNS.items():
+        m = run()
+        out[name] = {k: round(float(m[k]), 6) for k in METRIC_KEYS
+                     if k in m}
+    return out
+
+
+def main() -> int:
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    got = compute_metrics()
+    os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump({"seed": SEED, "tolerance": TOLERANCE,
+                   "metrics": got}, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {os.path.relpath(GOLDEN_PATH, ROOT)}")
+    for name, m in got.items():
+        print(f"  {name}: " + " ".join(f"{k}={v:.3f}"
+                                       for k, v in m.items()))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
