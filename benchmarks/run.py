@@ -58,7 +58,7 @@ def main() -> None:
 
     from benchmarks import kernels_bench
     for row in kernels_bench.run():
-        _emit(*row)
+        _emit(row["name"], row["us"], row["note"])
 
     from benchmarks import roofline
     recs = roofline.load(tag="baseline")

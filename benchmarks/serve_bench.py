@@ -104,12 +104,15 @@ def _kernel_rows():
 
 
 def run() -> list:
+    from benchmarks.kernels_bench import bench_meta
     engine_rows, engine_stats = _engine_rows()
     kernel_rows, kernel_stats = _kernel_rows()
     os.makedirs("results/serve", exist_ok=True)
     with open("results/serve/serve_bench.json", "w") as f:
-        json.dump({"engine": engine_stats, "kernel": kernel_stats}, f,
-                  indent=1)
+        # meta keys match kernels_bench rows so trajectory comparisons
+        # stay same-platform only
+        json.dump({"meta": bench_meta(), "engine": engine_stats,
+                   "kernel": kernel_stats}, f, indent=1)
     return engine_rows + kernel_rows
 
 
@@ -148,10 +151,58 @@ def smoke() -> int:
             np.testing.assert_array_equal(eng.score(xt),
                                           eng.score_unbatched(xt))
 
+    def fused_matches_unfused():
+        # documented tolerance (serve/engine.py): vote counts exact,
+        # probabilities within 1e-6 (tree-sequential vs pairwise sums,
+        # f32 vs float64 Platt)
+        for kind in ("tree_subset", "fed_hist"):
+            ref = ScoringEngine(bundles[kind], bucket_sizes=(64,))
+            fus = ScoringEngine(bundles[kind], bucket_sizes=(64,),
+                                fused=True, impl="pallas_interpret")
+            np.testing.assert_allclose(fus.score(xt), ref.score(xt),
+                                       atol=1e-6, rtol=0)
+            ref.calibrate(xt, yt)
+            fus.calibrate(xt, yt)
+            np.testing.assert_allclose(fus.score(xt), ref.score(xt),
+                                       atol=1e-6, rtol=0)
+
+    def int8_within_bound():
+        # analytic bound (serve/engine.py): leaves move < one quant
+        # step each, routing unchanged.  fed_hist: |dmargin| <=
+        # lr * rounds * step, probs within a quarter of that (sigmoid
+        # is 1/4-Lipschitz).  tree_subset: votes flip only where
+        # |leaf| < step, so the vote fraction moves <= flippable/T.
+        from repro.kernels.forest_infer.ops import forest_infer as fi
+        from repro.serve.engine import leaf_quant_step
+        gb = bundles["fed_hist"]
+        model = gb.model()
+        step = leaf_quant_step(model.forest)
+        bound = float(model.learning_rate) * model.forest.leaf.shape[0] \
+            * step / 4.0
+        ref = ScoringEngine(gb, bucket_sizes=(64,)).score(xt)
+        q8 = ScoringEngine(gb, bucket_sizes=(64,),
+                           quantize="int8_sr").score(xt)
+        assert np.max(np.abs(q8 - ref)) <= bound + 1e-6, \
+            f"int8 fed_hist drift {np.max(np.abs(q8 - ref)):.2e} > " \
+            f"analytic bound {bound:.2e}"
+        rf = bundles["tree_subset"]
+        forest = rf.model().forest
+        step = leaf_quant_step(forest)
+        vals = np.asarray(fi(forest, jnp.asarray(xt, jnp.float32),
+                             impl="xla"))                    # (T, n)
+        flippable = np.mean(np.abs(vals) < step, axis=0)     # per row
+        ref = ScoringEngine(rf, bucket_sizes=(64,)).score(xt)
+        q8 = ScoringEngine(rf, bucket_sizes=(64,),
+                           quantize="int8_sr").score(xt)
+        assert np.all(np.abs(q8 - ref) <= flippable + 1e-6), \
+            "int8 tree_subset vote drift exceeds flippable-leaf bound"
+
     print("serve_bench --smoke (parity gate)")
     check("forest kernel == predict_forest (all bundles)", kernel_parity)
     check("bundle round-trip scores stable", roundtrip_scores_stable)
     check("bucketed engine == unbatched", bucketed_matches_unbatched)
+    check("fused scoring == unfused engine (1e-6)", fused_matches_unfused)
+    check("int8_sr scoring within analytic bound", int8_within_bound)
     print(f"{len(failures)} parity regressions")
     return 1 if failures else 0
 

@@ -104,14 +104,33 @@ def int8_compress(delta):
     return jax.tree.unflatten(treedef, outs), int(nb)
 
 
+def int8_sr_quantize(x, key):
+    """The int8_sr codec's quantization half: one tensor -> (q, scale).
+
+    ``x/scale`` is rounded to ``floor(x/scale) + Bernoulli(frac)`` so the
+    dequantized value ``q.astype(f) * scale`` is unbiased
+    (``E[dequant] == x``) with per-element error < 1 quantization step
+    (``scale = amax/127``).  Exposed separately from
+    :func:`int8_sr_compress` so consumers that want to *keep* the int8
+    representation resident (the serving engine's memory-bound scoring
+    path, ``repro.serve.engine``) share the exact codec arithmetic with
+    the wire format.  Returns (q int8 array, scale f32 scalar)."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
+    scale = amax / 127.0
+    scaled = x / scale
+    lo = jnp.floor(scaled)
+    frac = scaled - lo
+    up = jax.random.uniform(key, x.shape) < frac
+    q = jnp.clip(lo + up.astype(x.dtype), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
 def int8_sr_compress(delta, seed: int = 0):
     """Per-tensor int8 quantization with *stochastic rounding*.
 
-    ``x/scale`` is rounded to ``floor(x/scale) + Bernoulli(frac)`` so the
-    dequantized value is unbiased: ``E[q * scale] == x`` exactly (the
-    round-to-nearest variant has a deterministic bias up to scale/2 per
-    element).  Per-element max error stays < 1 quantization step
-    (amax/127).
+    Quantization itself lives in :func:`int8_sr_quantize` (unbiased:
+    ``E[dequant] == input``, so quantization error averages out across
+    clients/rounds instead of accumulating).
 
     delta: pytree of float arrays; seed: int controlling the rounding
     draws (engines should vary it per round/client).  Returns
@@ -120,13 +139,7 @@ def int8_sr_compress(delta, seed: int = 0):
     key = jax.random.PRNGKey(seed)
 
     def one(x, k):
-        amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
-        scale = amax / 127.0
-        scaled = x / scale
-        lo = jnp.floor(scaled)
-        frac = scaled - lo
-        up = jax.random.uniform(k, x.shape) < frac
-        q = jnp.clip(lo + up.astype(x.dtype), -127, 127).astype(jnp.int8)
+        q, scale = int8_sr_quantize(x, k)
         return (q.astype(x.dtype) * scale).astype(x.dtype), x.size + 4
 
     leaves, treedef = jax.tree.flatten(delta)

@@ -1,0 +1,395 @@
+"""Kernel autotuning: tunable registry, best-config cache, sweep harness.
+
+Every Pallas kernel family in the repo carries hand-picked tile/block
+shapes (hist's ``block_n``/``block_f``, forest_infer's row tile, flash
+attention's q/kv blocks, the SSD chunk).  This module makes those shapes
+*tunable* instead of hard-coded:
+
+* :data:`TUNABLES` — one entry per kernel family: the hand-picked
+  defaults (exactly the values the kernels shipped with, so behaviour
+  with an empty cache is unchanged) and the candidate sweep grid.
+* **Shape buckets** — configs are cached per ``(kernel, shape-bucket,
+  dtype, platform)``: each dimension of the timed shape is rounded up to
+  the next power of two, so one tuned entry serves every nearby shape
+  (a 4.1k-row batch and a 7.9k-row batch hit the same ``8192`` bucket).
+* :class:`ConfigStore` — a JSON file of best configs
+  (``results/autotune/best_configs.json`` by default, override with
+  ``REPRO_AUTOTUNE_CACHE``).  Keys are plain strings, entries carry the
+  winning config plus the measured time and device metadata; the file is
+  written sorted so the store is byte-stable across runs.
+* :func:`autotune` — the sweep harness: build a candidate callable per
+  config, time it with warm-up iterations and ``jax.block_until_ready``
+  (median of ``iters`` timed calls), keep the fastest, and cache it.
+* :func:`resolve` — what the kernel ``ops.py`` entry points call: start
+  from the family defaults, overlay a cached best config if one matches
+  the current shape bucket, and let explicit caller arguments win over
+  both.
+
+``python -m repro.kernels.autotune --smoke`` sweeps every family on
+canonical shapes and writes the store (docs/EXPERIMENTS.md §Perf gate).
+``tools/check_docs.py`` validates that every TUNABLES family name is
+documented.
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+import os
+import time
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+#: kernel family -> {"defaults": hand-picked params (the pre-autotune
+#: values — the fallback when no cache entry matches), "candidates":
+#: per-param sweep values}.  Families: ``hist`` (gradient histograms),
+#: ``forest_infer`` (per-tree serving traversal), ``forest_score_fused``
+#: (fused traversal + ensemble + Platt), ``flash_attention``, ``ssd``.
+TUNABLES: Dict[str, Dict[str, Dict[str, Any]]] = {
+    "hist": {
+        "defaults": {"block_n": 1024, "block_f": 8},
+        "candidates": {"block_n": (256, 512, 1024, 2048),
+                       "block_f": (2, 4, 8, 16)},
+    },
+    "forest_infer": {
+        "defaults": {"block_n": 256},
+        "candidates": {"block_n": (64, 128, 256, 512, 1024)},
+    },
+    "forest_score_fused": {
+        "defaults": {"block_n": 256},
+        "candidates": {"block_n": (64, 128, 256, 512, 1024)},
+    },
+    "flash_attention": {
+        "defaults": {"block_q": 512, "block_kv": 512},
+        "candidates": {"block_q": (128, 256, 512),
+                       "block_kv": (128, 256, 512)},
+    },
+    "ssd": {
+        "defaults": {"chunk": 64},
+        "candidates": {"chunk": (32, 64, 128)},
+    },
+}
+
+
+# --- cache keys ---------------------------------------------------------------
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length() if n > 1 else 1
+
+
+def shape_bucket(shape: Iterable[int]) -> Tuple[int, ...]:
+    """Round every dimension up to the next power of two.
+
+    Nearby shapes share a bucket (4097 rows and 8000 rows both key as
+    8192), so a tuned config is reused instead of re-swept per exact
+    shape."""
+    return tuple(_next_pow2(int(d)) for d in shape)
+
+
+def cache_key(kernel: str, shape: Iterable[int], dtype,
+              platform: Optional[str] = None) -> str:
+    """Stable string key ``kernel|bucket|dtype|platform``.
+
+    Deterministic across processes: no hashing, just the bucketed dims
+    joined with ``x`` and the canonical numpy dtype name."""
+    if kernel not in TUNABLES:
+        raise KeyError(f"unknown kernel family {kernel!r}; "
+                       f"available: {sorted(TUNABLES)}")
+    bucket = "x".join(str(d) for d in shape_bucket(shape))
+    dname = jnp.dtype(dtype).name
+    return f"{kernel}|{bucket}|{dname}|{platform or jax.default_backend()}"
+
+
+# --- the on-disk store --------------------------------------------------------
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__)))))
+_STORE_VERSION = 1
+
+
+def default_store_path() -> str:
+    return os.environ.get(
+        "REPRO_AUTOTUNE_CACHE",
+        os.path.join(_REPO_ROOT, "results", "autotune",
+                     "best_configs.json"))
+
+
+class ConfigStore:
+    """JSON-backed best-config cache.
+
+    ``entries`` maps :func:`cache_key` strings to
+    ``{"config": {...}, "us": float, "device": str, "jax": str}``.
+    ``save`` writes keys sorted (byte-stable file) via a temp-file
+    rename, so concurrent readers never see a torn write."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path or default_store_path()
+        self.entries: Dict[str, Dict] = {}
+        if os.path.exists(self.path):
+            with open(self.path) as f:
+                data = json.load(f)
+            if data.get("version") != _STORE_VERSION:
+                raise ValueError(
+                    f"autotune store {self.path} has version "
+                    f"{data.get('version')!r}, expected {_STORE_VERSION}")
+            self.entries = data.get("entries", {})
+
+    def get(self, key: str) -> Optional[Dict[str, Any]]:
+        """The cached best config for ``key``, or None."""
+        entry = self.entries.get(key)
+        return dict(entry["config"]) if entry else None
+
+    def put(self, key: str, config: Dict[str, Any], **meta) -> None:
+        self.entries[key] = {"config": dict(config), **meta}
+
+    def save(self) -> str:
+        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"version": _STORE_VERSION,
+                       "entries": dict(sorted(self.entries.items()))},
+                      f, indent=1, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, self.path)
+        return self.path
+
+
+_default_store: Optional[ConfigStore] = None
+
+
+def _store() -> ConfigStore:
+    global _default_store
+    if _default_store is None or \
+            _default_store.path != default_store_path():
+        _default_store = ConfigStore()
+    return _default_store
+
+
+def reset_default_store() -> None:
+    """Drop the cached module-level store (tests; env-var changes)."""
+    global _default_store
+    _default_store = None
+
+
+# --- resolution (what ops.py calls) -------------------------------------------
+
+def resolve(kernel: str, shape: Iterable[int], dtype=jnp.float32, *,
+            platform: Optional[str] = None,
+            store: Optional[ConfigStore] = None,
+            **overrides) -> Dict[str, Any]:
+    """Tuned parameters for one kernel call.
+
+    Precedence (lowest to highest): hand-picked defaults from
+    :data:`TUNABLES` < cached best config matching the shape bucket <
+    explicit caller ``overrides`` (any override that is not None wins).
+    With an empty cache and no overrides this returns exactly the
+    defaults, so untuned behaviour is unchanged."""
+    cfg = dict(TUNABLES[kernel]["defaults"])
+    st = store if store is not None else _store()
+    cached = st.get(cache_key(kernel, shape, dtype, platform))
+    if cached:
+        cfg.update({k: v for k, v in cached.items() if k in cfg})
+    cfg.update({k: v for k, v in overrides.items() if v is not None})
+    return cfg
+
+
+# --- sweep harness ------------------------------------------------------------
+
+def candidate_configs(kernel: str) -> List[Dict[str, Any]]:
+    """Cartesian product of the family's candidate values, deterministic
+    order (sorted param names, listed candidate order)."""
+    cands = TUNABLES[kernel]["candidates"]
+    names = sorted(cands)
+    return [dict(zip(names, vals))
+            for vals in itertools.product(*(cands[n] for n in names))]
+
+
+def time_fn(fn: Callable[[], Any], *, iters: int = 10,
+            warmup: int = 2) -> float:
+    """Median wall-time of ``fn()`` in microseconds.
+
+    ``warmup`` untimed calls absorb compilation; every call is fenced
+    with ``jax.block_until_ready`` so async dispatch cannot hide device
+    time."""
+    for _ in range(max(warmup, 1)):
+        jax.block_until_ready(fn())
+    times = []
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def autotune(kernel: str, build: Callable[[Dict[str, Any]],
+                                          Callable[[], Any]],
+             shape: Iterable[int], dtype=jnp.float32, *,
+             store: Optional[ConfigStore] = None, iters: int = 10,
+             warmup: int = 2, save: bool = True,
+             verbose: bool = False) -> Tuple[Dict[str, Any], float]:
+    """Sweep every candidate config for ``kernel`` and cache the winner.
+
+    ``build(config)`` returns a nullary callable running the kernel
+    under that config (typically a jitted closure); it may raise to
+    mark a config invalid for the shape (e.g. a tile larger than VMEM
+    allows) — failed candidates are skipped, not fatal.  Returns
+    ``(best_config, best_us)`` and writes the store entry under
+    :func:`cache_key` unless ``save=False``."""
+    st = store if store is not None else _store()
+    key = cache_key(kernel, shape, dtype)
+    best_cfg, best_us = None, float("inf")
+    for config in candidate_configs(kernel):
+        try:
+            fn = build(config)
+            us = time_fn(fn, iters=iters, warmup=warmup)
+        except Exception as e:  # noqa: BLE001 — a bad tile is a skip
+            if verbose:
+                print(f"  {kernel} {config}: skipped ({e})")
+            continue
+        if verbose:
+            print(f"  {kernel} {config}: {us:.1f}us")
+        if us < best_us:
+            best_cfg, best_us = config, us
+    if best_cfg is None:
+        raise RuntimeError(f"autotune({kernel!r}): every candidate failed")
+    st.put(key, best_cfg, us=round(best_us, 3),
+           device=jax.devices()[0].device_kind, jax=jax.__version__)
+    if save:
+        st.save()
+    return best_cfg, best_us
+
+
+# --- canonical sweeps (the CLI) -----------------------------------------------
+
+def _sweep_hist(shape, dtype, **kw):
+    from repro.kernels.hist.kernel import hist_pallas
+    from repro.kernels.hist.ref import hist_ref
+    n, F, n_bins = shape
+    rng = jax.random.PRNGKey(0)
+    bins = jax.random.randint(rng, (n, F), 0, n_bins)
+    g = jax.random.normal(rng, (n,), dtype)
+    on_cpu = jax.default_backend() == "cpu"
+
+    def build(cfg):
+        if on_cpu:
+            # CPU has no compiled kernel; tune the XLA path's shape
+            # bucket so the entry exists (config is a no-op there)
+            return jax.jit(lambda: hist_ref(bins, g, jnp.abs(g), n_bins))
+        return jax.jit(lambda: hist_pallas(bins, g, jnp.abs(g), n_bins,
+                                           **cfg))
+    return autotune("hist", build, (n, F), dtype, **kw)
+
+
+def _sweep_forest(kernel, shape, dtype, **kw):
+    from repro.kernels.forest_infer.kernel import forest_infer_pallas
+    from repro.kernels.forest_infer.ref import forest_infer_ref
+    T, depth, n, F = shape
+    n_int = 2 ** depth - 1
+    ks = [jax.random.fold_in(jax.random.PRNGKey(1), i) for i in range(4)]
+    feat = jax.random.randint(ks[0], (T, n_int), 0, F)
+    thr = jax.random.normal(ks[1], (T, n_int))
+    leaf = jax.random.normal(ks[2], (T, n_int + 1))
+    x = jax.random.normal(ks[3], (n, F), dtype)
+    on_cpu = jax.default_backend() == "cpu"
+
+    def build(cfg):
+        if kernel == "forest_score_fused":
+            from repro.kernels.forest_infer.fused import (
+                fused_forest_score_pallas, fused_forest_score_ref)
+            if on_cpu:
+                return jax.jit(lambda: fused_forest_score_ref(
+                    feat, thr, leaf, x, mode="margin"))
+            return jax.jit(lambda: fused_forest_score_pallas(
+                feat, thr, leaf, x, mode="margin", **cfg))
+        if on_cpu:
+            return jax.jit(lambda: forest_infer_ref(feat, thr, leaf, x))
+        return jax.jit(lambda: forest_infer_pallas(feat, thr, leaf, x,
+                                                   **cfg))
+    return autotune(kernel, build, (n, F), dtype, **kw)
+
+
+def _sweep_attention(shape, dtype, **kw):
+    from repro.kernels.flash_attention.kernel import flash_attention
+    from repro.models.attention import chunked_attention
+    B, T, H, dh = shape
+    rng = jax.random.PRNGKey(2)
+    q = jax.random.normal(rng, (B, T, H, dh), dtype)
+    on_cpu = jax.default_backend() == "cpu"
+
+    def build(cfg):
+        if on_cpu:
+            return jax.jit(lambda: chunked_attention(q, q, q, causal=True,
+                                                     kv_chunk=512))
+        return jax.jit(lambda: flash_attention(q, q, q, causal=True,
+                                               **cfg))
+    return autotune("flash_attention", build, shape, dtype, **kw)
+
+
+def _sweep_ssd(shape, dtype, **kw):
+    from repro.kernels.ssd.kernel import ssd_pallas
+    from repro.models.ssm import ssd_chunked
+    B, T, H, P, N = shape
+    ks = [jax.random.fold_in(jax.random.PRNGKey(3), i) for i in range(5)]
+    x = jax.random.normal(ks[0], (B, T, H, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H)))
+    a = jax.random.normal(ks[2], (H,)) * 0.5
+    b = jax.random.normal(ks[3], (B, T, 1, N)) * 0.3
+    c = jax.random.normal(ks[4], (B, T, 1, N)) * 0.3
+    on_cpu = jax.default_backend() == "cpu"
+
+    def build(cfg):
+        if on_cpu:
+            return jax.jit(lambda: ssd_chunked(x, dt, a, b, c,
+                                               cfg["chunk"])[0])
+        return jax.jit(lambda: ssd_pallas(x, dt, a, b, c, cfg["chunk"]))
+    return autotune("ssd", build, shape, dtype, **kw)
+
+
+def sweep_all(*, smoke: bool = False, store: Optional[ConfigStore] = None,
+              verbose: bool = True) -> Dict[str, Dict[str, Any]]:
+    """Tune every family on a canonical shape; returns name -> config."""
+    kw = dict(store=store, verbose=verbose,
+              iters=3 if smoke else 10, warmup=1 if smoke else 2)
+    shapes = {
+        "hist": (512, 8, 16) if smoke else (65536, 32, 64),
+        "forest_infer": (16, 4, 512, 8) if smoke else (128, 8, 4096, 15),
+        "forest_score_fused": ((16, 4, 512, 8) if smoke
+                               else (128, 8, 4096, 15)),
+        "flash_attention": ((1, 128, 2, 32) if smoke
+                            else (1, 2048, 8, 64)),
+        "ssd": (1, 128, 2, 16, 16) if smoke else (1, 1024, 8, 64, 64),
+    }
+    out = {}
+    out["hist"], _ = _sweep_hist(shapes["hist"], jnp.float32, **kw)
+    out["forest_infer"], _ = _sweep_forest(
+        "forest_infer", shapes["forest_infer"], jnp.float32, **kw)
+    out["forest_score_fused"], _ = _sweep_forest(
+        "forest_score_fused", shapes["forest_score_fused"], jnp.float32,
+        **kw)
+    out["flash_attention"], _ = _sweep_attention(
+        shapes["flash_attention"], jnp.float32, **kw)
+    out["ssd"], _ = _sweep_ssd(shapes["ssd"], jnp.float32, **kw)
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes + few iterations (CI-sized)")
+    ap.add_argument("--out", default=None,
+                    help="store path (default: REPRO_AUTOTUNE_CACHE or "
+                    "results/autotune/best_configs.json)")
+    args = ap.parse_args()
+    store = ConfigStore(args.out) if args.out else _store()
+    configs = sweep_all(smoke=args.smoke, store=store)
+    for name, cfg in sorted(configs.items()):
+        print(f"{name}: {cfg}")
+    print(f"store: {store.save()} ({len(store.entries)} entries)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -6,6 +6,7 @@ from typing import Optional
 
 import jax
 
+from repro.kernels import autotune
 from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.models.attention import chunked_attention
@@ -16,17 +17,22 @@ def _on_cpu() -> bool:
 
 
 def attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
-              impl: str = "auto", block_q: int = 512, block_kv: int = 512):
-    """impl: 'pallas' | 'pallas_interpret' | 'xla' | 'ref' | 'auto'."""
+              impl: str = "auto", block_q: Optional[int] = None,
+              block_kv: Optional[int] = None):
+    """impl: 'pallas' | 'pallas_interpret' | 'xla' | 'ref' | 'auto'.
+
+    block_q/block_kv default to the autotune cache entry for q's shape
+    bucket (``repro.kernels.autotune``), falling back to the hand-picked
+    512/512; explicit values always win."""
     if impl == "auto":
         impl = "pallas" if not _on_cpu() else "xla"
-    if impl == "pallas":
-        return flash_attention(q, k, v, causal=causal, window=window,
+    if impl in ("pallas", "pallas_interpret"):
+        cfg = autotune.resolve("flash_attention", q.shape, q.dtype,
                                block_q=block_q, block_kv=block_kv)
-    if impl == "pallas_interpret":
         return flash_attention(q, k, v, causal=causal, window=window,
-                               block_q=block_q, block_kv=block_kv,
-                               interpret=True)
+                               block_q=cfg["block_q"],
+                               block_kv=cfg["block_kv"],
+                               interpret=(impl == "pallas_interpret"))
     if impl == "xla":
         return chunked_attention(q, k, v, causal=causal, window=window)
     return attention_ref(q, k, v, causal=causal, window=window)

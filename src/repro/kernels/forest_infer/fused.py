@@ -1,0 +1,207 @@
+"""Fused forest scoring: traversal + ensemble weighting + Platt in one
+``pallas_call`` (ROADMAP item 3's concrete fusion target).
+
+The unfused serving path (``repro.serve.engine``) composes three stages
+per request: the ``forest_infer`` kernel returns the full (T, n)
+per-tree leaf matrix to XLA, a reduction collapses it to a per-row
+score (vote fraction or boosted margin), and Platt calibration maps the
+score to a probability.  The (T, n) intermediate is pure memory
+traffic — every element is read exactly once by the reduction.
+
+The fused kernel never materializes it.  The grid is (row-tiles, trees)
+with the tree axis innermost, so each row tile's output block stays
+VMEM-resident while every tree accumulates into it (the same
+revisit-accumulate pattern as the ``hist`` kernel's sample axis); the
+last tree step applies the finalization — vote normalization or
+``sigmoid(base + lr * acc)`` — and the Platt sigmoid, so one kernel
+call goes straight from raw features to calibrated probabilities.
+
+Two modes cover the repo's single-forest bundle kinds:
+
+* ``"vote"`` (``tree_subset``): per-tree contribution is the vote
+  indicator ``leaf > 0`` (identical to the engine's
+  ``leaf + 0.5 > 0.5``); the finalized score is the vote fraction.
+  Votes are exact 0/1 counts in f32, so this mode is **bit-exact**
+  with the unfused composition.
+* ``"margin"`` (``fed_hist``): contributions are raw leaf values; the
+  finalized score is ``sigmoid(base + lr * sum)``.  The kernel sums
+  tree-sequentially while XLA reduces pairwise, so parity is within
+  float tolerance (~1e-6 on probabilities), documented and gated in
+  ``benchmarks/serve_bench.py --smoke``.
+
+Platt parameters ride in as a tiny (1, 3) array ``[a, b, enabled]`` —
+a *traced* input, so calibrating an engine never recompiles — and the
+fused path evaluates the calibration sigmoid in f32 (the unfused engine
+uses float64 numpy; the difference is inside the same documented
+tolerance).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import autotune
+from repro.kernels.forest_infer.ref import forest_infer_ref
+
+MODES = ("vote", "margin")
+
+
+def _check_mode(mode: str) -> None:
+    if mode not in MODES:
+        raise ValueError(f"unknown fused scoring mode {mode!r}; "
+                         f"available: {MODES}")
+
+
+def _finalize(acc, platt, *, mode: str, n_trees: int, lr: float,
+              base: float):
+    """Accumulated per-tree contributions -> calibrated probability."""
+    if mode == "vote":
+        s = acc / n_trees
+    else:
+        s = jax.nn.sigmoid(base + lr * acc)
+    calibrated = 1.0 / (1.0 + jnp.exp(-(platt[0] * s + platt[1])))
+    return jnp.where(platt[2] > 0, calibrated, s)
+
+
+def _fused_kernel(feat_ref, thr_ref, leaf_ref, x_ref, platt_ref, o_ref, *,
+                  depth: int, block_n: int, n_feat: int, n_trees: int,
+                  mode: str, lr: float, base: float):
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # identical traversal to kernel._infer_kernel: one tree, one row tile
+    feat = feat_ref[0]                       # (2^D - 1,) int32
+    thr = thr_ref[0]                         # (2^D - 1,) f32
+    leaf = leaf_ref[0]                       # (2^D,) f32
+    x = x_ref[...]                           # (block_n, F) f32
+    n_internal = feat.shape[0]
+    n_leaves = leaf.shape[0]
+
+    f_iota = jax.lax.broadcasted_iota(jnp.int32, (n_internal, n_feat), 1)
+    feat_oh = (feat[:, None] == f_iota).astype(jnp.float32)
+    no_split = (feat < 0).astype(jnp.float32)
+
+    node = jnp.zeros((block_n,), jnp.int32)
+    for _ in range(depth):
+        n_iota = jax.lax.broadcasted_iota(jnp.int32,
+                                          (block_n, n_internal), 1)
+        node_oh = (node[:, None] == n_iota).astype(jnp.float32)
+        t = node_oh @ thr
+        dead = node_oh @ no_split
+        sel = node_oh @ feat_oh
+        xv = jnp.sum(x * sel, axis=1)
+        go_left = (dead < 0.5) & (xv <= t)
+        node = 2 * node + jnp.where(go_left, 1, 2)
+
+    leaf_idx = node - n_internal
+    l_iota = jax.lax.broadcasted_iota(jnp.int32, (block_n, n_leaves), 1)
+    leaf_oh = (leaf_idx[:, None] == l_iota).astype(jnp.float32)
+    val = leaf_oh @ leaf                                   # (block_n,)
+
+    # the fusion: reduce into the resident output block instead of
+    # shipping the (T, n) leaf matrix back to XLA
+    contrib = (val > 0).astype(jnp.float32) if mode == "vote" else val
+    o_ref[...] += contrib[None, :]
+
+    @pl.when(ti == n_trees - 1)
+    def _fin():
+        o_ref[...] = _finalize(o_ref[0, :], platt_ref[0], mode=mode,
+                               n_trees=n_trees, lr=lr, base=base)[None, :]
+
+
+def _platt_array(platt) -> jnp.ndarray:
+    """(a, b) | None | ready-made (3,) array -> (3,) f32 [a, b, flag]."""
+    if platt is None:
+        return jnp.zeros((3,), jnp.float32)
+    platt = jnp.asarray(platt, jnp.float32)
+    if platt.shape == (2,):
+        platt = jnp.concatenate([platt, jnp.ones((1,), jnp.float32)])
+    if platt.shape != (3,):
+        raise ValueError(f"platt must be (a, b) or [a, b, flag]; "
+                         f"got shape {platt.shape}")
+    return platt
+
+
+def fused_forest_score_ref(feature, threshold, leaf, x, *, mode: str,
+                           lr: float = 1.0, base: float = 0.0,
+                           platt=None):
+    """Pure-jnp oracle: unfused composition of the same arithmetic."""
+    _check_mode(mode)
+    vals = forest_infer_ref(feature, threshold, leaf, x)   # (T, n)
+    contrib = (vals > 0).astype(jnp.float32) if mode == "vote" else vals
+    return _finalize(jnp.sum(contrib, axis=0), _platt_array(platt),
+                     mode=mode, n_trees=feature.shape[0], lr=lr,
+                     base=base)
+
+
+def fused_forest_score_pallas(feature, threshold, leaf, x, *, mode: str,
+                              lr: float = 1.0, base: float = 0.0,
+                              platt=None, block_n: int = 256,
+                              interpret: bool = False):
+    """One-call forest scoring (see module docstring for the contract).
+
+    Args mirror ``kernel.forest_infer_pallas`` (dense-heap forest +
+    (n, F) raw rows) plus ``mode``/``lr``/``base`` statics and the
+    traced ``platt`` calibration triple.  Returns (n,) f32 calibrated
+    probabilities."""
+    _check_mode(mode)
+    T, n_internal = feature.shape
+    n, F = x.shape
+    n_leaves = leaf.shape[1]
+    depth = n_internal.bit_length()
+    assert n_leaves == n_internal + 1, "leaf axis must be 2^depth"
+    block_n = min(block_n, max(n, 1))
+    pad_n = (-n) % block_n
+    if pad_n:
+        x = jnp.pad(x, ((0, pad_n), (0, 0)))
+    np_ = x.shape[0]
+    grid = (np_ // block_n, T)        # trees innermost: resident output
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, depth=depth, block_n=block_n,
+                          n_feat=F, n_trees=T, mode=mode, lr=float(lr),
+                          base=float(base)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n_internal), lambda s, t: (t, 0)),
+            pl.BlockSpec((1, n_internal), lambda s, t: (t, 0)),
+            pl.BlockSpec((1, n_leaves), lambda s, t: (t, 0)),
+            pl.BlockSpec((block_n, F), lambda s, t: (s, 0)),
+            pl.BlockSpec((1, 3), lambda s, t: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda s, t: (0, s)),
+        out_shape=jax.ShapeDtypeStruct((1, np_), jnp.float32),
+        interpret=interpret,
+    )(feature, threshold.astype(jnp.float32), leaf.astype(jnp.float32),
+      x.astype(jnp.float32), _platt_array(platt)[None, :])
+    return out[0, :n]
+
+
+def forest_score(forest, x, *, mode: str, lr: float = 1.0,
+                 base: float = 0.0, platt=None, impl: str = "auto",
+                 block_n=None):
+    """Routing wrapper for the fused scorer, mirroring ``ops.forest_infer``
+    (``auto`` | ``pallas`` | ``pallas_interpret`` | ``xla``; auto picks
+    the kernel off-CPU and the jnp composition on CPU).  ``block_n``
+    defaults to the ``forest_score_fused`` autotune entry."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() != "cpu" else "xla"
+    if impl in ("pallas", "pallas_interpret"):
+        cfg = autotune.resolve("forest_score_fused", x.shape, x.dtype,
+                               block_n=block_n)
+        interpret = (impl == "pallas_interpret"
+                     or jax.default_backend() == "cpu")
+        return fused_forest_score_pallas(
+            forest.feature, forest.threshold, forest.leaf, x, mode=mode,
+            lr=lr, base=base, platt=platt, block_n=cfg["block_n"],
+            interpret=interpret)
+    if impl != "xla":
+        raise ValueError(f"unknown forest_score impl {impl!r}")
+    return fused_forest_score_ref(forest.feature, forest.threshold,
+                                  forest.leaf, x, mode=mode, lr=lr,
+                                  base=base, platt=platt)

@@ -1,13 +1,17 @@
 """Public jit'd wrapper for the forest-inference kernel (serving path)."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 
+from repro.kernels import autotune
 from repro.kernels.forest_infer.kernel import forest_infer_pallas
 from repro.kernels.forest_infer.ref import forest_infer_ref
 
 
-def forest_infer(forest, x, *, impl: str = "auto", block_n: int = 256):
+def forest_infer(forest, x, *, impl: str = "auto",
+                 block_n: Optional[int] = None):
     """Per-tree leaf values for a stacked forest (the serving hot path).
 
     Args:
@@ -28,6 +32,10 @@ def forest_infer(forest, x, *, impl: str = "auto", block_n: int = 256):
         ``"xla"``           force the vmapped gather reference.
         ==================  ==================================================
 
+    ``block_n`` (row-tile size) defaults to the autotune cache entry for
+    this shape bucket (``repro.kernels.autotune``) and falls back to the
+    hand-picked 256; an explicit value always wins.
+
     Returns (T, n) f32 — bit-exact with
     ``trees.growth.predict_forest(forest, x)`` on every impl (the kernel's
     one-hot contractions each select exactly one element).
@@ -35,10 +43,12 @@ def forest_infer(forest, x, *, impl: str = "auto", block_n: int = 256):
     if impl == "auto":
         impl = "pallas" if jax.default_backend() != "cpu" else "xla"
     if impl in ("pallas", "pallas_interpret"):
+        cfg = autotune.resolve("forest_infer", x.shape, x.dtype,
+                               block_n=block_n)
         interpret = (impl == "pallas_interpret"
                      or jax.default_backend() == "cpu")
         return forest_infer_pallas(forest.feature, forest.threshold,
-                                   forest.leaf, x, block_n=block_n,
+                                   forest.leaf, x, block_n=cfg["block_n"],
                                    interpret=interpret)
     if impl != "xla":
         raise ValueError(f"unknown forest_infer impl {impl!r}")

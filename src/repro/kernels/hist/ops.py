@@ -1,13 +1,18 @@
 """Public jit'd wrapper for the GBDT gradient histogram."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 
+from repro.kernels import autotune
 from repro.kernels.hist.kernel import hist_pallas
 from repro.kernels.hist.ref import hist_ref
 
 
-def gradient_histogram(bins, grad, hess, n_bins: int, *, impl: str = "auto"):
+def gradient_histogram(bins, grad, hess, n_bins: int, *, impl: str = "auto",
+                       block_n: Optional[int] = None,
+                       block_f: Optional[int] = None):
     """Per-feature gradient/hessian histogram (the tree-growth hot path).
 
     Args:
@@ -21,6 +26,10 @@ def gradient_histogram(bins, grad, hess, n_bins: int, *, impl: str = "auto"):
         gradients.
       n_bins: histogram width (tree growth passes n_nodes * n_bins to
         histogram a whole level in one call).
+      block_n/block_f: Pallas tile sizes.  Default None consults the
+        autotune cache (``repro.kernels.autotune``, keyed on the bins
+        shape bucket/dtype/platform) and falls back to the hand-picked
+        1024/8; explicit values always win.
       impl: routing table —
 
         ==================  ==================================================
@@ -41,7 +50,10 @@ def gradient_histogram(bins, grad, hess, n_bins: int, *, impl: str = "auto"):
     if impl == "auto":
         impl = "pallas" if jax.default_backend() != "cpu" else "xla"
     if impl in ("pallas", "pallas_interpret"):
+        cfg = autotune.resolve("hist", bins.shape[-2:], grad.dtype,
+                               block_n=block_n, block_f=block_f)
         interpret = (impl == "pallas_interpret"
                      or jax.default_backend() == "cpu")
-        return hist_pallas(bins, grad, hess, n_bins, interpret=interpret)
+        return hist_pallas(bins, grad, hess, n_bins, interpret=interpret,
+                           **cfg)
     return hist_ref(bins, grad, hess, n_bins)

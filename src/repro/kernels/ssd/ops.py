@@ -1,14 +1,22 @@
 """Public jit'd wrapper for the SSD scan."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 
+from repro.kernels import autotune
 from repro.kernels.ssd.kernel import ssd_pallas
 from repro.models.ssm import ssd_chunked
 
 
-def ssd(x, dt, a_log, b, c, chunk: int, *, impl: str = "auto",
-        init_state=None):
+def ssd(x, dt, a_log, b, c, chunk: Optional[int] = None, *,
+        impl: str = "auto", init_state=None):
+    """chunk=None consults the autotune cache for x's shape bucket
+    (``repro.kernels.autotune``; hand-picked fallback 64).  Callers with
+    a model-config chunk pass it explicitly and are unaffected."""
+    if chunk is None:
+        chunk = autotune.resolve("ssd", x.shape, x.dtype)["chunk"]
     if impl == "auto":
         impl = "pallas" if jax.default_backend() != "cpu" else "xla"
     if impl in ("pallas", "pallas_interpret"):

@@ -21,6 +21,29 @@ as fast as the hardware allows).  Three pieces:
   to calibrated probabilities; strictly monotone for a > 0, so ranking
   metrics (ROC-AUC) are invariant under it.
 
+Two optional fast paths (ROADMAP item 3's fusion targets):
+
+* ``fused=True`` routes the single-forest kinds (``tree_subset``,
+  ``fed_hist``) through the fused Pallas scorer
+  (``repro.kernels.forest_infer.fused.forest_score``): traversal,
+  ensemble weighting, and Platt calibration in one kernel call — the
+  (T, n) per-tree leaf matrix is never materialized and calibration runs
+  in-graph (f32) instead of as a numpy post-pass.  Parity with the
+  unfused composition: vote counts are exact; probabilities agree within
+  **1e-6** (tree-sequential vs pairwise summation, f32 vs float64
+  Platt) — gated in ``benchmarks/serve_bench.py --smoke``.
+* ``quantize="int8_sr"`` stores every forest's leaf table as int8 +
+  scale via the unbiased stochastic-rounding codec
+  (``repro.core.compression.int8_sr_quantize``) and dequantizes inside
+  the jitted scorer — memory-bound batches read 1 byte/leaf instead
+  of 4.  Thresholds stay f32, so tree *routing* is unchanged and the
+  output error is analytically bounded: per tree, one leaf step
+  (``amax/127``); e.g. fed_hist margins shift by at most
+  ``lr * rounds * step`` (probabilities by a quarter of that — sigmoid
+  is 1/4-Lipschitz), and votes flip only where ``|leaf| < step``.  The
+  serve_bench smoke gate asserts these bounds.  Parametric bundles are
+  unaffected (no leaf table).
+
 An engine scores one bundle or an ensemble of bundles (weighted mean of
 per-bundle probabilities) and keeps per-call latency stats for the
 serving benchmarks (``launch/serve_fed.py``, ``benchmarks/serve_bench``).
@@ -34,15 +57,43 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.compression import int8_sr_quantize
+from repro.kernels.forest_infer.fused import forest_score
 from repro.kernels.forest_infer.ops import forest_infer
 from repro.models import tabular
 from repro.serve.bundle import ModelBundle
 from repro.trees.growth import Tree
 
+QUANTIZE_MODES = (None, "int8_sr")
+
+
+def _forest_maker(forest: Tree, quantize: Optional[str]):
+    """Nullary forest constructor for use inside a jitted scorer.
+
+    With ``quantize="int8_sr"`` the leaf table is held as int8 + f32
+    scale (the wire codec's arithmetic, seed 0) and dequantized in-graph;
+    features/thresholds stay untouched so routing is bit-identical."""
+    if quantize is None:
+        return lambda: forest
+    if quantize not in QUANTIZE_MODES:
+        raise ValueError(f"unknown quantize mode {quantize!r}; "
+                         f"available: {QUANTIZE_MODES}")
+    q, scale = int8_sr_quantize(jnp.asarray(forest.leaf, jnp.float32),
+                                jax.random.PRNGKey(0))
+    return lambda: forest._replace(leaf=q.astype(jnp.float32) * scale)
+
+
+def leaf_quant_step(forest: Tree) -> float:
+    """The int8 quantization step of a forest's leaf table
+    (``amax/127``) — the per-tree output error bound of the int8_sr
+    scoring path."""
+    return float(jnp.maximum(jnp.max(jnp.abs(
+        jnp.asarray(forest.leaf, jnp.float32))), 1e-12) / 127.0)
+
 
 # --- per-kind score functions (x (n, F) raw -> probs (n,)) -------------------
 
-def _parametric_scorer(bundle: ModelBundle, impl: str):
+def _parametric_scorer(bundle: ModelBundle, impl: str, quantize=None):
     params = bundle.model()
     spec = tabular.MODELS[bundle.meta["model"]]
 
@@ -54,11 +105,11 @@ def _parametric_scorer(bundle: ModelBundle, impl: str):
     return score
 
 
-def _tree_subset_scorer(bundle: ModelBundle, impl: str):
-    forest = bundle.model().forest
+def _tree_subset_scorer(bundle: ModelBundle, impl: str, quantize=None):
+    make = _forest_maker(bundle.model().forest, quantize)
 
     def score(x):
-        vals = forest_infer(forest, x, impl=impl) + 0.5  # (k, n) p(y=1)
+        vals = forest_infer(make(), x, impl=impl) + 0.5  # (k, n) p(y=1)
         # vote averaging: fraction of trees voting positive, so that
         # thresholding at 0.5 reproduces the paper's majority-vote
         # aggregation (forest.predict_votes) exactly
@@ -66,31 +117,53 @@ def _tree_subset_scorer(bundle: ModelBundle, impl: str):
     return score
 
 
-def _fed_hist_scorer(bundle: ModelBundle, impl: str):
+def _fed_hist_scorer(bundle: ModelBundle, impl: str, quantize=None):
     model = bundle.model()
+    make = _forest_maker(model.forest, quantize)
 
     def score(x):
-        vals = forest_infer(model.forest, x, impl=impl)  # (rounds, n)
+        vals = forest_infer(make(), x, impl=impl)  # (rounds, n)
         margin = model.base_margin \
             + model.learning_rate * jnp.sum(vals, axis=0)
         return jax.nn.sigmoid(margin)
     return score
 
 
-def _feature_extract_scorer(bundle: ModelBundle, impl: str):
+def _feature_extract_scorer(bundle: ModelBundle, impl: str, quantize=None):
     stacked = Tree(*(bundle.arrays[f"forests.{f}"] for f in Tree._fields))
     C, R = stacked.feature.shape[:2]
     flat = Tree(*(a.reshape((C * R,) + a.shape[2:]) for a in stacked))
+    make = _forest_maker(flat, quantize)
     w = jnp.asarray(bundle.arrays["weights"], jnp.float32)
     base = jnp.asarray(bundle.arrays["base_margins"], jnp.float32)
     lr = bundle.meta["learning_rate"]
 
     def score(x):
-        vals = forest_infer(flat, x, impl=impl)        # (C*R, n)
+        vals = forest_infer(make(), x, impl=impl)      # (C*R, n)
         margins = base[:, None] \
             + lr * jnp.sum(vals.reshape(C, R, -1), axis=1)
         return jnp.sum(w[:, None] * jax.nn.sigmoid(margins), axis=0)
     return score
+
+
+def _fused_prob_fn(bundle: ModelBundle, impl: str, quantize=None):
+    """Fused (x, platt) -> probs fn for single-forest kinds, else None.
+
+    ``platt`` is the (3,) [a, b, enabled] triple threaded as a traced
+    argument so calibrating never recompiles."""
+    if bundle.kind == "tree_subset":
+        make = _forest_maker(bundle.model().forest, quantize)
+        return lambda x, platt: forest_score(make(), x, mode="vote",
+                                             platt=platt, impl=impl)
+    if bundle.kind == "fed_hist":
+        model = bundle.model()
+        make = _forest_maker(model.forest, quantize)
+        lr = float(model.learning_rate)
+        base = float(model.base_margin)
+        return lambda x, platt: forest_score(make(), x, mode="margin",
+                                             lr=lr, base=base,
+                                             platt=platt, impl=impl)
+    return None
 
 
 SCORERS = {
@@ -153,15 +226,27 @@ class ScoringEngine:
       impl: forest-inference kernel routing (``auto`` | ``pallas`` |
         ``pallas_interpret`` | ``xla`` — see
         ``repro.kernels.forest_infer.ops``).
+      fused: route single-forest kinds through the fused Pallas scorer
+        (one kernel call: traversal + weighting + Platt; see module
+        docstring for the 1e-6 parity contract).  Kinds without a fused
+        kernel (parametric, feature_extract) fall back to their
+        composed scorer inside the same jit.
+      quantize: None | ``int8_sr`` — hold forest leaf tables as int8 +
+        scale (stochastic-rounding codec), dequantized in-graph
+        (documented error bound in the module docstring).
     """
 
     def __init__(self, bundles, weights: Optional[Sequence[float]] = None,
                  bucket_sizes: Sequence[int] = (64, 256, 1024),
-                 impl: str = "auto"):
+                 impl: str = "auto", fused: bool = False,
+                 quantize: Optional[str] = None):
         if isinstance(bundles, ModelBundle):
             bundles = [bundles]
         if not bundles:
             raise ValueError("ScoringEngine needs at least one bundle")
+        if quantize not in QUANTIZE_MODES:
+            raise ValueError(f"unknown quantize mode {quantize!r}; "
+                             f"available: {QUANTIZE_MODES}")
         self.bundles: List[ModelBundle] = list(bundles)
         w = np.asarray(weights if weights is not None
                        else np.ones(len(self.bundles)), np.float32)
@@ -172,14 +257,48 @@ class ScoringEngine:
         self.calibration: Optional[Tuple[float, float]] = None
         self.latencies_s: List[float] = []
         self.rows_scored = 0
-        scorers = [SCORERS[b.kind](b, impl) for b in self.bundles]
+        self.fused = bool(fused)
+        self.quantize = quantize
         wj = jnp.asarray(self.weights)
 
-        def ensemble(x):
-            probs = jnp.stack([s(x) for s in scorers])   # (models, n)
-            return jnp.sum(wj[:, None] * probs, axis=0)
+        if self.fused:
+            fns = []
+            for b in self.bundles:
+                f = _fused_prob_fn(b, impl, quantize)
+                if f is None:           # no fused kernel for this kind
+                    s = SCORERS[b.kind](b, impl, quantize)
+                    f = None, s
+                fns.append(f)
+            if len(fns) == 1 and not isinstance(fns[0], tuple):
+                # single fused bundle: Platt folds into the kernel call
+                ensemble = fns[0]
+            else:
+                def ensemble(x, platt):
+                    probs = jnp.stack(
+                        [f[1](x) if isinstance(f, tuple) else f(x, None)
+                         for f in fns])
+                    s = jnp.sum(wj[:, None] * probs, axis=0)
+                    cal = 1.0 / (1.0 + jnp.exp(-(platt[0] * s
+                                                 + platt[1])))
+                    return jnp.where(platt[2] > 0, cal, s)
+            self._jit_score = jax.jit(ensemble)
+        else:
+            scorers = [SCORERS[b.kind](b, impl, quantize)
+                       for b in self.bundles]
 
-        self._jit_score = jax.jit(ensemble)
+            def ensemble(x):
+                probs = jnp.stack([s(x) for s in scorers])  # (models, n)
+                return jnp.sum(wj[:, None] * probs, axis=0)
+
+            self._jit_score = jax.jit(ensemble)
+
+    def _platt_vec(self) -> jnp.ndarray:
+        """(3,) [a, b, enabled] f32 — the fused path's traced Platt arg."""
+        a, b = self.calibration if self.calibration is not None \
+            else (0.0, 0.0)
+        return jnp.asarray(
+            [a, b, 1.0 if self.calibration is not None else 0.0],
+            jnp.float32)
 
     # -- bucketing ------------------------------------------------------------
 
@@ -189,11 +308,22 @@ class ScoringEngine:
                 return b
         return self.buckets[-1]
 
+    def _score_chunk(self, chunk) -> np.ndarray:
+        """One jit call; the fused path threads the Platt triple (its
+        calibration runs in-graph, the composed path applies it in
+        numpy afterwards)."""
+        if self.fused:
+            return np.asarray(self._jit_score(jnp.asarray(chunk),
+                                              self._platt_vec()))
+        return np.asarray(self._jit_score(jnp.asarray(chunk)))
+
     def score_unbatched(self, x) -> np.ndarray:
         """Raw ensemble probabilities with no bucketing/padding — the
         parity reference for the bucketed path (and the calibration
         input)."""
-        probs = np.asarray(self._jit_score(jnp.asarray(x, jnp.float32)))
+        probs = self._score_chunk(jnp.asarray(x, jnp.float32))
+        if self.fused:
+            return probs
         return (apply_platt(probs, self.calibration).astype(np.float32)
                 if self.calibration is not None else probs)
 
@@ -214,9 +344,9 @@ class ScoringEngine:
             pad = bucket - len(chunk)
             if pad:
                 chunk = np.pad(chunk, ((0, pad), (0, 0)))
-            probs = np.asarray(self._jit_score(jnp.asarray(chunk)))
+            probs = self._score_chunk(chunk)
             out[i:i + bucket - pad] = probs[:bucket - pad]
-        if self.calibration is not None:
+        if self.calibration is not None and not self.fused:
             out = apply_platt(out, self.calibration).astype(np.float32)
         self.latencies_s.append(time.perf_counter() - t0)
         self.rows_scored += n
@@ -239,7 +369,7 @@ class ScoringEngine:
     def warmup(self, n_features: int) -> None:
         """Compile every bucket shape up front (not counted in stats)."""
         for b in self.buckets:
-            self._jit_score(jnp.zeros((b, n_features), jnp.float32))
+            self._score_chunk(jnp.zeros((b, n_features), jnp.float32))
 
     def stats(self) -> Dict[str, float]:
         """Throughput + latency percentiles over recorded score() calls."""

@@ -1,0 +1,205 @@
+"""Autotune cache contract: deterministic keys (across processes),
+JSON store round-trips byte-stably, resolution precedence
+(defaults < cached < explicit), and shape buckets that make nearby
+shapes share one tuned entry."""
+import json
+import os
+import subprocess
+import sys
+import time
+
+import jax.numpy as jnp
+
+from repro.kernels import autotune
+from repro.kernels.autotune import (ConfigStore, TUNABLES, autotune as
+                                    autotune_sweep, cache_key,
+                                    candidate_configs, resolve,
+                                    shape_bucket)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_shape_bucket_rounds_up_to_pow2():
+    assert shape_bucket((4097, 15)) == (8192, 16)
+    assert shape_bucket((8000, 16)) == (8192, 16)
+    assert shape_bucket((1, 1)) == (1, 1)
+    assert shape_bucket((2, 3)) == (2, 4)
+    assert shape_bucket((1024,)) == (1024,)
+
+
+def test_cache_key_stable_within_bucket():
+    # nearby shapes share the tuned entry; crossing a pow2 boundary
+    # does not
+    a = cache_key("hist", (4097, 15), jnp.float32, platform="tpu")
+    b = cache_key("hist", (8000, 16), jnp.float32, platform="tpu")
+    c = cache_key("hist", (8193, 16), jnp.float32, platform="tpu")
+    assert a == b == "hist|8192x16|float32|tpu"
+    assert c != a
+    assert cache_key("hist", (4097, 15), jnp.bfloat16,
+                     platform="tpu") != a
+
+
+def test_cache_key_rejects_unknown_family():
+    try:
+        cache_key("nope", (1,), jnp.float32)
+        assert False, "expected KeyError"
+    except KeyError as e:
+        assert "nope" in str(e)
+
+
+def test_cache_key_deterministic_across_processes():
+    """No hash-seed or dict-order dependence: a fresh interpreter
+    produces byte-identical keys."""
+    prog = ("import jax.numpy as jnp; "
+            "from repro.kernels.autotune import cache_key; "
+            "print(cache_key('forest_infer', (300, 15), jnp.float32, "
+            "platform='tpu'))")
+    env = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src"),
+           "PYTHONHASHSEED": "1234"}
+    out = subprocess.run([sys.executable, "-c", prog], env=env,
+                         capture_output=True, text=True, check=True)
+    assert out.stdout.strip() == cache_key("forest_infer", (300, 15),
+                                           jnp.float32, platform="tpu")
+
+
+def test_store_round_trip_and_byte_stability(tmp_path):
+    path = str(tmp_path / "store.json")
+    st = ConfigStore(path)
+    st.put(cache_key("ssd", (1, 256, 4, 32), jnp.float32,
+                     platform="tpu"),
+           {"chunk": 128}, us=12.5, device="test", jax="0.0")
+    st.put(cache_key("hist", (2048, 8), jnp.float32, platform="tpu"),
+           {"block_n": 512, "block_f": 4}, us=3.0)
+    st.save()
+
+    reloaded = ConfigStore(path)
+    assert reloaded.entries == st.entries
+    assert reloaded.get(cache_key("ssd", (1, 256, 4, 32), jnp.float32,
+                                  platform="tpu")) == {"chunk": 128}
+    assert reloaded.get("hist|missing|float32|tpu") is None
+
+    with open(path, "rb") as f:
+        first = f.read()
+    reloaded.save()
+    with open(path, "rb") as f:
+        assert f.read() == first, "save() must be byte-stable"
+    assert json.loads(first)["version"] == 1
+
+
+def test_store_rejects_version_mismatch(tmp_path):
+    path = str(tmp_path / "bad.json")
+    with open(path, "w") as f:
+        json.dump({"version": 999, "entries": {}}, f)
+    try:
+        ConfigStore(path)
+        assert False, "expected ValueError"
+    except ValueError as e:
+        assert "999" in str(e)
+
+
+def test_resolve_falls_back_to_defaults(tmp_path):
+    st = ConfigStore(str(tmp_path / "empty.json"))   # nothing cached
+    for family, spec in TUNABLES.items():
+        cfg = resolve(family, (512, 8), jnp.float32, platform="tpu",
+                      store=st)
+        assert cfg == spec["defaults"], \
+            f"{family}: empty cache must yield the shipped defaults"
+
+
+def test_resolve_precedence(tmp_path):
+    st = ConfigStore(str(tmp_path / "s.json"))
+    key = cache_key("hist", (512, 8), jnp.float32, platform="tpu")
+    st.put(key, {"block_n": 2048, "block_f": 2})
+    # cached beats defaults
+    assert resolve("hist", (512, 8), jnp.float32, platform="tpu",
+                   store=st) == {"block_n": 2048, "block_f": 2}
+    # explicit non-None override beats cached; None means "no opinion"
+    assert resolve("hist", (512, 8), jnp.float32, platform="tpu",
+                   store=st, block_n=128, block_f=None) \
+        == {"block_n": 128, "block_f": 2}
+    # a different shape bucket misses the cache entirely
+    assert resolve("hist", (5000, 8), jnp.float32, platform="tpu",
+                   store=st) == TUNABLES["hist"]["defaults"]
+
+
+def test_resolve_ignores_unknown_cached_params(tmp_path):
+    # a stale store entry with extra keys must not leak into configs
+    st = ConfigStore(str(tmp_path / "s.json"))
+    key = cache_key("ssd", (1, 64, 2, 16), jnp.float32, platform="tpu")
+    st.put(key, {"chunk": 128, "retired_param": 7})
+    assert resolve("ssd", (1, 64, 2, 16), jnp.float32, platform="tpu",
+                   store=st) == {"chunk": 128}
+
+
+def test_candidate_configs_cover_grid_deterministically():
+    cfgs = candidate_configs("flash_attention")
+    assert len(cfgs) == 9                      # 3 block_q x 3 block_kv
+    assert cfgs == candidate_configs("flash_attention")
+    assert TUNABLES["flash_attention"]["defaults"] in cfgs
+    for family, spec in TUNABLES.items():
+        assert spec["defaults"] in candidate_configs(family), \
+            f"{family}: sweep grid must include the shipped defaults"
+
+
+def test_autotune_harness_picks_fastest_and_caches(tmp_path):
+    """No kernels involved: candidates are sleeps, the designated
+    winner is instant, and the winning config lands in the store under
+    the bucketed key."""
+    st = ConfigStore(str(tmp_path / "tuned.json"))
+
+    def build(cfg):
+        if cfg["chunk"] == 64:
+            return lambda: 0.0
+        return lambda: time.sleep(0.02)
+
+    best, us = autotune_sweep("ssd", build, (1, 300, 4, 32), jnp.float32,
+                              store=st, iters=1, warmup=1, save=True)
+    assert best == {"chunk": 64}
+    assert us < 0.02 * 1e6
+    key = cache_key("ssd", (1, 300, 4, 32), jnp.float32)
+    assert st.get(key) == {"chunk": 64}
+    # the bucket neighbour resolves to the tuned value on this platform
+    assert resolve("ssd", (1, 500, 4, 32), jnp.float32,
+                   store=st)["chunk"] == 64
+    # and the saved file reloads with timing metadata attached
+    entry = ConfigStore(st.path).entries[key]
+    assert entry["config"] == {"chunk": 64} and "us" in entry
+
+
+def test_autotune_skips_failing_candidates(tmp_path):
+    st = ConfigStore(str(tmp_path / "t.json"))
+
+    def build(cfg):
+        if cfg["chunk"] != 128:
+            raise ValueError("tile too large")    # invalid-config path
+        return lambda: 0.0
+
+    best, _ = autotune_sweep("ssd", build, (1, 64, 2, 16), jnp.float32,
+                             store=st, iters=1, warmup=1, save=False)
+    assert best == {"chunk": 128}
+
+    def all_fail(cfg):
+        raise ValueError("no")
+
+    try:
+        autotune_sweep("ssd", all_fail, (1, 64, 2, 16), jnp.float32,
+                       store=st, iters=1, warmup=1, save=False)
+        assert False, "expected RuntimeError"
+    except RuntimeError as e:
+        assert "every candidate failed" in str(e)
+
+
+def test_env_var_redirects_default_store(tmp_path, monkeypatch):
+    path = str(tmp_path / "redirected.json")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", path)
+    autotune.reset_default_store()
+    try:
+        assert autotune.default_store_path() == path
+        st = autotune._store()
+        assert st.path == path
+        # ops-path resolution (no explicit store) now reads this file
+        assert resolve("forest_infer", (100, 8), jnp.float32,
+                       platform="tpu") \
+            == TUNABLES["forest_infer"]["defaults"]
+    finally:
+        autotune.reset_default_store()

@@ -1,0 +1,201 @@
+"""Randomized kernel oracle grid: for every kernel family the three
+routes a caller can take — the Pallas kernel in interpret mode, the
+pure-jnp reference, and the jitted XLA path — must agree on random
+inputs.  The fast tier runs a small seeded sample per family; the
+exhaustive grid is tier 2 (``slow``).
+
+This complements tests/test_kernels.py (hand-picked shapes per kernel)
+with one uniform randomized contract: ``pallas_interpret == ref ==
+jit(xla)`` within per-family tolerance.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from proptest import cases, choice, for_cases, ints
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.forest_infer.fused import (fused_forest_score_pallas,
+                                              fused_forest_score_ref)
+from repro.kernels.forest_infer.kernel import forest_infer_pallas
+from repro.kernels.forest_infer.ref import forest_infer_ref
+from repro.kernels.hist.kernel import hist_pallas
+from repro.kernels.hist.ref import hist_ref
+from repro.kernels.ssd.kernel import ssd_pallas
+from repro.kernels.ssd.ref import ssd_ref
+from repro.models.attention import chunked_attention
+from repro.models.ssm import ssd_chunked
+from repro.trees.growth import Tree
+
+RNG = jax.random.PRNGKey(7)
+
+
+def _agree(interp, ref, xla, atol, label):
+    """The oracle contract: all three routes within atol of the ref."""
+    interp, ref, xla = (np.asarray(v, np.float32)
+                        for v in (interp, ref, xla))
+    np.testing.assert_allclose(interp, ref, atol=atol, rtol=0,
+                               err_msg=f"{label}: interpret vs ref")
+    np.testing.assert_allclose(xla, ref, atol=atol, rtol=0,
+                               err_msg=f"{label}: jit(xla) vs ref")
+
+
+def _forest(key, T, depth, F):
+    """Random dense-heap forest with valid routing; feature -1 marks
+    no-split nodes so dead-branch handling is exercised too."""
+    n_int = 2 ** depth - 1
+    ks = [jax.random.fold_in(key, i) for i in range(3)]
+    return Tree(
+        feature=jax.random.randint(ks[0], (T, n_int), -1, F),
+        threshold=jax.random.normal(ks[1], (T, n_int)),
+        leaf=jax.random.normal(ks[2], (T, n_int + 1)),
+        gain=jnp.zeros((T, F)))
+
+
+# --- hist ---------------------------------------------------------------------
+
+HIST_CASES = cases(8, seed=11, n=ints(33, 2500), F=ints(1, 20),
+                   nb=choice(16, 32, 64), block_n=choice(128, 256, 1024),
+                   block_f=choice(2, 4, 8))
+
+
+@pytest.mark.slow
+@for_cases(HIST_CASES)
+def test_hist_oracle(n, F, nb, block_n, block_f):
+    key = jax.random.fold_in(RNG, n)
+    ks = [jax.random.fold_in(key, i) for i in range(3)]
+    bins = jax.random.randint(ks[0], (n, F), 0, nb)
+    g = jax.random.normal(ks[1], (n,))
+    h = jax.random.uniform(ks[2], (n,))
+    ref = hist_ref(bins, g, h, nb)
+    interp = hist_pallas(bins, g, h, nb, block_n=block_n,
+                         block_f=block_f, interpret=True)
+    xla = jax.jit(lambda b, gg, hh: hist_ref(b, gg, hh, nb))(bins, g, h)
+    _agree(interp, ref, xla, 2e-4, f"hist n={n} F={F}")
+
+
+@for_cases(HIST_CASES[:2])
+def test_hist_oracle_fast(n, F, nb, block_n, block_f):
+    test_hist_oracle.body(n, F, nb, block_n, block_f)
+
+
+# --- forest_infer -------------------------------------------------------------
+
+FOREST_CASES = cases(8, seed=13, T=ints(1, 24), depth=ints(1, 6),
+                     n=ints(5, 700), F=ints(2, 16),
+                     block_n=choice(64, 128, 256))
+
+
+@pytest.mark.slow
+@for_cases(FOREST_CASES)
+def test_forest_infer_oracle(T, depth, n, F, block_n):
+    forest = _forest(jax.random.fold_in(RNG, T * 1000 + n), T, depth, F)
+    x = jax.random.normal(jax.random.fold_in(RNG, n), (n, F))
+    ref = forest_infer_ref(forest.feature, forest.threshold, forest.leaf,
+                           x)
+    interp = forest_infer_pallas(forest.feature, forest.threshold,
+                                 forest.leaf, x, block_n=block_n,
+                                 interpret=True)
+    xla = jax.jit(lambda q: forest_infer_ref(
+        forest.feature, forest.threshold, forest.leaf, q))(x)
+    # traversal picks one leaf per (tree, row): comparisons + one-hot
+    # contractions are exact, so the three routes agree bit-for-bit
+    _agree(interp, ref, xla, 0.0, f"forest T={T} d={depth} n={n}")
+
+
+@for_cases(FOREST_CASES[:2])
+def test_forest_infer_oracle_fast(T, depth, n, F, block_n):
+    test_forest_infer_oracle.body(T, depth, n, F, block_n)
+
+
+# --- fused forest scoring -----------------------------------------------------
+
+FUSED_CASES = cases(8, seed=17, T=ints(2, 24), depth=ints(1, 5),
+                    n=ints(5, 600), F=ints(2, 12),
+                    mode=choice("vote", "margin"),
+                    platt=choice(None, (1.5, -0.3)))
+
+
+@pytest.mark.slow
+@for_cases(FUSED_CASES)
+def test_fused_forest_score_oracle(T, depth, n, F, mode, platt):
+    forest = _forest(jax.random.fold_in(RNG, T * 31 + depth), T, depth, F)
+    x = jax.random.normal(jax.random.fold_in(RNG, n + 1), (n, F))
+    kw = dict(mode=mode, lr=0.3, base=-0.1, platt=platt)
+    ref = fused_forest_score_ref(forest.feature, forest.threshold,
+                                 forest.leaf, x, **kw)
+    interp = fused_forest_score_pallas(forest.feature, forest.threshold,
+                                       forest.leaf, x, block_n=128,
+                                       interpret=True, **kw)
+    xla = jax.jit(lambda q: fused_forest_score_ref(
+        forest.feature, forest.threshold, forest.leaf, q, **kw))(x)
+    # documented fused tolerance (kernels/forest_infer/fused.py): counts
+    # are exact but the final division / tree-sequential sum can differ
+    # from XLA's pairwise reduction by ~1 ulp on probabilities
+    _agree(interp, ref, xla, 1e-6, f"fused {mode} T={T} n={n}")
+    assert interp.shape == (n,)
+
+
+@for_cases(FUSED_CASES[:3])
+def test_fused_forest_score_oracle_fast(T, depth, n, F, mode, platt):
+    test_fused_forest_score_oracle.body(T, depth, n, F, mode, platt)
+
+
+# --- flash attention ----------------------------------------------------------
+
+ATTN_CASES = cases(6, seed=19, B=ints(1, 2), T=choice(32, 64, 96),
+                   H=choice(1, 2, 4), dh=choice(16, 32),
+                   causal=choice(True, False))
+
+
+@pytest.mark.slow
+@for_cases(ATTN_CASES)
+def test_attention_oracle(B, T, H, dh, causal):
+    ks = [jax.random.fold_in(RNG, 100 + i) for i in range(3)]
+    q = jax.random.normal(ks[0], (B, T, H, dh))
+    k = jax.random.normal(ks[1], (B, T, H, dh))
+    v = jax.random.normal(ks[2], (B, T, H, dh))
+    ref = attention_ref(q, k, v, causal=causal)
+    interp = flash_attention(q, k, v, causal=causal, block_q=32,
+                             block_kv=32, interpret=True)
+    xla = jax.jit(lambda a, b, c: chunked_attention(
+        a, b, c, causal=causal, kv_chunk=32))(q, k, v)
+    _agree(interp, ref, xla, 1e-5, f"attention T={T} causal={causal}")
+
+
+@for_cases(ATTN_CASES[:2])
+def test_attention_oracle_fast(B, T, H, dh, causal):
+    test_attention_oracle.body(B, T, H, dh, causal)
+
+
+# --- ssd ----------------------------------------------------------------------
+
+SSD_CASES = cases(5, seed=23, B=ints(1, 2), T=choice(32, 64),
+                  H=choice(2, 4), P=choice(16, 32), N=choice(8, 16),
+                  Q=choice(16, 32))
+
+
+@pytest.mark.slow
+@for_cases(SSD_CASES)
+def test_ssd_oracle(B, T, H, P, N, Q):
+    ks = [jax.random.fold_in(RNG, 200 + i) for i in range(5)]
+    x = jax.random.normal(ks[0], (B, T, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H)))
+    a_log = jax.random.normal(ks[2], (H,)) * 0.5
+    b = jax.random.normal(ks[3], (B, T, 1, N)) * 0.3
+    c = jax.random.normal(ks[4], (B, T, 1, N)) * 0.3
+    y_ref, s_ref = ssd_ref(x, dt, a_log, b, c, Q)
+    y_int, s_int = ssd_pallas(x, dt, a_log, b, c, Q, interpret=True)
+    y_xla, s_xla = jax.jit(lambda *a: ssd_chunked(*a, Q))(x, dt, a_log,
+                                                          b, c)
+    scale = float(jnp.max(jnp.abs(y_ref))) + 1e-6
+    _agree(y_int / scale, y_ref / scale, y_xla / scale, 1e-4,
+           f"ssd T={T} N={N}")
+    _agree(s_int, s_ref, s_xla, 1e-3, f"ssd state T={T} N={N}")
+
+
+@for_cases(SSD_CASES[:1])
+def test_ssd_oracle_fast(B, T, H, P, N, Q):
+    test_ssd_oracle.body(B, T, H, P, N, Q)

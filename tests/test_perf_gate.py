@@ -1,0 +1,145 @@
+"""Perf-gate logic on synthetic rows — no real timing anywhere.
+
+Covers the acceptance contract: an injected 25% same-platform
+regression fails the gate, a within-tolerance run passes and appends
+exactly one trajectory entry, cross-platform rows are never compared,
+and the trajectory file round-trips.
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "tools"))
+import perf_gate  # noqa: E402  (tools/ is not a package)
+
+META = {"platform": "cpu", "device": "testbox", "jax": "0.0-test"}
+
+
+def _row(name, us, **meta):
+    return {"name": name, "us": float(us), "note": "", **META, **meta}
+
+
+def _trajectory(*entries):
+    return {"version": 1, "entries": list(entries)}
+
+
+def _entry(rows, smoke=False):
+    return {**META, "smoke": smoke, "note": "", "rows": rows}
+
+
+BASE = [_row("hist_smoke", 10_000.0), _row("forest_fused_smoke", 8_000.0)]
+
+
+def test_injected_regression_fails():
+    traj = _trajectory(_entry(BASE))
+    current = [_row("hist_smoke", 12_500.0),          # +25% — must fail
+               _row("forest_fused_smoke", 8_100.0)]   # +1.25% — fine
+    failures = perf_gate.compare(current, traj)
+    assert [name for name, _ in failures] == ["hist_smoke"]
+    assert "12500.0us" in failures[0][1]
+
+
+def test_within_tolerance_passes():
+    traj = _trajectory(_entry(BASE))
+    current = [_row("hist_smoke", 11_500.0),          # +15% < 20%
+               _row("forest_fused_smoke", 7_500.0)]   # faster
+    assert perf_gate.compare(current, traj) == []
+
+
+def test_gate_uses_best_baseline_not_latest():
+    # a slow middle entry must not ratchet the limit upward
+    traj = _trajectory(_entry([_row("k", 10_000.0)]),
+                       _entry([_row("k", 30_000.0)]))
+    assert perf_gate.compare([_row("k", 12_500.0)], traj) != []
+    assert perf_gate.compare([_row("k", 11_900.0)], traj) == []
+
+
+def test_cross_platform_rows_are_not_compared():
+    traj = _trajectory(_entry(BASE))
+    tpu = [_row("hist_smoke", 99_999.0, platform="tpu", device="v5e")]
+    assert perf_gate.compare(tpu, traj) == []
+    other_cpu = [_row("hist_smoke", 99_999.0, device="otherbox")]
+    assert perf_gate.compare(other_cpu, traj) == []
+
+
+def test_unknown_rows_pass_and_seed():
+    traj = _trajectory(_entry(BASE))
+    assert perf_gate.compare([_row("brand_new_kernel", 1e9)], traj) == []
+
+
+def test_smoke_entries_filtered_from_full_comparison():
+    traj = _trajectory(_entry([_row("k", 100.0)], smoke=True),
+                       _entry([_row("k", 50_000.0)], smoke=False))
+    row = [_row("k", 55_000.0)]
+    # against full-shape history only: +10%, passes
+    assert perf_gate.compare(row, traj, smoke=False) == []
+    # unfiltered it would be compared to the 100us smoke row
+    assert perf_gate.compare(row, traj, smoke=None) != []
+
+
+def test_noise_floor_absorbs_microsecond_jitter():
+    # 80% slower but only +40us absolute: scheduler noise, not a
+    # regression.  The floor never loosens ms-scale rows.
+    traj = _trajectory(_entry([_row("tiny", 50.0)]))
+    assert perf_gate.compare([_row("tiny", 90.0)], traj) == []
+    assert perf_gate.compare([_row("tiny", 400.0)], traj) != []
+    assert perf_gate.compare([_row("tiny", 90.0)], traj,
+                             noise_floor_us=0.0) != []
+
+
+def test_append_entry_adds_exactly_one():
+    traj = _trajectory(_entry(BASE))
+    perf_gate.append_entry(traj, BASE, smoke=True, note="pr-6")
+    assert len(traj["entries"]) == 2
+    new = traj["entries"][-1]
+    assert new["smoke"] is True and new["note"] == "pr-6"
+    assert new["platform"] == "cpu" and new["jax"] == "0.0-test"
+    assert new["rows"] == BASE and new["rows"] is not BASE
+
+
+def test_trajectory_file_round_trip(tmp_path):
+    path = str(tmp_path / "BENCH_kernels.json")
+    assert perf_gate.load_trajectory(path) == {"version": 1,
+                                               "entries": []}
+    traj = _trajectory(_entry(BASE))
+    perf_gate.save_trajectory(traj, path)
+    assert perf_gate.load_trajectory(path) == traj
+    with open(path, "w") as f:
+        json.dump({"version": 42}, f)
+    try:
+        perf_gate.load_trajectory(path)
+        assert False, "expected ValueError"
+    except ValueError as e:
+        assert "42" in str(e)
+
+
+def test_run_check_end_to_end(tmp_path):
+    """Full CLI body on synthetic files: a passing run appends one
+    entry, an injected 25% regression exits non-zero and appends
+    nothing."""
+    current = str(tmp_path / "current.json")
+    traj_path = str(tmp_path / "BENCH_kernels.json")
+
+    def write_current(rows):
+        with open(current, "w") as f:
+            json.dump({"meta": {**META, "smoke": True}, "rows": rows}, f)
+
+    write_current(BASE)
+    assert perf_gate.run_check(current_path=current,
+                               trajectory_path=traj_path) == 0
+    assert len(perf_gate.load_trajectory(traj_path)["entries"]) == 1
+
+    write_current([_row("hist_smoke", 10_100.0),
+                   _row("forest_fused_smoke", 8_200.0)])
+    assert perf_gate.run_check(current_path=current,
+                               trajectory_path=traj_path) == 0
+    assert len(perf_gate.load_trajectory(traj_path)["entries"]) == 2
+
+    write_current([_row("hist_smoke", 12_500.0),       # +25%
+                   _row("forest_fused_smoke", 8_000.0)])
+    assert perf_gate.run_check(current_path=current,
+                               trajectory_path=traj_path) == 1
+    assert len(perf_gate.load_trajectory(traj_path)["entries"]) == 2, \
+        "a failing run must not be recorded"

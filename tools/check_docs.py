@@ -57,6 +57,7 @@ REGISTRIES = [
     ("repro.core.latency", "LATENCY"),
     ("repro.serve.bundle", "BUNDLE_KINDS"),
     ("repro.serve.engine", "SCORERS"),
+    ("repro.kernels.autotune", "TUNABLES"),
 ]
 
 

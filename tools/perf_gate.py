@@ -1,0 +1,223 @@
+"""Kernel perf gate: compare a bench run against the repo-committed
+trajectory and fail CI on regressions.
+
+``BENCH_kernels.json`` at the repo root is the **perf trajectory**: a
+list of entries, one appended per PR (and per CI run of the
+``kernel-perf-smoke`` job), each holding the dict rows produced by
+``benchmarks/kernels_bench.py`` — every row carries ``platform`` /
+``device`` / ``jax`` metadata, so the gate only ever compares rows
+measured on the same platform+device and the same smoke/full shape set.
+
+Gate rule: for every current row whose ``name`` appears in
+same-platform trajectory rows, the current time must not exceed
+``max(best * (1 + threshold), best + noise_floor_us)`` where ``best``
+is the minimum recorded time, ``--threshold`` defaults to 20% and
+``--noise-floor-us`` to 250us.  The relative threshold is the actual
+gate on production-shape rows (ms scale); the absolute floor exists so
+micro-second smoke rows on shared CPU runners — where scheduler noise
+alone is tens of microseconds — don't flake the job.  Comparing
+against the best rather than the latest entry keeps one slow CI runner
+from ratcheting the baseline upward.  Rows with no same-platform
+history pass (and seed the trajectory for next time).
+If roofline dry-run artifacts exist (``benchmarks/roofline.py`` over
+``results/dryrun``), their bound times join the gated rows too.
+
+On a passing ``--check`` the run is appended as one new trajectory
+entry; on failure nothing is appended and the exit code is non-zero.
+
+Run:
+  PYTHONPATH=src python -m benchmarks.kernels_bench --smoke   # current run
+  PYTHONPATH=src python tools/perf_gate.py --check --smoke    # gate+append
+Library use (no timing): :func:`compare` / :func:`append_entry` over
+synthetic rows — see tests/test_perf_gate.py.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_TRAJECTORY = os.path.join(ROOT, "BENCH_kernels.json")
+DEFAULT_CURRENT = os.path.join(ROOT, "results", "kernels",
+                               "kernels_bench.json")
+DEFAULT_THRESHOLD = 0.20
+DEFAULT_NOISE_FLOOR_US = 250.0
+_VERSION = 1
+
+
+def load_trajectory(path: str = DEFAULT_TRAJECTORY) -> Dict:
+    """The trajectory file, or a fresh empty one if missing."""
+    if not os.path.exists(path):
+        return {"version": _VERSION, "entries": []}
+    with open(path) as f:
+        data = json.load(f)
+    if data.get("version") != _VERSION:
+        raise ValueError(f"{path}: trajectory version "
+                         f"{data.get('version')!r} != {_VERSION}")
+    return data
+
+
+def save_trajectory(data: Dict, path: str = DEFAULT_TRAJECTORY) -> str:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(data, f, indent=1)
+        f.write("\n")
+    os.replace(tmp, path)
+    return path
+
+
+def _same_platform(a: Dict, b: Dict) -> bool:
+    return (a.get("platform") == b.get("platform")
+            and a.get("device") == b.get("device"))
+
+
+def baselines(trajectory: Dict, row: Dict,
+              smoke: Optional[bool] = None) -> List[float]:
+    """All recorded times for this row's name on the same
+    platform+device (and, when given, the same smoke/full shape set)."""
+    out = []
+    for entry in trajectory.get("entries", []):
+        if smoke is not None and bool(entry.get("smoke")) != smoke:
+            continue
+        for old in entry.get("rows", []):
+            if old.get("name") == row.get("name") \
+                    and _same_platform(old, row):
+                out.append(float(old["us"]))
+    return out
+
+
+def compare(current_rows: List[Dict], trajectory: Dict, *,
+            threshold: float = DEFAULT_THRESHOLD,
+            noise_floor_us: float = DEFAULT_NOISE_FLOOR_US,
+            smoke: Optional[bool] = None) -> List[Tuple[str, str]]:
+    """Gate the current rows; returns [(row name, reason)] failures.
+
+    A row fails when its time exceeds the best same-platform recorded
+    time by more than ``threshold`` (0.20 = +20%) AND by more than
+    ``noise_floor_us`` absolute (scheduler jitter on shared runners is
+    tens of microseconds regardless of kernel size, so microsecond
+    smoke rows are only gated on absolute drift).  Rows without
+    same-platform history are skipped (they seed the trajectory)."""
+    failures = []
+    for row in current_rows:
+        base = baselines(trajectory, row, smoke=smoke)
+        if not base:
+            continue
+        best = min(base)
+        limit = max(best * (1.0 + threshold), best + noise_floor_us)
+        if float(row["us"]) > limit:
+            failures.append((
+                row["name"],
+                f"{row['us']:.1f}us > {limit:.1f}us "
+                f"(best {best:.1f}us +{threshold*100:.0f}% or "
+                f"+{noise_floor_us:.0f}us, "
+                f"{len(base)} same-platform baselines)"))
+    return failures
+
+
+def append_entry(trajectory: Dict, rows: List[Dict], *,
+                 smoke: bool = False, note: str = "") -> Dict:
+    """Append exactly one trajectory entry for this run (in place).
+
+    Entry-level platform metadata is lifted from the rows (they all
+    share it within one run)."""
+    meta = {k: rows[0][k] for k in ("platform", "device", "jax")} \
+        if rows else {}
+    trajectory.setdefault("entries", []).append(
+        {**meta, "smoke": bool(smoke), "note": note,
+         "rows": [dict(r) for r in rows]})
+    return trajectory
+
+
+def _roofline_rows() -> List[Dict]:
+    """Roofline bound times as gate rows (empty without dry-run
+    artifacts)."""
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    sys.path.insert(0, ROOT)
+    from benchmarks import kernels_bench, roofline
+    recs = roofline.load(os.path.join(ROOT, "results", "dryrun"),
+                         tag="baseline")
+    meta = kernels_bench.bench_meta()
+    return [{"name": name, "us": us, "note": note, **meta}
+            for (name, us, note) in roofline.csv_rows(recs)]
+
+
+def run_check(*, current_path: str = DEFAULT_CURRENT,
+              trajectory_path: str = DEFAULT_TRAJECTORY,
+              threshold: float = DEFAULT_THRESHOLD,
+              noise_floor_us: float = DEFAULT_NOISE_FLOOR_US,
+              smoke: bool = False,
+              append: bool = True, rerun: bool = False) -> int:
+    """The CLI body: load (or produce) the current rows, gate, append."""
+    sys.path.insert(0, ROOT)
+    if rerun or not os.path.exists(current_path):
+        from benchmarks import kernels_bench
+        rows = kernels_bench.run(smoke=smoke)
+        kernels_bench.save_rows(rows, current_path, smoke=smoke)
+    else:
+        with open(current_path) as f:
+            data = json.load(f)
+        rows = data["rows"]
+        smoke = bool(data.get("meta", {}).get("smoke", smoke))
+    rows = rows + _roofline_rows()
+    trajectory = load_trajectory(trajectory_path)
+    failures = compare(rows, trajectory, threshold=threshold,
+                       noise_floor_us=noise_floor_us, smoke=smoke)
+    for name, reason in failures:
+        print(f"REGRESSION  {name}: {reason}", file=sys.stderr)
+    n_hist = len(trajectory.get("entries", []))
+    if failures:
+        print(f"perf_gate: FAIL — {len(failures)}/{len(rows)} rows "
+              f"regressed >{threshold*100:.0f}% vs {n_hist} trajectory "
+              f"entries (nothing appended)")
+        return 1
+    if append:
+        append_entry(trajectory, rows, smoke=smoke)
+        save_trajectory(trajectory, trajectory_path)
+    print(f"perf_gate: ok — {len(rows)} rows within "
+          f"{threshold*100:.0f}% of best same-platform baselines "
+          f"({n_hist} prior entries"
+          f"{'; appended entry ' + str(n_hist + 1) if append else ''})")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--check", action="store_true",
+                    help="gate the current run against the trajectory")
+    ap.add_argument("--smoke", action="store_true",
+                    help="smoke shape set (CI); used when rerunning and "
+                    "to select comparable trajectory entries")
+    ap.add_argument("--current", default=DEFAULT_CURRENT,
+                    help="current-run JSON from kernels_bench (rerun "
+                    "in-process if missing)")
+    ap.add_argument("--bench", default=DEFAULT_TRAJECTORY,
+                    help="trajectory file (default repo-root "
+                    "BENCH_kernels.json)")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="allowed slowdown vs best baseline (0.2 = +20%%)")
+    ap.add_argument("--noise-floor-us", type=float,
+                    default=DEFAULT_NOISE_FLOOR_US,
+                    help="absolute slack absorbing scheduler jitter on "
+                    "microsecond-scale rows")
+    ap.add_argument("--no-append", action="store_true",
+                    help="gate only; do not record this run")
+    ap.add_argument("--rerun", action="store_true",
+                    help="re-time via kernels_bench even if --current "
+                    "exists")
+    args = ap.parse_args()
+    if not args.check:
+        ap.error("nothing to do: pass --check")
+    return run_check(current_path=args.current,
+                     trajectory_path=args.bench,
+                     threshold=args.threshold,
+                     noise_floor_us=args.noise_floor_us,
+                     smoke=args.smoke,
+                     append=not args.no_append, rerun=args.rerun)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
