@@ -18,6 +18,18 @@ Run standalone:  PYTHONPATH=src python -m benchmarks.serve_bench
 Parity gate:     PYTHONPATH=src python -m benchmarks.serve_bench --smoke
 (the CI serve-smoke job; exits non-zero if the kernel, the bucketed
 engine, or a bundle round-trip drifts from its reference).
+
+QPS sweep:       PYTHONPATH=src python -m benchmarks.serve_bench --load
+drives the trace-driven load engine (``repro.serve.load``) over the
+Framingham 4-model ensemble: per-bucket service times are calibrated
+by measuring ``engine.score``, then a Poisson offered-rate ladder is
+simulated on the calibrated table and the **max-sustainable-QPS**
+(highest offered rate with p99 under the deadline, zero rejections)
+plus the p99 at the highest sustained point become perf-gate rows in
+``results/serve_load/serve_load_gate.json`` — gated and appended to
+the repo-root ``BENCH_serve_load.json`` trajectory by
+``tools/perf_gate.py --check --current
+results/serve_load/serve_load_gate.json --bench BENCH_serve_load.json``.
 """
 from __future__ import annotations
 
@@ -101,6 +113,64 @@ def _kernel_rows():
                      f"trees=128;depth=8;rows=4096;"
                      f"rows_per_s={thr:.0f}"))
     return rows, stats
+
+
+def load_sweep(*, n_requests: int = 30_000, deadline: float = None,
+               out: str = "results/serve_load/load_bench.json",
+               gate_out: str = "results/serve_load/serve_load_gate.json"):
+    """QPS sweep on the 4-model ensemble (the paper's deployment
+    shape): measure per-bucket service medians on the real engine,
+    then ladder offered Poisson rates through the load engine on the
+    calibrated table.  Returns (printable rows, gate rows)."""
+    from benchmarks.kernels_bench import bench_meta
+    from repro.serve.load import (LoadConfig, calibrate_service,
+                                  qps_sweep, save_rows, sweep_rates)
+
+    bundles, (xt, _) = train_smoke_bundles(seed=0, n_records=1200)
+    engine = ScoringEngine(list(bundles.values()), bucket_sizes=BUCKETS)
+    engine.warmup(xt.shape[1])
+    svc = calibrate_service(engine, xt.shape[1])
+    full_s = svc.table[BUCKETS[-1]]
+    capacity = BUCKETS[-1] / full_s           # rows/s at full batches
+    if deadline is None:
+        # generous relative budget: ten full-batch service times (but
+        # at least 50 ms) — saturation, not jitter, should break it
+        deadline = max(10.0 * full_s, 0.05)
+    cfg = LoadConfig(n_requests=n_requests, rows=1, bucket_sizes=BUCKETS,
+                     max_wait=full_s, max_queue=8 * BUCKETS[-1],
+                     deadline=deadline, service=svc, seed=0)
+    sweep, max_qps = qps_sweep(cfg, sweep_rates(capacity, n=10))
+    meta = bench_meta()
+    save_rows(sweep, out, meta={**meta, "mode": "ensemble4_sweep",
+                                "capacity_qps": capacity,
+                                "deadline_s": deadline,
+                                "service_table": svc.table,
+                                "max_sustainable_qps": max_qps})
+    gate = []
+    if max_qps is not None:
+        gate.append({"name": "serve_load/ensemble4/max_qps",
+                     "us": 1e6 / max_qps,
+                     "note": f"max_qps={max_qps:.0f};"
+                             f"deadline_ms={deadline * 1e3:.0f};"
+                             f"capacity_qps={capacity:.0f}", **meta})
+        top = [r for r in sweep if r["sustainable"]][-1]
+        gate.append({"name": "serve_load/ensemble4/p99_sustained",
+                     "us": top["p99_ms"] * 1e3,
+                     "note": f"offered_qps={top['offered_qps']:.0f};"
+                             f"occupancy={top['mean_occupancy']:.2f}",
+                     **meta})
+    with open(gate_out, "w") as f:
+        json.dump({"meta": {**meta, "smoke": False}, "rows": gate}, f,
+                  indent=1)
+        f.write("\n")
+    rows = [(r2["name"], r2["us"], r2["note"]) for r2 in gate]
+    rows += [(f"serve_load/ensemble4/offered{r['offered_qps']:.0f}",
+              r["p99_ms"] * 1e3,
+              f"achieved_qps={r['achieved_qps']:.0f};"
+              f"miss={r['deadline_miss_rate']:.3f};"
+              f"occ={r['mean_occupancy']:.2f};"
+              f"sustainable={int(r['sustainable'])}") for r in sweep]
+    return rows, gate
 
 
 def run() -> list:
@@ -212,9 +282,18 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="fast CPU parity gate for CI; exits non-zero "
                     "on regressions")
+    ap.add_argument("--load", action="store_true",
+                    help="QPS sweep on the 4-model ensemble via the "
+                    "trace-driven load engine (writes perf-gate rows)")
     args = ap.parse_args()
     if args.smoke:
         sys.exit(smoke())
+    if args.load:
+        rows, _ = load_sweep()
+        print("name,us,derived")
+        for r in rows:
+            print(f"{r[0]},{r[1]:.1f},{r[2]}")
+        sys.exit(0)
     print("name,us_per_request,derived")
     for r in run():
         print(f"{r[0]},{r[1]:.1f},{r[2]}")

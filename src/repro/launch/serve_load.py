@@ -1,0 +1,288 @@
+"""Serving load-engine driver: feed a ScoringEngine (or a virtual
+service model) from an arrival process and report load curves.
+
+The CLI face of ``repro.serve.load`` (docs/ARCHITECTURE.md §Serving).
+Three ways to run it:
+
+Single trace (virtual — no models, no jit; pure simulation)::
+
+  PYTHONPATH=src python -m repro.launch.serve_load \\
+      --arrivals poisson:2000 --requests 5000 --service affine:0.001:0.00001 \\
+      --max-wait 0.002 --deadline 0.05
+
+QPS sweep on a real exported bundle (service times calibrated by
+measuring ``engine.score`` per padding bucket, then simulated on the
+measured table so the sweep itself is replayable)::
+
+  PYTHONPATH=src python -m repro.launch.serve_load \\
+      --bundle results/serve/smoke/fed_hist --sweep --deadline 0.05
+
+CI gate (the ``serve-load-smoke`` job)::
+
+  PYTHONPATH=src python -m repro.launch.serve_load --smoke
+
+``--smoke`` is virtual-only: it sweeps all three arrival families
+through the queue, asserts the queue invariants (work conservation,
+FIFO batches, bounded occupancy, deadline consistency), replays every
+run twice and fails unless the summary rows are **byte-identical**
+(the determinism gate), then writes deterministic gate rows to
+``results/serve_load/serve_load_gate.json`` for
+``tools/perf_gate.py --check --smoke --current
+results/serve_load/serve_load_gate.json --bench BENCH_serve_load.json``.
+
+Summary rows land in ``results/serve_load/load_bench.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import numpy as np
+
+from repro.serve import bundle as B
+from repro.serve.engine import ScoringEngine
+from repro.serve.load import (LoadConfig, calibrate_service, qps_sweep,
+                              save_rows, simulate_load, sweep_rates)
+
+OUT = "results/serve_load/load_bench.json"
+GATE_OUT = "results/serve_load/serve_load_gate.json"
+
+
+def _bench_meta() -> dict:
+    from benchmarks.kernels_bench import bench_meta
+    return bench_meta()
+
+
+def _gate_row(name: str, us: float, note: str, meta: dict) -> dict:
+    return {"name": name, "us": float(us), "note": note, **meta}
+
+
+def check_invariants(result) -> None:
+    """The queue contracts every run must satisfy (the same ones
+    tests/test_serve_load.py property-tests over random traces)."""
+    served = [r for r in result.records if not r["rejected"]]
+    # work conservation: every admitted request is scored exactly once
+    assert all(r["t_done"] is not None for r in served), \
+        "admitted request never completed"
+    assert sum(b["n_requests"] for b in result.batches) == len(served), \
+        "batch membership != admitted count"
+    # FIFO: batches serve admitted requests in arrival order
+    order = []
+    for r in result.records:
+        if not r["rejected"]:
+            order.append(r["id"])
+    start_of = {r["id"]: r["t_start"] for r in served}
+    starts = [start_of[i] for i in order]
+    assert all(a <= b for a, b in zip(starts, starts[1:])), \
+        "batch starts out of FIFO order"
+    for b in result.batches:
+        assert 0 < b["rows"] <= b["bucket"], "batch overflows its bucket"
+        assert 0.0 < b["occupancy"] <= 1.0, "occupancy out of (0, 1]"
+
+
+def run_single(args, engine=None, features=None) -> dict:
+    cfg = LoadConfig(arrivals=args.arrivals, n_requests=args.requests,
+                     rows=args.rows,
+                     bucket_sizes=tuple(int(b) for b in
+                                        args.bucket_sizes.split(",")),
+                     max_wait=args.max_wait, max_queue=args.max_queue,
+                     deadline=args.deadline, service=args.service,
+                     seed=args.seed)
+    res = simulate_load(cfg, engine=engine, features=features)
+    check_invariants(res)
+    return res.row
+
+
+def _load_engine(args):
+    """Build the engine + feature stream for --bundle runs."""
+    from repro.data import framingham as F
+    bundles = [B.load_bundle(p) for p in args.bundle.split(",")]
+    buckets = tuple(int(b) for b in args.bucket_sizes.split(","))
+    engine = ScoringEngine(bundles, bucket_sizes=buckets, impl=args.impl)
+    feats = F.synthesize(n=max(buckets[-1] * 4, 1024),
+                         seed=args.seed + 1).x
+    engine.warmup(feats.shape[1])
+    return engine, feats
+
+
+def run_sweep(args) -> int:
+    """Calibrated QPS sweep on a real bundle (or --service model):
+    finds max-sustainable-QPS and writes the rows."""
+    engine = features = None
+    if args.bundle:
+        engine, features = _load_engine(args)
+        svc = calibrate_service(engine, features.shape[1])
+        engine.reset_stats()
+    else:
+        from repro.serve.load import get_service
+        svc = get_service(args.service, args.seed)
+    buckets = tuple(int(b) for b in args.bucket_sizes.split(","))
+    full_s = svc(buckets[-1], buckets[-1], 0)
+    capacity = buckets[-1] / full_s
+    deadline = args.deadline if args.deadline is not None \
+        else max(10 * full_s, 0.05)
+    cfg = LoadConfig(n_requests=args.requests, rows=args.rows,
+                     bucket_sizes=buckets, max_wait=args.max_wait,
+                     max_queue=args.max_queue, deadline=deadline,
+                     service=svc, seed=args.seed)
+    rows, max_qps = qps_sweep(cfg, sweep_rates(capacity), engine=None)
+    save_rows(rows, args.out, meta={**_bench_meta(),
+                                    "mode": "sweep",
+                                    "capacity_qps": capacity,
+                                    "max_sustainable_qps": max_qps})
+    for r in rows:
+        mark = "ok " if r["sustainable"] else "SAT"
+        print(f"  {mark} offered={r['offered_qps']:>10.0f}/s "
+              f"achieved={r['achieved_qps']:>10.0f}/s "
+              f"p99={r['p99_ms']:8.2f}ms miss={r['deadline_miss_rate']:.3f} "
+              f"occ={r['mean_occupancy']:.2f}")
+    print(f"max sustainable QPS (p99 <= {deadline * 1e3:.0f}ms): "
+          f"{max_qps if max_qps is not None else 'none'} "
+          f"(capacity ~{capacity:.0f}/s)")
+    return 0 if max_qps is not None else 1
+
+
+def smoke() -> int:
+    """Virtual-only CI gate: invariants + byte-identical replays over
+    all three arrival families, then deterministic perf-gate rows."""
+    failures = []
+
+    def check(name, fn):
+        try:
+            fn()
+            print(f"  ok   {name}")
+        except Exception as e:  # noqa: BLE001 — report all, then fail
+            failures.append((name, e))
+            print(f"  FAIL {name}: {e}")
+
+    base = LoadConfig(n_requests=2000, rows=1, bucket_sizes=(16, 64),
+                      max_wait=0.002, max_queue=256, deadline=0.05,
+                      service="affine:0.0005:0.000005", seed=0)
+    specs = {
+        "poisson": "poisson:20000",
+        "bursty": "bursty:20000:32:0.25",
+    }
+    rows = []
+
+    def families_deterministic():
+        import dataclasses
+        for fam, spec in sorted(specs.items()):
+            cfg = dataclasses.replace(base, arrivals=spec)
+            a = simulate_load(cfg)
+            check_invariants(a)
+            b = simulate_load(cfg)
+            sa = json.dumps(a.row, sort_keys=True)
+            sb = json.dumps(b.row, sort_keys=True)
+            assert sa == sb, f"{fam}: two identical-seed runs differ"
+            rows.append(a.row)
+
+    def trace_replay_deterministic():
+        import dataclasses
+        import os
+        import tempfile
+        # a short recorded-gap trace, cycled over 500 requests
+        gaps = np.full(64, 1.0 / 20000.0)
+        gaps[::8] = 4.0 / 20000.0      # periodic lulls
+        fd, path = tempfile.mkstemp(suffix=".json")
+        with os.fdopen(fd, "w") as f:
+            json.dump(list(gaps), f)
+        try:
+            cfg = dataclasses.replace(base, arrivals=f"trace:{path}",
+                                      n_requests=500)
+            a = simulate_load(cfg)
+            check_invariants(a)
+            b = simulate_load(cfg)
+            assert json.dumps(a.row, sort_keys=True) == \
+                json.dumps(b.row, sort_keys=True), \
+                "trace replay differs between identical runs"
+            rows.append(a.row)
+        finally:
+            os.unlink(path)
+
+    def sweep_finds_saturation():
+        cap = base.bucket_sizes[-1] / (0.0005 + 0.000005 * 64)
+        srows, max_qps = qps_sweep(base, sweep_rates(cap, n=8))
+        assert max_qps is not None, "no sustainable rate found"
+        assert any(not r["sustainable"] for r in srows), \
+            "ladder never saturated — sweep range too low"
+        # deterministic gate rows: simulated scheduling perf; any
+        # batching-policy regression moves these
+        meta = {**_bench_meta(), "sim": "virtual"}
+        gate = [
+            _gate_row("serve_load_sim/max_qps", 1e6 / max_qps,
+                      f"max_qps={max_qps:.0f};deadline_ms=50", meta),
+        ]
+        mid = [r for r in srows if r["sustainable"]]
+        gate.append(_gate_row(
+            "serve_load_sim/p99_sustained",
+            mid[-1]["p99_ms"] * 1e3,
+            f"offered_qps={mid[-1]['offered_qps']:.0f}", meta))
+        with open(GATE_OUT, "w") as f:
+            json.dump({"meta": {**meta, "smoke": True}, "rows": gate}, f,
+                      indent=1)
+            f.write("\n")
+        rows.extend(srows)
+
+    print("serve_load --smoke (virtual determinism gate)")
+    import os
+    os.makedirs(os.path.dirname(GATE_OUT), exist_ok=True)
+    check("arrival families: invariants + byte-identical replay",
+          families_deterministic)
+    check("trace file replay deterministic", trace_replay_deterministic)
+    check("virtual QPS sweep saturates + gate rows",
+          sweep_finds_saturation)
+    save_rows(rows, OUT, meta={**_bench_meta(), "mode": "smoke"})
+    print(f"serve_load --smoke: {len(failures)} failures "
+          f"({len(rows)} rows -> {OUT})")
+    return 1 if failures else 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="trace-driven load engine over the scoring engine")
+    ap.add_argument("--arrivals", default="poisson:2000",
+                    help="arrival process spec (poisson:rate | "
+                    "bursty:rate:burst:duty | trace:file)")
+    ap.add_argument("--service", default="affine:0.001:0.00001",
+                    help="service-time model (constant:t | "
+                    "affine:base:per_row | measured)")
+    ap.add_argument("--requests", type=int, default=5000)
+    ap.add_argument("--rows", default="1",
+                    help="rows per request: int or uniform:lo:hi")
+    ap.add_argument("--bucket-sizes", default="64,256,1024")
+    ap.add_argument("--max-wait", type=float, default=0.002,
+                    help="continuous-batching timeout on the head "
+                    "request (virtual seconds)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="admission control: max waiting requests")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request latency budget (seconds)")
+    ap.add_argument("--bundle", default=None,
+                    help="exported bundle dir(s), comma-separated — "
+                    "service times calibrated from the real engine")
+    ap.add_argument("--impl", default="auto")
+    ap.add_argument("--sweep", action="store_true",
+                    help="QPS ladder -> max-sustainable-QPS")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=OUT)
+    ap.add_argument("--smoke", action="store_true",
+                    help="virtual-only CI gate: invariants + "
+                    "determinism + perf-gate rows")
+    args = ap.parse_args()
+    if args.smoke:
+        return smoke()
+    if args.sweep:
+        return run_sweep(args)
+    engine = features = None
+    if args.bundle:
+        engine, features = _load_engine(args)
+        args.service = "measured"
+    row = run_single(args, engine=engine, features=features)
+    save_rows([row], args.out, meta={**_bench_meta(), "mode": "single"})
+    print(json.dumps(row, indent=1, sort_keys=True))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,3 +1,6 @@
 from repro.serve.bundle import (BUNDLE_KINDS, ModelBundle, load_bundle,  # noqa: F401
                                 pack, save_bundle)
 from repro.serve.engine import ScoringEngine, fit_platt  # noqa: F401
+from repro.serve.load import (ARRIVALS, SERVICE, LoadConfig,  # noqa: F401
+                              calibrate_service, get_arrivals,
+                              get_service, qps_sweep, simulate_load)

@@ -257,6 +257,7 @@ class ScoringEngine:
         self.calibration: Optional[Tuple[float, float]] = None
         self.latencies_s: List[float] = []
         self.rows_scored = 0
+        self.bucket_calls: Dict[int, int] = {}
         self.fused = bool(fused)
         self.quantize = quantize
         wj = jnp.asarray(self.weights)
@@ -344,6 +345,8 @@ class ScoringEngine:
             pad = bucket - len(chunk)
             if pad:
                 chunk = np.pad(chunk, ((0, pad), (0, 0)))
+            self.bucket_calls[bucket] = self.bucket_calls.get(bucket,
+                                                              0) + 1
             probs = self._score_chunk(chunk)
             out[i:i + bucket - pad] = probs[:bucket - pad]
         if self.calibration is not None and not self.fused:
@@ -371,20 +374,28 @@ class ScoringEngine:
         for b in self.buckets:
             self._score_chunk(jnp.zeros((b, n_features), jnp.float32))
 
-    def stats(self) -> Dict[str, float]:
-        """Throughput + latency percentiles over recorded score() calls."""
+    def stats(self) -> Dict:
+        """Throughput + latency percentiles over recorded score()
+        calls, plus per-bucket call counts (which padding buckets the
+        load actually hits).  Guarded for the empty window and for a
+        zero recorded duration (coarse clocks / zero-row calls):
+        ``rows_per_s`` is 0.0, never a division error or inf."""
         lat = np.asarray(self.latencies_s, np.float64)
         if lat.size == 0:
             return {"calls": 0, "rows": 0, "rows_per_s": 0.0,
-                    "p50_ms": 0.0, "p99_ms": 0.0}
+                    "p50_ms": 0.0, "p99_ms": 0.0, "bucket_calls": {}}
+        total = float(lat.sum())
         return {
             "calls": int(lat.size),
             "rows": int(self.rows_scored),
-            "rows_per_s": self.rows_scored / float(lat.sum()),
+            "rows_per_s": (self.rows_scored / total if total > 0.0
+                           else 0.0),
             "p50_ms": float(np.percentile(lat, 50) * 1e3),
             "p99_ms": float(np.percentile(lat, 99) * 1e3),
+            "bucket_calls": dict(self.bucket_calls),
         }
 
     def reset_stats(self) -> None:
         self.latencies_s = []
         self.rows_scored = 0
+        self.bucket_calls = {}

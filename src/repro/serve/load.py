@@ -1,0 +1,579 @@
+"""Trace-driven serving load engine: request queue, continuous
+batching, deadline accounting — on a deterministic virtual clock.
+
+``repro.serve.engine.ScoringEngine`` measures single-batch latency;
+this module measures the engine *under load* (ROADMAP open item 2 —
+the "millions of users" story is saturation throughput, not one
+batch's p50).  It reuses the repo's discrete-event conventions: the
+virtual-clock event loop is the same deterministic pattern as
+``FedRuntime._run_async`` (``repro.core.runtime``), and arrival
+processes live in an :data:`ARRIVALS` registry shaped exactly like
+``repro.core.latency.LATENCY`` — spec strings with colon-separated
+parameters, resolved by :func:`get_arrivals`.
+
+The simulation is a **pure function of (config, seed)**: arrivals and
+request sizes are drawn from seeded generators, service times come from
+a deterministic model (or from real ``engine.score`` wall-clock when
+you want measured numbers), and every event is processed in a total
+order — so a fixed spec + seed replays the identical per-request
+records and summary row byte for byte.  That is what makes the CI
+determinism gate (``launch/serve_load.py --smoke``) and the golden
+load snapshot (``tools/refresh_golden.py``) possible.
+
+**Arrival processes** (:data:`ARRIVALS`, spec ``name[:arg...]``)::
+
+    poisson:500            memoryless arrivals at 500 req/s
+    bursty:500:32:0.2      mean 500 req/s in bursts of 32 requests;
+                           within a burst the instantaneous rate is
+                           rate/duty (here 2500/s), bursts are spaced
+                           so the long-run mean stays `rate`
+    trace:gaps.json        replay recorded inter-arrival gaps (JSON
+                           list of seconds, cycled; or {"gaps": [...]})
+
+**Service-time models** (:data:`SERVICE`, spec ``name[:arg...]``)::
+
+    constant:0.002         every batch takes 2 ms
+    affine:0.001:0.00001   base + per_row * padded-bucket-rows (the
+                           engine pads to a bucket, so cost scales
+                           with the bucket, not the raw batch)
+    measured               time a real engine.score() call per batch
+                           (requires engine= and features=)
+
+plus :func:`calibrate_service` — measure per-bucket ``score()``
+medians on a real engine once, then run the sweep virtually on the
+calibrated table (reproducible *and* grounded in real timings).
+
+**Continuous batch formation** (the queue's state machine, documented
+in docs/ARCHITECTURE.md §Serving): admitted requests enter a FIFO
+queue; whenever the single server is free, the head-of-queue batch
+closes as soon as any of these holds —
+
+* the batch reaches the largest padding bucket (``max(bucket_sizes)``),
+* the next queued request no longer fits (the batch cannot grow),
+* the head request has waited ``max_wait`` virtual seconds,
+* no future arrivals exist (drain).
+
+Otherwise the server idles until the earlier of (next arrival, head
+timeout).  While the server is busy, arrivals keep queueing; on batch
+completion the conditions are re-evaluated immediately — that is the
+"continuous" in continuous batching.
+
+**Admission control**: with ``max_queue`` set, an arrival that finds
+``max_queue`` requests already waiting is rejected (recorded, never
+scored) instead of growing the queue without bound.
+
+**Deadline accounting**: per request, ``latency = t_done - t_arrive``
+(enqueue to batch completion); ``miss`` ⇔ ``latency > deadline``.
+Rejected requests are counted separately (``rejection_rate``), not as
+misses.
+
+Outputs: :class:`LoadResult` — per-request records, per-batch records,
+and one summary ``row`` (offered/achieved QPS, p50/p99 latency,
+deadline-miss rate, rejection rate, mean batch occupancy) written to
+``results/serve_load/load_bench.json`` by the CLI
+(``repro.launch.serve_load``).  :func:`qps_sweep` ladders offered
+rates and reports max-sustainable-QPS (highest offered rate whose p99
+stays under the deadline with zero rejections) — the row
+``benchmarks/serve_bench.py --load`` feeds the ``BENCH_serve_load.json``
+perf-gate trajectory (``tools/perf_gate.py``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from collections import deque
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+#: SeedSequence tag isolating load-engine draws from every other
+#: seeded stream in the repo (latency models use 0x1A7, the runtime
+#: 0xFED).
+_TAG = 0x10AD
+
+
+def _rng(seed: int, comp: int) -> np.random.Generator:
+    return np.random.default_rng([int(seed), _TAG, comp])
+
+
+# --- arrival processes --------------------------------------------------------
+
+@dataclass(frozen=True)
+class ArrivalProcess:
+    """A named arrival process: ``times(n)`` returns the n absolute
+    (virtual-second) arrival times, deterministic in the construction
+    seed.  The first n draws are a prefix of any longer run, so the
+    same seed yields consistent traces across request counts."""
+    name: str
+    gaps_fn: Callable[[int], np.ndarray]
+
+    def gaps(self, n: int) -> np.ndarray:
+        g = np.asarray(self.gaps_fn(int(n)), np.float64)
+        if g.shape != (n,):
+            raise ValueError(f"arrival model {self.name!r} returned "
+                             f"shape {g.shape}, wanted ({n},)")
+        return g
+
+    def times(self, n: int) -> np.ndarray:
+        return np.cumsum(self.gaps(n))
+
+
+def _poisson(rate):
+    rate = float(rate)
+    if rate <= 0:
+        raise ValueError(f"poisson rate must be > 0, got {rate}")
+
+    def make(seed: int) -> Callable[[int], np.ndarray]:
+        return lambda n: _rng(seed, 1).exponential(1.0 / rate, size=n)
+    return make
+
+
+def _bursty(rate, burst, duty):
+    """ON/OFF arrivals: requests come in bursts of ``burst``; within a
+    burst the instantaneous rate is ``rate / duty`` and each burst's
+    leading gap absorbs the OFF period, so the long-run mean rate is
+    exactly ``rate``."""
+    rate, burst, duty = float(rate), int(float(burst)), float(duty)
+    if rate <= 0 or burst < 1 or not 0.0 < duty <= 1.0:
+        raise ValueError(f"bursty needs rate>0, burst>=1, 0<duty<=1 "
+                         f"(got rate={rate}, burst={burst}, duty={duty})")
+    within = duty / rate                      # mean gap inside a burst
+    lead = within + (1.0 - duty) * burst / rate   # burst-leading gap
+
+    def make(seed: int) -> Callable[[int], np.ndarray]:
+        def gaps(n):
+            means = np.where(np.arange(n) % burst == 0, lead, within)
+            return _rng(seed, 2).exponential(1.0, size=n) * means
+        return gaps
+    return make
+
+
+def _arrival_trace(path: str):
+    """Replay recorded inter-arrival gaps: a JSON list of seconds (or
+    ``{"gaps": [...]}``), cycled when the run is longer than the
+    trace."""
+    with open(path) as f:
+        data = json.load(f)
+    raw = data.get("gaps") if isinstance(data, dict) else data
+    if not raw:
+        raise ValueError(f"arrival trace {path!r} is empty")
+    gaps = np.asarray([float(g) for g in raw], np.float64)
+    if np.any(gaps < 0):
+        raise ValueError(f"arrival trace {path!r} has negative gaps")
+
+    def make(seed: int) -> Callable[[int], np.ndarray]:
+        return lambda n: np.resize(gaps, n)
+    return make
+
+
+#: arrival model name -> factory(*args) -> (seed) -> gaps(n).
+#: Resolved via :func:`get_arrivals` spec strings
+#: ("poisson:500", "bursty:500:32:0.2", "trace:gaps.json").
+ARRIVALS: Dict[str, Callable] = {
+    "poisson": _poisson,
+    "bursty": _bursty,
+    "trace": _arrival_trace,
+}
+
+
+def get_arrivals(spec, seed: int = 0) -> ArrivalProcess:
+    """Resolve an arrival process from a spec string (or pass one
+    through)."""
+    if isinstance(spec, ArrivalProcess):
+        return spec
+    tokens = str(spec).strip().split(":")
+    name, args = tokens[0], tokens[1:]
+    if name not in ARRIVALS:
+        raise KeyError(f"unknown arrival process {spec!r}; available: "
+                       f"{sorted(ARRIVALS)} (spec: name[:arg...])")
+    coerced = args if name == "trace" else [float(a) for a in args]
+    try:
+        return ArrivalProcess(str(spec), ARRIVALS[name](*coerced)(seed))
+    except TypeError as e:
+        raise ValueError(f"bad arrival spec {spec!r}: {e}") from e
+
+
+# --- service-time models ------------------------------------------------------
+
+def _svc_constant(t=0.001):
+    t = float(t)
+    if t <= 0:
+        raise ValueError(f"constant service time must be > 0, got {t}")
+
+    def make(seed, engine, features):
+        return lambda rows, bucket, b_idx: t
+    return make
+
+
+def _svc_affine(base, per_row):
+    """``base + per_row * bucket`` seconds per batch: the engine pads
+    every batch to its bucket, so compute scales with the *padded*
+    rows."""
+    base, per_row = float(base), float(per_row)
+    if base < 0 or per_row < 0 or base + per_row <= 0:
+        raise ValueError(f"affine service needs non-negative base/"
+                         f"per_row with a positive sum (got {base}, "
+                         f"{per_row})")
+
+    def make(seed, engine, features):
+        return lambda rows, bucket, b_idx: base + per_row * bucket
+    return make
+
+
+def _svc_measured():
+    """Real wall-clock of ``engine.score`` on ``rows`` feature rows —
+    the batch is actually scored, so measured runs exercise the full
+    jitted path (and are *not* replayable byte-for-byte; use
+    :func:`calibrate_service` for reproducible grounded sweeps)."""
+    def make(seed, engine, features):
+        if engine is None or features is None:
+            raise ValueError("service 'measured' needs a ScoringEngine "
+                             "and a feature matrix (engine=, features=)")
+        feats = np.asarray(features, np.float32)
+
+        def service(rows, bucket, b_idx):
+            lo = (b_idx * bucket) % max(len(feats) - rows, 1)
+            t0 = time.perf_counter()
+            engine.score(feats[lo:lo + rows])
+            return time.perf_counter() - t0
+        return service
+    return make
+
+
+#: service model name -> factory(*args) -> (seed, engine, features)
+#: -> service(batch_rows, bucket, batch_idx) -> seconds.
+SERVICE: Dict[str, Callable] = {
+    "constant": _svc_constant,
+    "affine": _svc_affine,
+    "measured": _svc_measured,
+}
+
+
+def get_service(spec, seed: int = 0, engine=None, features=None
+                ) -> Callable[[int, int, int], float]:
+    """Resolve a service-time model from a spec string; callables pass
+    through (the :func:`calibrate_service` / :func:`table_service`
+    path)."""
+    if callable(spec):
+        return spec
+    tokens = str(spec).strip().split(":")
+    name, args = tokens[0], tokens[1:]
+    if name not in SERVICE:
+        raise KeyError(f"unknown service model {spec!r}; available: "
+                       f"{sorted(SERVICE)} (spec: name[:arg...])")
+    try:
+        return SERVICE[name](*[float(a) for a in args])(seed, engine,
+                                                        features)
+    except TypeError as e:
+        raise ValueError(f"bad service spec {spec!r}: {e}") from e
+
+
+def table_service(table: Dict[int, float]
+                  ) -> Callable[[int, int, int], float]:
+    """Deterministic per-bucket service times from a measured table
+    (``{bucket: seconds}``); unknown buckets use the largest entry."""
+    tab = {int(b): float(s) for b, s in table.items()}
+    if not tab or any(s <= 0 for s in tab.values()):
+        raise ValueError(f"bad service table {table!r}")
+    top = tab[max(tab)]
+
+    def service(rows, bucket, b_idx):
+        return tab.get(bucket, top)
+    service.table = tab  # introspectable (bench rows report it)
+    return service
+
+
+def calibrate_service(engine, n_features: int, reps: int = 5
+                      ) -> Callable[[int, int, int], float]:
+    """Measure per-bucket ``engine.score`` wall-clock medians once and
+    return a :func:`table_service` over them: sweeps run virtually
+    (replayable) on real measured costs."""
+    table = {}
+    for b in engine.buckets:
+        x = np.zeros((b, n_features), np.float32)
+        engine.score(x)                        # compile / warm
+        ts = []
+        for _ in range(int(reps)):
+            t0 = time.perf_counter()
+            engine.score(x)
+            ts.append(time.perf_counter() - t0)
+        table[b] = float(np.median(ts))
+    return table_service(table)
+
+
+# --- request sizes ------------------------------------------------------------
+
+def _request_rows(spec, seed: int, n: int, bucket_max: int) -> np.ndarray:
+    """Per-request row counts: an int (every request carries that many
+    rows) or ``uniform:lo:hi`` (seeded per-run draw).  Clamped to the
+    largest bucket so every request fits in some batch."""
+    try:
+        k = int(spec)
+    except (TypeError, ValueError):
+        tokens = str(spec).split(":")
+        if tokens[0] != "uniform" or len(tokens) != 3:
+            raise ValueError(f"bad request-rows spec {spec!r} "
+                             f"(int or uniform:lo:hi)")
+        lo, hi = int(tokens[1]), int(tokens[2])
+        if not 1 <= lo <= hi:
+            raise ValueError(f"bad uniform rows bounds {spec!r}")
+        draw = _rng(seed, 3).integers(lo, hi + 1, size=n)
+        return np.minimum(draw, bucket_max).astype(np.int64)
+    if k < 1:
+        raise ValueError(f"request rows must be >= 1, got {k}")
+    return np.full(n, min(k, bucket_max), np.int64)
+
+
+# --- the load engine ----------------------------------------------------------
+
+@dataclass
+class LoadConfig:
+    """One load run.  ``arrivals`` / ``service`` take registry spec
+    strings (:data:`ARRIVALS` / :data:`SERVICE`) or prebuilt objects;
+    ``rows`` is the per-request row-count spec (int or
+    ``uniform:lo:hi``).  ``max_wait`` is the continuous-batching
+    timeout on the head request's queue age; ``max_queue`` bounds the
+    waiting queue (None = no admission control); ``deadline`` is the
+    per-request enqueue→completion budget (None = no deadline
+    accounting)."""
+    arrivals: Any = "poisson:500"
+    n_requests: int = 1000
+    rows: Any = 1
+    bucket_sizes: Sequence[int] = (64, 256, 1024)
+    max_wait: float = 0.002
+    max_queue: Optional[int] = None
+    deadline: Optional[float] = None
+    service: Any = "constant:0.001"
+    seed: int = 0
+
+
+@dataclass
+class LoadResult:
+    """One run's full output: the summary ``row`` (what lands in
+    ``results/serve_load/load_bench.json``), per-request ``records``
+    (arrival/start/done stamps, latency, miss/rejected flags), and
+    per-batch ``batches`` (rows, bucket, occupancy)."""
+    row: Dict
+    records: List[Dict]
+    batches: List[Dict]
+
+
+def simulate_load(cfg: LoadConfig, engine=None, features=None
+                  ) -> LoadResult:
+    """Run one trace through the queue + continuous-batching state
+    machine on the virtual clock (module docstring).  With a virtual
+    ``service`` model no engine is needed and the result is a pure
+    function of (cfg, seed); with ``service='measured'`` the batches
+    are really scored through ``engine``."""
+    buckets = tuple(sorted(int(b) for b in cfg.bucket_sizes))
+    if not buckets or buckets[0] < 1:
+        raise ValueError(f"bad bucket_sizes {cfg.bucket_sizes!r}")
+    if cfg.max_wait < 0:
+        raise ValueError(f"max_wait must be >= 0, got {cfg.max_wait}")
+    if cfg.max_queue is not None and cfg.max_queue < 1:
+        raise ValueError(f"max_queue must be >= 1, got {cfg.max_queue}")
+    bmax = buckets[-1]
+    n = int(cfg.n_requests)
+    arrivals = get_arrivals(cfg.arrivals, cfg.seed)
+    times = arrivals.times(n)
+    req_rows = _request_rows(cfg.rows, cfg.seed, n, bmax)
+    service = get_service(cfg.service, cfg.seed, engine=engine,
+                          features=features)
+
+    INF = float("inf")
+    queue: deque = deque()         # admitted requests awaiting a batch
+    records: List[Dict] = []
+    batches: List[Dict] = []
+    in_flight: Optional[Tuple[List[Dict], Dict]] = None
+    done_t = INF
+    t = 0.0
+    i = 0                          # next arrival index
+
+    def bucket_for(rows: int) -> int:
+        for b in buckets:
+            if b >= rows:
+                return b
+        return bmax
+
+    def admit(idx: int) -> None:
+        rec = {"id": idx, "t_arrive": float(times[idx]),
+               "rows": int(req_rows[idx]), "rejected": False,
+               "t_start": None, "t_done": None, "latency": None,
+               "miss": False}
+        if cfg.max_queue is not None and len(queue) >= cfg.max_queue:
+            rec["rejected"] = True         # admission control: bounce
+        else:
+            queue.append(rec)
+        records.append(rec)
+
+    def batch_prefix() -> Tuple[int, int]:
+        """Longest FIFO prefix of the queue fitting the largest
+        bucket: (n_requests, total_rows)."""
+        total = k = 0
+        for rec in queue:
+            if total + rec["rows"] > bmax:
+                break
+            total += rec["rows"]
+            k += 1
+        return k, total
+
+    def start_batch(now: float) -> None:
+        nonlocal in_flight, done_t
+        k, total = batch_prefix()
+        batch = [queue.popleft() for _ in range(k)]
+        bucket = bucket_for(total)
+        for rec in batch:
+            rec["t_start"] = now
+        brec = {"t_start": now, "rows": total, "bucket": bucket,
+                "n_requests": k, "occupancy": total / bucket}
+        done_t = now + float(service(total, bucket, len(batches)))
+        in_flight = (batch, brec)
+
+    while i < n or queue or in_flight is not None:
+        t_arr = float(times[i]) if i < n else INF
+        if in_flight is not None:
+            # completion vs arrival; ties complete first (the server
+            # frees before the coincident arrival is considered)
+            if done_t <= t_arr:
+                t = done_t
+                batch, brec = in_flight
+                brec["t_done"] = t
+                batches.append(brec)
+                for rec in batch:
+                    rec["t_done"] = t
+                    rec["latency"] = t - rec["t_arrive"]
+                    rec["miss"] = (cfg.deadline is not None
+                                   and rec["latency"] > cfg.deadline)
+                in_flight, done_t = None, INF
+            else:
+                t = t_arr
+                admit(i)
+                i += 1
+            continue
+        if queue:
+            k, total = batch_prefix()
+            t_close = queue[0]["t_arrive"] + cfg.max_wait
+            if (total >= bmax          # largest padding bucket reached
+                    or k < len(queue)  # next request no longer fits
+                    or i >= n          # drain: nothing more will come
+                    or t >= t_close):  # head waited max_wait
+                start_batch(t)
+            elif t_arr <= t_close:
+                t = t_arr
+                admit(i)
+                i += 1
+            else:
+                t = t_close
+                start_batch(t)
+            continue
+        # idle server, empty queue: jump to the next arrival
+        t = t_arr
+        admit(i)
+        i += 1
+
+    return LoadResult(_summary(cfg, arrivals.name, records, batches,
+                               times),
+                      records, batches)
+
+
+def _summary(cfg: LoadConfig, arrivals_name: str, records: List[Dict],
+             batches: List[Dict], times: np.ndarray) -> Dict:
+    done = [r for r in records if r["t_done"] is not None]
+    rejected = sum(r["rejected"] for r in records)
+    lat = np.asarray([r["latency"] for r in done], np.float64)
+    wait = np.asarray([r["t_start"] - r["t_arrive"] for r in done],
+                      np.float64)
+    span = float(times[-1]) if len(times) else 0.0
+    makespan = max((b["t_done"] for b in batches), default=0.0)
+    row = {
+        "arrivals": arrivals_name,
+        "service": (str(cfg.service) if not callable(cfg.service)
+                    else "table:" + json.dumps(
+                        getattr(cfg.service, "table", {}), sort_keys=True)
+                    if getattr(cfg.service, "table", None)
+                    else "callable"),
+        "n_requests": len(records),
+        "bucket_sizes": list(int(b) for b in sorted(cfg.bucket_sizes)),
+        "max_wait": float(cfg.max_wait),
+        "max_queue": cfg.max_queue,
+        "deadline": cfg.deadline,
+        "seed": int(cfg.seed),
+        "offered_qps": len(records) / span if span > 0 else 0.0,
+        "achieved_qps": len(done) / makespan if makespan > 0 else 0.0,
+        "p50_ms": float(np.percentile(lat, 50) * 1e3) if lat.size
+        else 0.0,
+        "p99_ms": float(np.percentile(lat, 99) * 1e3) if lat.size
+        else 0.0,
+        "mean_wait_ms": float(wait.mean() * 1e3) if wait.size else 0.0,
+        "deadline_miss_rate": (float(np.mean([r["miss"] for r in done]))
+                               if done and cfg.deadline is not None
+                               else 0.0),
+        "rejection_rate": rejected / max(len(records), 1),
+        "mean_occupancy": (float(np.mean([b["occupancy"]
+                                          for b in batches]))
+                           if batches else 0.0),
+        "mean_batch_rows": (float(np.mean([b["rows"] for b in batches]))
+                            if batches else 0.0),
+        "n_batches": len(batches),
+    }
+    return row
+
+
+# --- QPS sweep ----------------------------------------------------------------
+
+def qps_sweep(cfg: LoadConfig, rates: Sequence[float], engine=None,
+              features=None, min_goodput: float = 0.95
+              ) -> Tuple[List[Dict], Optional[float]]:
+    """Ladder offered Poisson rates over one config; returns (rows,
+    max_sustainable_qps).  A rate is *sustainable* when its p99 stays
+    under the deadline, nothing is rejected, AND achieved ≥
+    ``min_goodput`` × offered — on a finite trace an over-capacity
+    rate shows up as a growing backlog (achieved < offered) well
+    before the backlog is deep enough to push p99 past the deadline,
+    so the throughput criterion is what catches early saturation.
+    Max-sustainable is the highest offered rate that passes (None if
+    none do)."""
+    if cfg.deadline is None:
+        raise ValueError("qps_sweep needs cfg.deadline to judge "
+                         "sustainability")
+    rows, best = [], None
+    for rate in rates:
+        c = replace(cfg, arrivals=f"poisson:{float(rate):g}")
+        row = simulate_load(c, engine=engine, features=features).row
+        ok = (row["p99_ms"] <= cfg.deadline * 1e3
+              and row["rejection_rate"] == 0.0
+              and row["achieved_qps"]
+              >= min_goodput * row["offered_qps"])
+        row["sustainable"] = bool(ok)
+        rows.append(row)
+        if ok:
+            best = max(best, float(rate)) if best is not None \
+                else float(rate)
+    return rows, best
+
+
+def sweep_rates(capacity_qps: float, n: int = 10, lo: float = 0.05,
+                hi: float = 1.25) -> List[float]:
+    """A geometric offered-rate ladder spanning [lo, hi] × capacity —
+    capacity being ``bucket_max / service(bucket_max)`` for the model
+    under test."""
+    if capacity_qps <= 0 or n < 2:
+        raise ValueError(f"bad sweep ladder ({capacity_qps}, {n})")
+    return [float(capacity_qps * lo * (hi / lo) ** (k / (n - 1)))
+            for k in range(n)]
+
+
+def save_rows(rows: List[Dict], path: str, meta: Optional[Dict] = None
+              ) -> str:
+    """Write summary rows (atomic, trailing newline — byte-stable for
+    the determinism gate)."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump({"meta": meta or {}, "rows": rows}, f, indent=1,
+                  sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)
+    return path

@@ -229,6 +229,65 @@ def test_calibration_monotone_and_improves_brier(artifacts):
     assert brier_score(cal, yt) <= brier_score(raw, yt) + 1e-6
 
 
+def _tiny_engine(n_features=5, bucket_sizes=(4, 16)):
+    """A jit-cheap engine (zero-weight logreg) for stats-path tests —
+    no training, no forest kernels, fast tier."""
+    bundle = B.pack("parametric",
+                    {"w": jnp.zeros((n_features,), jnp.float32),
+                     "b": jnp.zeros((), jnp.float32)}, model="logreg")
+    return ScoringEngine(bundle, bucket_sizes=bucket_sizes)
+
+
+def test_stats_empty_window_is_all_zeros():
+    st = _tiny_engine().stats()
+    assert st == {"calls": 0, "rows": 0, "rows_per_s": 0.0,
+                  "p50_ms": 0.0, "p99_ms": 0.0, "bucket_calls": {}}
+
+
+def test_stats_single_call_percentiles_degenerate():
+    eng = _tiny_engine()
+    eng.score(np.zeros((3, 5), np.float32))
+    st = eng.stats()
+    assert st["calls"] == 1 and st["rows"] == 3
+    # one sample: p50 == p99, throughput finite and positive
+    assert st["p50_ms"] == st["p99_ms"]
+    assert np.isfinite(st["rows_per_s"]) and st["rows_per_s"] >= 0.0
+    assert st["bucket_calls"] == {4: 1}
+
+
+def test_stats_zero_duration_guard():
+    # a recorded zero-length window (coarse clock) must yield
+    # rows_per_s == 0.0, never inf or ZeroDivisionError
+    eng = _tiny_engine()
+    eng.latencies_s = [0.0]
+    eng.rows_scored = 7
+    st = eng.stats()
+    assert st["rows_per_s"] == 0.0 and np.isfinite(st["rows_per_s"])
+
+
+def test_stats_zero_row_score_counts_a_call():
+    eng = _tiny_engine()
+    out = eng.score(np.zeros((0, 5), np.float32))
+    assert out.shape == (0,)
+    st = eng.stats()
+    # the call is timed but scores nothing: no bucket is ever hit
+    assert st["calls"] == 1 and st["rows"] == 0
+    assert st["bucket_calls"] == {}
+    assert np.isfinite(st["rows_per_s"])
+
+
+def test_stats_bucket_calls_track_chunks_and_reset():
+    eng = _tiny_engine(bucket_sizes=(4, 16))
+    # 20 rows chunk by the largest bucket: one 16-chunk + one 4-chunk
+    eng.score(np.zeros((20, 5), np.float32))
+    assert eng.stats()["bucket_calls"] == {16: 1, 4: 1}
+    eng.score(np.zeros((2, 5), np.float32))
+    assert eng.stats()["bucket_calls"] == {16: 1, 4: 2}
+    eng.reset_stats()
+    st = eng.stats()
+    assert st["calls"] == 0 and st["bucket_calls"] == {}
+
+
 def test_platt_recovers_known_sigmoid():
     s = np.linspace(-4, 4, 2000)
     rng = np.random.default_rng(0)

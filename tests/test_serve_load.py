@@ -1,0 +1,262 @@
+"""Load-engine tests (``repro.serve.load``): queue invariants under
+randomized arrival traces, byte-for-byte determinism of the virtual
+clock, and analytic oracles (Poisson inter-arrival mean, M/D/1 queue
+delay) — all virtual-only, no real engine, fast tier."""
+import json
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.serve.load import (ARRIVALS, SERVICE, LoadConfig,
+                              get_arrivals, get_service, qps_sweep,
+                              simulate_load, sweep_rates, table_service)
+
+from proptest import cases, choice, floats, for_cases, ints
+
+
+# --- invariants (shared by property + example tests) -------------------------
+
+def check_invariants(cfg, result):
+    """Every structural property the state machine promises, on one
+    run's full records."""
+    buckets = sorted(int(b) for b in cfg.bucket_sizes)
+    recs, batches = result.records, result.batches
+    admitted = [r for r in recs if not r["rejected"]]
+    rejected = [r for r in recs if r["rejected"]]
+
+    # work conservation: every admitted request is scored exactly once,
+    # rejected requests never are
+    assert all(r["t_done"] is not None for r in admitted)
+    assert all(r["t_start"] is None and r["t_done"] is None
+               for r in rejected)
+    assert sum(b["n_requests"] for b in batches) == len(admitted)
+    assert sum(b["rows"] for b in batches) \
+        == sum(r["rows"] for r in admitted)
+
+    # rejection only under admission control, and only at a full queue
+    if cfg.max_queue is None:
+        assert not rejected
+
+    # FIFO: admitted requests start (and finish) in arrival order
+    starts = [r["t_start"] for r in admitted]
+    assert starts == sorted(starts)
+    dones = [r["t_done"] for r in admitted]
+    assert dones == sorted(dones)
+
+    # causality + deadline accounting on each record
+    for r in admitted:
+        assert r["t_arrive"] <= r["t_start"] <= r["t_done"]
+        assert r["latency"] == pytest.approx(r["t_done"] - r["t_arrive"])
+        if cfg.deadline is None:
+            assert not r["miss"]
+        else:
+            assert r["miss"] == (r["latency"] > cfg.deadline)
+
+    # batches: rows fit the chosen bucket, occupancy in (0, 1],
+    # batches never overlap on the single server
+    for b in batches:
+        assert b["bucket"] in buckets
+        assert 0 < b["rows"] <= b["bucket"]
+        assert b["occupancy"] == pytest.approx(b["rows"] / b["bucket"])
+        assert 0.0 < b["occupancy"] <= 1.0
+        assert b["t_start"] < b["t_done"]
+    for prev, nxt in zip(batches, batches[1:]):
+        assert prev["t_done"] <= nxt["t_start"]
+
+    # summary consistency
+    row = result.row
+    assert row["n_requests"] == len(recs)
+    assert row["rejection_rate"] == pytest.approx(
+        len(rejected) / max(len(recs), 1))
+    assert row["n_batches"] == len(batches)
+
+
+# --- property tests over randomized specs ------------------------------------
+
+@for_cases(cases(
+    20, 7,
+    arrivals=choice("poisson:400", "poisson:2000", "bursty:800:16:0.25",
+                    "bursty:300:4:0.9"),
+    n_requests=ints(50, 400),
+    rows=choice(1, 3, "uniform:1:12"),
+    max_wait=floats(0.0, 0.01),
+    max_queue=choice(None, 4, 32),
+    deadline=choice(None, 0.005, 0.05),
+    run_seed=ints(0, 10_000),
+))
+def test_queue_invariants_hold(arrivals, n_requests, rows, max_wait,
+                               max_queue, deadline, run_seed):
+    cfg = LoadConfig(arrivals=arrivals, n_requests=n_requests,
+                     rows=rows, bucket_sizes=(8, 32), max_wait=max_wait,
+                     max_queue=max_queue, deadline=deadline,
+                     service="affine:0.001:0.0001", seed=run_seed)
+    check_invariants(cfg, simulate_load(cfg))
+
+
+def test_admission_control_rejects_under_overload():
+    # offered far above capacity with a tiny queue bound: rejections
+    # must occur, and the queue depth seen by any admitted request is
+    # bounded (its wait is bounded by max_queue * worst batch time)
+    cfg = LoadConfig(arrivals="poisson:10000", n_requests=500, rows=1,
+                     bucket_sizes=(4,), max_wait=0.0, max_queue=8,
+                     deadline=0.05, service="constant:0.01", seed=1)
+    res = simulate_load(cfg)
+    check_invariants(cfg, res)
+    assert res.row["rejection_rate"] > 0.0
+
+
+def test_batch_closes_at_largest_bucket_under_backlog():
+    # all requests arrive at once (trace of zero gaps): after the first
+    # batch the backlog is deep, so every non-final batch must fill the
+    # largest bucket exactly
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "gaps.json")
+        with open(path, "w") as f:
+            json.dump([0.0], f)
+        cfg = LoadConfig(arrivals=f"trace:{path}", n_requests=100,
+                         rows=1, bucket_sizes=(4, 16), max_wait=0.01,
+                         service="constant:0.001", seed=0)
+        res = simulate_load(cfg)
+    check_invariants(cfg, res)
+    assert all(b["rows"] == 16 for b in res.batches[:-1])
+    assert res.row["mean_occupancy"] > 0.9
+
+
+def test_max_wait_zero_dispatches_immediately():
+    # with max_wait=0 an idle server never waits to grow a batch: under
+    # light load every batch holds exactly one request
+    cfg = LoadConfig(arrivals="poisson:10", n_requests=50, rows=1,
+                     bucket_sizes=(8,), max_wait=0.0,
+                     service="constant:0.001", seed=2)
+    res = simulate_load(cfg)
+    check_invariants(cfg, res)
+    assert all(b["n_requests"] == 1 for b in res.batches)
+
+
+# --- determinism --------------------------------------------------------------
+
+def _dump(res):
+    return json.dumps({"row": res.row, "records": res.records,
+                       "batches": res.batches}, sort_keys=True)
+
+
+def test_same_spec_and_seed_replays_byte_identical():
+    cfg = LoadConfig(arrivals="bursty:1500:8:0.3", n_requests=300,
+                     rows="uniform:1:6", bucket_sizes=(8, 32),
+                     max_wait=0.002, max_queue=64, deadline=0.02,
+                     service="affine:0.0005:0.0001", seed=11)
+    assert _dump(simulate_load(cfg)) == _dump(simulate_load(cfg))
+
+
+def test_different_seed_differs():
+    cfg = LoadConfig(arrivals="poisson:900", n_requests=300,
+                     service="constant:0.001", seed=0)
+    other = LoadConfig(arrivals="poisson:900", n_requests=300,
+                       service="constant:0.001", seed=1)
+    assert _dump(simulate_load(cfg)) != _dump(simulate_load(other))
+
+
+def test_arrival_draws_are_prefix_stable():
+    # the first n gaps are a prefix of any longer run with the same
+    # seed — request count doesn't reshuffle the trace
+    a = get_arrivals("poisson:700", seed=5)
+    np.testing.assert_array_equal(a.gaps(100), a.gaps(400)[:100])
+    b = get_arrivals("bursty:700:16:0.5", seed=5)
+    np.testing.assert_array_equal(b.gaps(100), b.gaps(400)[:100])
+
+
+# --- analytic oracles ---------------------------------------------------------
+
+def test_poisson_interarrival_mean_matches_rate():
+    rate, n = 500.0, 20_000
+    gaps = get_arrivals(f"poisson:{rate:g}", seed=9).gaps(n)
+    se = (1.0 / rate) / np.sqrt(n)   # exponential: std == mean
+    assert abs(gaps.mean() - 1.0 / rate) < 5 * se
+
+
+def test_bursty_longrun_rate_matches_spec():
+    rate, n = 800.0, 40_000
+    gaps = get_arrivals(f"bursty:{rate:g}:32:0.2", seed=9).gaps(n)
+    assert gaps.mean() * rate == pytest.approx(1.0, abs=0.05)
+
+
+def test_md1_mean_wait_matches_pollaczek_khinchine():
+    # M/D/1 at rho = lambda * s = 0.5: Wq = rho * s / (2 (1 - rho))
+    # = 0.5 ms.  Single-row bucket + max_wait=0 makes every batch one
+    # request, i.e. a textbook single server.
+    lam, s = 500.0, 0.001
+    rho = lam * s
+    wq_ms = rho * s / (2 * (1 - rho)) * 1e3
+    cfg = LoadConfig(arrivals=f"poisson:{lam:g}", n_requests=40_000,
+                     rows=1, bucket_sizes=(1,), max_wait=0.0,
+                     service=f"constant:{s:g}", seed=3)
+    row = simulate_load(cfg).row
+    assert row["mean_wait_ms"] == pytest.approx(wq_ms, rel=0.10)
+    # and the latency percentiles sit above pure service time
+    assert row["p50_ms"] >= s * 1e3
+
+
+# --- registries, specs, sweep -------------------------------------------------
+
+def test_registry_specs_resolve():
+    assert set(ARRIVALS) == {"poisson", "bursty", "trace"}
+    assert set(SERVICE) == {"constant", "affine", "measured"}
+    svc = get_service("affine:0.001:0.0001")
+    assert svc(3, 8, 0) == pytest.approx(0.001 + 0.0001 * 8)
+
+
+@pytest.mark.parametrize("spec, err", [
+    ("nope:1", KeyError), ("poisson", ValueError),
+    ("poisson:-5", ValueError), ("bursty:100:0:0.5", ValueError),
+    ("bursty:100:8:1.5", ValueError),
+])
+def test_bad_arrival_specs_raise(spec, err):
+    with pytest.raises(err):
+        get_arrivals(spec)
+
+
+@pytest.mark.parametrize("spec, err", [
+    ("nope", KeyError), ("constant:0", ValueError),
+    ("affine:-1:0", ValueError), ("affine:0.1", ValueError),
+])
+def test_bad_service_specs_raise(spec, err):
+    with pytest.raises(err):
+        get_service(spec)
+
+
+def test_measured_service_requires_engine():
+    with pytest.raises(ValueError, match="ScoringEngine"):
+        get_service("measured")
+
+
+def test_table_service_falls_back_to_largest_bucket():
+    svc = table_service({8: 0.001, 32: 0.003})
+    assert svc(4, 8, 0) == 0.001
+    assert svc(40, 64, 0) == 0.003   # unknown bucket -> largest entry
+    assert svc.table == {8: 0.001, 32: 0.003}
+
+
+def test_qps_sweep_finds_the_knee():
+    # capacity = 1 / 0.001 = 1000 req/s; rates straddling it must be
+    # split into sustainable below and unsustainable above
+    cfg = LoadConfig(n_requests=4000, rows=1, bucket_sizes=(1,),
+                     max_wait=0.0, max_queue=512, deadline=0.02,
+                     service="constant:0.001", seed=0)
+    rows, best = qps_sweep(cfg, [200.0, 600.0, 2000.0, 5000.0])
+    assert [r["sustainable"] for r in rows] == [True, True, False, False]
+    assert best == 600.0
+
+
+def test_qps_sweep_requires_deadline():
+    with pytest.raises(ValueError, match="deadline"):
+        qps_sweep(LoadConfig(deadline=None), [100.0])
+
+
+def test_sweep_rates_ladder():
+    rates = sweep_rates(1000.0, n=5, lo=0.1, hi=1.0)
+    assert len(rates) == 5
+    assert rates[0] == pytest.approx(100.0)
+    assert rates[-1] == pytest.approx(1000.0)
+    assert rates == sorted(rates)

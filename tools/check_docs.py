@@ -57,6 +57,8 @@ REGISTRIES = [
     ("repro.core.latency", "LATENCY"),
     ("repro.serve.bundle", "BUNDLE_KINDS"),
     ("repro.serve.engine", "SCORERS"),
+    ("repro.serve.load", "ARRIVALS"),
+    ("repro.serve.load", "SERVICE"),
     ("repro.kernels.autotune", "TUNABLES"),
 ]
 

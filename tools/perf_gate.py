@@ -7,6 +7,11 @@ list of entries, one appended per PR (and per CI run of the
 ``benchmarks/kernels_bench.py`` — every row carries ``platform`` /
 ``device`` / ``jax`` metadata, so the gate only ever compares rows
 measured on the same platform+device and the same smoke/full shape set.
+The gate is generic over trajectories: the ``serve-load-smoke`` job
+points ``--current`` at ``results/serve_load/serve_load_gate.json``
+(rows from ``repro.launch.serve_load --smoke`` /
+``benchmarks.serve_bench --load``) and ``--bench`` at the repo-root
+``BENCH_serve_load.json`` — same rule, same row shape.
 
 Gate rule: for every current row whose ``name`` appears in
 same-platform trajectory rows, the current time must not exceed
@@ -153,6 +158,16 @@ def run_check(*, current_path: str = DEFAULT_CURRENT,
               append: bool = True, rerun: bool = False) -> int:
     """The CLI body: load (or produce) the current rows, gate, append."""
     sys.path.insert(0, ROOT)
+    if not os.path.exists(current_path) and not rerun \
+            and os.path.abspath(current_path) \
+            != os.path.abspath(DEFAULT_CURRENT):
+        # a custom --current (e.g. the serve_load gate rows) that does
+        # not exist must fail loudly — rerunning kernels_bench here
+        # would gate kernel rows against the wrong trajectory
+        raise FileNotFoundError(
+            f"perf_gate: current-run file {current_path!r} not found; "
+            f"produce it first (e.g. `python -m repro.launch.serve_load "
+            f"--smoke` or `python -m benchmarks.serve_bench --load`)")
     if rerun or not os.path.exists(current_path):
         from benchmarks import kernels_bench
         rows = kernels_bench.run(smoke=smoke)

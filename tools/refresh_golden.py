@@ -1,6 +1,9 @@
 """Golden end-to-end metrics snapshot: one small seeded run per
 federated pipeline (plus an async-schedule variant), with test-set
-F1/AUC committed under ``results/golden/metrics.json``.
+F1/AUC committed under ``results/golden/metrics.json`` — and one
+virtual load-engine run (``serve_load``) whose queue/batching summary
+is snapshotted the same way, so a scheduling-policy regression in
+``repro.serve.load`` shows up exactly like an F1 drift.
 
 ``tests/test_golden.py`` replays exactly these configs (it imports
 :data:`GOLDEN_RUNS` from this file) and compares within
@@ -82,6 +85,30 @@ def _fed_hist():
     return FH.evaluate_fed_hist(model, *test)
 
 
+def _serve_load():
+    """Virtual load-engine run (pure function of spec + seed): a small
+    Poisson trace through the queue + continuous-batching state
+    machine.  Snapshotted on its own keys (RAW_RUNS) — all O(1)-scale
+    values, exactly reproducible, so any drift is a real behaviour
+    change in the simulator's scheduling."""
+    from repro.serve.load import LoadConfig, simulate_load
+    cfg = LoadConfig(arrivals="poisson:400", n_requests=300,
+                     rows="uniform:1:6", bucket_sizes=(8, 32),
+                     max_wait=0.01, max_queue=64, deadline=0.08,
+                     service="affine:0.004:0.0002", seed=SEED)
+    row = simulate_load(cfg).row
+    return {
+        "achieved_over_offered": row["achieved_qps"]
+        / row["offered_qps"],
+        "p50_s": row["p50_ms"] / 1e3,
+        "p99_s": row["p99_ms"] / 1e3,
+        "mean_wait_s": row["mean_wait_ms"] / 1e3,
+        "deadline_miss_rate": row["deadline_miss_rate"],
+        "rejection_rate": row["rejection_rate"],
+        "mean_occupancy": row["mean_occupancy"],
+    }
+
+
 #: pipeline name -> zero-arg callable returning its metrics dict.  The
 #: async_parametric row pins the virtual-time event loop end to end
 #: (fixed seed => deterministic dispatch/arrival order => stable F1).
@@ -92,15 +119,21 @@ GOLDEN_RUNS = {
     "tree_subset": _tree_subset,
     "feature_extract": _feature_extract,
     "fed_hist": _fed_hist,
+    "serve_load": _serve_load,
 }
+
+#: runs whose returned dict is snapshotted on its own keys (already
+#: O(1)-scale summary values) instead of the METRIC_KEYS filter.
+RAW_RUNS = {"serve_load"}
 
 
 def compute_metrics() -> dict:
     out = {}
     for name, run in GOLDEN_RUNS.items():
         m = run()
-        out[name] = {k: round(float(m[k]), 6) for k in METRIC_KEYS
-                     if k in m}
+        keys = sorted(m) if name in RAW_RUNS \
+            else [k for k in METRIC_KEYS if k in m]
+        out[name] = {k: round(float(m[k]), 6) for k in keys}
     return out
 
 
