@@ -1,0 +1,150 @@
+"""Population-scale federation benchmark: rounds-per-second of the
+sharded client-axis engine (``repro.core.runtime.ShardedFedRuntime``)
+as the cohort grows from 10³ to 10⁵ synthetic clients.
+
+Each row times **one full federated round** — local Adam steps on every
+client (vmapped over the mesh-sharded client axis), hierarchical
+client→silo→server aggregation, and the server update — as min-over-
+iterations wall time in µs, the same estimator and row shape as
+``benchmarks/kernels_bench.py``.  Row names encode the swept config::
+
+    fed_round/logreg/c{n_clients}/s{n_silos}/d{n_devices}
+
+so the perf gate (``tools/perf_gate.py --bench BENCH_fed_scale.json``)
+only compares like against like; the note carries the derived
+rounds-per-second and clients-per-second throughput.  Device count
+comes from ``jax.device_count()`` — the CI job forces 8 virtual CPU
+devices via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
+``--smoke`` additionally runs the **parity gate**: the mesh-sharded
+round must match the single-device vmap round within
+``ShardedFedRuntime.PARITY_ATOL`` (documented reduction-order
+tolerance), and hierarchical silo aggregation must agree with the flat
+mean under iid + full participation.  Exits non-zero on drift.
+
+Run:       XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+             PYTHONPATH=src python -m benchmarks.fed_scale_bench
+CI smoke:  ... python -m benchmarks.fed_scale_bench --smoke
+Gate:      PYTHONPATH=src python tools/perf_gate.py --check --smoke \
+             --current results/fed_scale/fed_scale_bench.json \
+             --bench BENCH_fed_scale.json
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from benchmarks.kernels_bench import bench_meta, save_rows
+from repro.core import parametric as P
+from repro.core.runtime import ShardedFedRuntime
+from repro.data.cohort import build_cohort
+
+OUT = "results/fed_scale/fed_scale_bench.json"
+
+#: (n_clients, n_silos) sweep per shape set.  Every n_clients divides
+#: by 8 (the CI virtual-device count) and by its silo count, so mesh
+#: placement never degrades to replication.
+SWEEPS = {
+    "smoke": [(256, 1), (256, 8), (1024, 8)],
+    "full": [(1024, 8), (8192, 64), (100000, 100)],
+}
+ROWS_PER_CLIENT = 16
+CFG = dict(model="logreg", rounds=1, local_steps=10, lr=0.05)
+
+
+def _build(n_clients: int, n_silos: int, mesh):
+    cfg = P.FedParametricConfig(**CFG)
+    xs, ys = build_cohort(f"framingham_like:{n_clients}:{ROWS_PER_CLIENT}")
+    rt = ShardedFedRuntime(n_clients=n_clients, rounds=1, n_silos=n_silos,
+                           mesh=mesh, strategy=cfg.strategy, seed=cfg.seed)
+    local_fn = P.build_local_delta(cfg.model, cfg.local_steps, cfg.lr)
+    import repro.models.tabular as tabular
+    params = tabular.MODELS[cfg.model]["init"](
+        jax.random.PRNGKey(cfg.seed), xs.shape[-1])
+    return rt, local_fn, params, rt.place(xs), rt.place(ys)
+
+
+def _time_round(rt, local_fn, params, xs, ys, iters: int) -> float:
+    """Min-over-iterations µs for one jitted federated round (compile
+    excluded by a warmup call)."""
+    round_fn = rt.build_round(local_fn)
+    state = rt.strategy.init_state(params)
+    jax.block_until_ready(round_fn(params, state, xs, ys))  # compile
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(round_fn(params, state, xs, ys))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def run(smoke: bool = False) -> List[Dict]:
+    meta = bench_meta()
+    sweep = SWEEPS["smoke" if smoke else "full"]
+    iters = 3 if smoke else 5
+    mesh = "host" if jax.device_count() > 1 else None
+    rows = []
+    for n_clients, n_silos in sweep:
+        rt, local_fn, params, xs, ys = _build(n_clients, n_silos, mesh)
+        us = _time_round(rt, local_fn, params, xs, ys, iters)
+        rps = 1e6 / us
+        name = (f"fed_round/{CFG['model']}/c{n_clients}/s{n_silos}"
+                f"/d{rt.n_devices}")
+        note = (f"{rps:.2f} rounds/s, "
+                f"{n_clients * rps:,.0f} clients/s, "
+                f"{CFG['local_steps']} local steps x "
+                f"{ROWS_PER_CLIENT} rows/client")
+        rows.append({"name": name, "us": us, "note": note, **meta})
+        print(f"{name:40s} {us/1e3:10.2f} ms/round  ({note})")
+    return rows
+
+
+def parity_gate(atol: float = ShardedFedRuntime.PARITY_ATOL) -> int:
+    """Sharded-mesh and hierarchical-silo rounds must match the
+    single-device flat vmap round within the documented tolerance."""
+    n_clients, failures = 64, []
+    cfg = P.FedParametricConfig(model="logreg", rounds=3, local_steps=5,
+                                lr=0.05)
+    spec = f"framingham_like:{n_clients}:{ROWS_PER_CLIENT}"
+    ref, *_ = P.train_federated_sharded(spec, cfg, mesh=None, silos=1)
+    variants = [("silo-vs-flat", dict(mesh=None, silos=8))]
+    if jax.device_count() > 1:
+        variants += [("mesh-vs-flat", dict(mesh="host", silos=1)),
+                     ("mesh+silo-vs-flat", dict(mesh="host", silos=8))]
+    else:
+        print("parity: single device — mesh variants skipped "
+              "(set XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    for name, kw in variants:
+        got, *_ = P.train_federated_sharded(spec, cfg, **kw)
+        dev = max(float(np.max(np.abs(a - b))) for a, b in
+                  zip(jax.tree.leaves(got), jax.tree.leaves(ref)))
+        ok = dev <= atol
+        print(f"parity {name:20s} max|Δ|={dev:.2e} "
+              f"{'OK' if ok else f'FAIL (atol={atol:g})'}")
+        if not ok:
+            failures.append(name)
+    return len(failures)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sweep + sharded==vmap parity gate (CI)")
+    ap.add_argument("--out", default=OUT)
+    args = ap.parse_args()
+    if args.smoke and parity_gate():
+        print("fed_scale_bench: parity FAILED", file=sys.stderr)
+        return 1
+    rows = run(smoke=args.smoke)
+    path = save_rows(rows, args.out, smoke=args.smoke)
+    print(f"wrote {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -39,15 +39,21 @@ class CommLog:
     events: List[Dict] = field(default_factory=list)
 
     def log(self, round_idx: int, client: str, direction: str,
-            nbytes: int, what: str = "", t: Optional[float] = None):
+            nbytes: int, what: str = "", t: Optional[float] = None,
+            tier: Optional[str] = None):
         """``t`` is the virtual wall-clock stamp — recorded by the
         runtime when a latency model or the async schedule is active,
         omitted otherwise so untimed ledgers stay bit-identical to the
-        pre-virtual-time format."""
+        pre-virtual-time format.  ``tier`` names the aggregation-tree
+        edge a hierarchical topology moved these bytes over ('edge' =
+        client↔silo LAN, 'wan' = silo↔server) — omitted by the flat-star
+        engines, so their ledgers are likewise unchanged."""
         e = dict(round=round_idx, client=client, direction=direction,
                  bytes=int(nbytes), what=what)
         if t is not None:
             e["t"] = float(t)
+        if tier is not None:
+            e["tier"] = tier
         self.events.append(e)
 
     def total_bytes(self, direction: str = None) -> int:
@@ -73,6 +79,19 @@ class CommLog:
         out: Dict[str, int] = {}
         for e in self.events:
             out[e["what"]] = out.get(e["what"], 0) + e["bytes"]
+        return out
+
+    def per_tier_bytes(self, direction: str = None) -> Dict[str, int]:
+        """Ledger breakdown by aggregation-tree tier ('edge' =
+        client↔silo, 'wan' = silo↔server; flat-star events land under
+        'star').  The hierarchical scaling claim — WAN uplink scales
+        with silos, not clients — is read off this split."""
+        out: Dict[str, int] = {}
+        for e in self.events:
+            if direction is not None and e["direction"] != direction:
+                continue
+            tier = e.get("tier", "star")
+            out[tier] = out.get(tier, 0) + e["bytes"]
         return out
 
 

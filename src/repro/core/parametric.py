@@ -24,7 +24,8 @@ from repro.core import comm as CM
 from repro.core import privacy
 from repro.core.comm import CommLog, Timer, pytree_bytes
 from repro.core.metrics import binary_metrics
-from repro.core.runtime import ClientMsg, ClientWork, FedRuntime, ServerAgg
+from repro.core.runtime import (ClientMsg, ClientWork, FedRuntime,
+                                ServerAgg, ShardedFedRuntime)
 from repro.core.strategies import get_strategy
 from repro.data import sampling as S
 from repro.models import tabular
@@ -248,6 +249,103 @@ def train_federated(clients: Sequence[Tuple[np.ndarray, np.ndarray]],
                     seed=cfg.seed)
     params = rt.run(work)
     return params, rt.comm, work.history, rt.timer
+
+
+def build_local_delta(model_name: str, local_steps: int, lr: float,
+                      mu: float = 0.0):
+    """The per-client local round as one pure, vmappable function:
+    ``local_fn(global_params, x, y) → delta`` — ``local_steps``
+    full-batch Adam steps (FedProx term when ``mu > 0``) as a
+    ``lax.scan``, the same math as the plugin path's ``_local_train``
+    but traceable under ``jax.vmap`` over a stacked client axis."""
+    loss_fn = tabular.MODELS[model_name]["loss"]
+    opt = adam()
+
+    def local_fn(global_params, x, y):
+        def body(carry, _):
+            p, s = carry
+            g = jax.grad(loss_fn)(p, x, y)
+            if mu > 0:
+                g = fedprox_grad(g, p, global_params, mu)
+            p, s = opt.update(g, s, p, lr)
+            return (p, s), None
+        (p, _), _ = jax.lax.scan(body, (global_params,
+                                        opt.init(global_params)),
+                                 None, length=local_steps)
+        return jax.tree.map(lambda a, b: a - b, p, global_params)
+
+    return local_fn
+
+
+def train_federated_sharded(data, cfg: FedParametricConfig, *,
+                            mesh=None, silos: int = 1,
+                            test: Optional[Tuple] = None):
+    """Population-scale federated training on the
+    :class:`~repro.core.runtime.ShardedFedRuntime`.
+
+    ``data`` is either a cohort spec (``"framingham_like:n:rows"`` /
+    :class:`~repro.data.cohort.CohortSpec` — materialized via
+    ``repro.data.cohort.build_cohort``) or a prebuilt
+    ``(xs, ys)`` pair of stacked client-axis arrays
+    ``(n_clients, rows, F)`` / ``(n_clients, rows)``.  ``mesh`` is a
+    ``repro.launch.mesh.MESHES`` spec ("single" | "host[:D]") or a
+    prebuilt Mesh; ``silos`` groups clients into contiguous equal silos
+    for the hierarchical client → silo → server tree-reduce.
+
+    The sharded engine is the iid + full-participation + plain-wire
+    fast path: per-client sampling strategies, secure aggregation, DP,
+    float-transform transports, partial participation, and async
+    schedules all stay on :func:`train_federated` (they are per-client
+    Python).  Configs requesting them raise rather than silently
+    degrade.  Single-device runs of the same config match
+    :func:`train_federated` to the documented reduction-order tolerance
+    (``ShardedFedRuntime.PARITY_ATOL`` per round).
+
+    Returns ``(global_params, comm, history, timer)`` — the
+    :func:`train_federated` contract, with a tiered CommLog."""
+    for knob, want in (("sampling", "none"), ("participation", "full"),
+                       ("schedule", "sync")):
+        if getattr(cfg, knob) != want:
+            raise ValueError(
+                f"sharded parametric training supports {knob}={want!r} "
+                f"only (got {getattr(cfg, knob)!r}); use "
+                f"train_federated for the plugin engine")
+    if cfg.secure_agg or cfg.dp_epsilon > 0:
+        raise ValueError("sharded parametric training has no secure-agg"
+                         "/DP path; use train_federated")
+    if isinstance(data, tuple):
+        xs, ys = data
+    else:
+        from repro.data.cohort import build_cohort
+        xs, ys = build_cohort(data, seed=cfg.seed)
+    xs, ys = np.asarray(xs), np.asarray(ys)
+    n_clients, rows, n_feat = xs.shape
+    spec = tabular.MODELS[cfg.model]
+    if spec["needs_poly"]:
+        xs = np.asarray(_prep(cfg.model, xs.reshape(-1, n_feat))) \
+            .reshape(n_clients, rows, -1)
+    if test is not None:
+        test = (_prep(cfg.model, test[0]), test[1])
+
+    strat = get_strategy(cfg.strategy)
+    mu = cfg.fedprox_mu if cfg.fedprox_mu > 0 else strat.client_mu
+    rt = ShardedFedRuntime(n_clients=n_clients, rounds=cfg.rounds,
+                           n_silos=silos, mesh=mesh, strategy=strat,
+                           transport=cfg.transport, seed=cfg.seed)
+    local_fn = build_local_delta(cfg.model, cfg.local_steps, cfg.lr, mu)
+    params = spec["init"](jax.random.PRNGKey(cfg.seed), xs.shape[-1])
+
+    eval_fn = None
+    if test is not None:
+        xt = jnp.asarray(test[0])
+
+        def eval_fn(p):
+            pred = np.asarray(spec["predict"](p, xt))
+            scores = np.asarray(spec["proba"](p, xt))
+            return binary_metrics(pred, test[1], scores=scores)
+
+    params, history = rt.run(local_fn, params, xs, ys, eval_fn=eval_fn)
+    return params, rt.comm, history, rt.timer
 
 
 def train_centralized(x, y, cfg: FedParametricConfig,

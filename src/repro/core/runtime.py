@@ -59,21 +59,37 @@ version, virtual time, arrivals, staleness), and ledger events carry a
 ``t`` stamp whenever a latency model or the async schedule is active —
 the time-to-target-F1 rows in ``benchmarks/fed_engine_bench.py`` are
 read from exactly these records.
+
+**Population scale** (:class:`ShardedFedRuntime`): the plugin engine
+above is message-passing-faithful — per-client Python objects through a
+layered transport — which tops out at tens of clients.  The sharded
+runtime trades that fidelity for scale: stacked ``(n_clients, ...)``
+client-axis pytrees are placed over a 1-D ``('clients',)`` device mesh
+(``repro.launch.mesh.get_fed_mesh`` + ``repro.sharding.rules.FED_RULES``)
+and one jitted call advances *every* client — vmapped local training,
+then a hierarchical client → silo → server tree-reduce whose cross-silo
+combine runs through the same strategy registry.  Ledger accounting is
+per aggregation tier from shape/dtype metadata only (never a
+device-to-host gather), so the CommLog records what the silo topology
+— not a flat star — would move.  See docs/ARCHITECTURE.md §Sharded
+federation.
 """
 from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.comm import (CommLog, MaskLayer, Timer, Transport, WireCtx,
-                             WireMsg, get_transport)
+                             WireMsg, get_transport, pytree_bytes)
 from repro.core.latency import Draw, get_latency
 from repro.core.participation import Participation, get_participation
+from repro.core.strategies import get_strategy
 
 
 #: schedule name -> what the mode does.  Resolved via
@@ -411,3 +427,167 @@ class FedRuntime:
             ready.extend(m.client for m in buffer)
             buffer = []
         return state
+
+
+# --- population-scale sharded runtime -----------------------------------------
+
+@dataclass
+class ShardedFedRuntime:
+    """Client-axis-sharded federated engine with hierarchical silo
+    aggregation.
+
+    Instead of per-client :class:`ClientMsg` objects, the whole
+    federation lives in stacked pytrees with a leading
+    ``(n_clients, ...)`` axis, sharded over a 1-D ``('clients',)`` mesh
+    (``mesh`` accepts a :class:`jax.sharding.Mesh` or a
+    ``repro.launch.mesh.MESHES`` spec string — ``None``/"single" runs
+    the identical jitted program on one device).  One jitted round:
+
+    1. vmapped local training — ``local_fn(params, x_i, y_i) → delta_i``
+       runs for every client, per-device shards in parallel;
+    2. **silo tier** — clients group contiguously into ``n_silos``
+       equal silos; each silo mean-reduces its clients' deltas (a
+       shard-local reduction when silos align with device boundaries);
+    3. **server tier** — silo partials combine (uniform mean over
+       equal-size silos, exactly the registry strategy's weighting for
+       equal shards) and pass through the strategy's server optimizer
+       (fedavgm / fedadam state lives inside the jitted step).
+
+    Semantics are the sync engine's under iid + full participation +
+    plain transport, and ``benchmarks/fed_scale_bench.py --smoke``
+    gates mesh-vs-single-device parity in CI.  Reduction *order* does
+    differ (a silo tree-reduce vs one flat mean), so parity is gated at
+    a documented float32 tolerance (``PARITY_ATOL``), not bit-exactness
+    — see docs/ARCHITECTURE.md §Sharded federation.
+
+    The ledger is per aggregation **tier**, computed purely from
+    shape/dtype metadata (``jax.eval_shape`` — never a device-to-host
+    gather; regression-tested in ``tests/test_shard_fed.py``):
+    ``n_silos > 1`` logs 'edge' (client↔silo) and 'wan' (silo↔server)
+    events per round; ``n_silos == 1`` is the flat star every client
+    crossing the WAN to the server.  Transports are restricted to
+    bytes-level layers (framing): float-transform layers are per-client
+    Python and would defeat the point of sharding.
+    """
+    n_clients: int
+    rounds: int
+    n_silos: int = 1
+    mesh: Any = None
+    strategy: Any = "fedavg"
+    transport: Any = "plain"
+    seed: int = 0
+    comm: CommLog = field(default_factory=CommLog)
+    timer: Timer = field(default_factory=Timer)
+
+    #: documented mesh-vs-single-device parity tolerance (float32): the
+    #: silo tree-reduce reorders the cross-client sum, which perturbs
+    #: each round's mean by O(eps * n_clients^0.5) relative ulps.
+    PARITY_ATOL = 1e-6
+
+    def __post_init__(self):
+        from repro.launch.mesh import get_fed_mesh
+        from repro.sharding.rules import ShardingCtx, rules_for_phase
+        if self.n_silos < 1 or self.n_clients % self.n_silos:
+            raise ValueError(
+                f"n_silos={self.n_silos} must divide n_clients="
+                f"{self.n_clients} (contiguous equal silos)")
+        self.mesh = get_fed_mesh(self.mesh)
+        self.ctx = (ShardingCtx(mesh=self.mesh,
+                                rules=rules_for_phase("fed"))
+                    if self.mesh is not None else ShardingCtx.null())
+        if isinstance(self.strategy, str):
+            self.strategy = get_strategy(self.strategy)
+        self.transport = get_transport(self.transport)
+        self.transport.require_bytes_only("sharded")
+
+    @property
+    def n_devices(self) -> int:
+        return self.mesh.size if self.mesh is not None else 1
+
+    # -- placement ---------------------------------------------------------
+
+    def place(self, tree):
+        """Place a stacked client-axis pytree: axis 0 sharded over
+        'clients' (degrading to replication when n_clients does not
+        divide the mesh — ``FED_RULES`` via ``ShardingCtx``)."""
+        def put(x):
+            x = jnp.asarray(x)
+            sh = self.ctx.sharding(
+                ["clients"] + [None] * (x.ndim - 1), x.shape)
+            return x if sh is None else jax.device_put(x, sh)
+        return jax.tree.map(put, tree)
+
+    # -- the jitted hierarchical round -------------------------------------
+
+    def build_round(self, local_fn: Callable) -> Callable:
+        """``round_fn(params, server_state, xs, ys) → (params,
+        server_state)``, one jitted call for all clients and both
+        aggregation tiers."""
+        n_silos = self.n_silos
+        per_silo = self.n_clients // n_silos
+        ctx, strat = self.ctx, self.strategy
+
+        def silo_reduce(d):
+            d = ctx.constrain(d, "clients", *[None] * (d.ndim - 1))
+            s = d.reshape((n_silos, per_silo) + d.shape[1:])
+            return s.mean(axis=1)
+
+        def round_fn(params, server_state, xs, ys):
+            deltas = jax.vmap(local_fn, in_axes=(None, 0, 0))(
+                params, xs, ys)
+            silo = jax.tree.map(silo_reduce, deltas)      # (n_silos, …)
+            mean = jax.tree.map(lambda s: s.mean(axis=0), silo)
+            upd, server_state = strat.server_update(server_state, mean)
+            params = jax.tree.map(lambda g, u: g + u, params, upd)
+            return params, server_state
+
+        return jax.jit(round_fn)
+
+    # -- tiered ledger (metadata only) -------------------------------------
+
+    def _tier_plan(self, local_fn, params, xs, ys) -> List[tuple]:
+        """Per-round ledger events from ``jax.eval_shape`` metadata —
+        the payloads themselves are never gathered to host."""
+        pstruct = jax.eval_shape(lambda p: p, params)
+        row = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape[1:],
+                                                          a.dtype), xs)
+        yrow = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape[1:],
+                                                           a.dtype), ys)
+        dstruct = jax.eval_shape(local_fn, pstruct, row, yrow)
+        pb = pytree_bytes(pstruct) + self.transport.frame_overhead
+        ub = pytree_bytes(dstruct) + self.transport.frame_overhead
+        n, s = self.n_clients, self.n_silos
+        if s == 1:  # flat star: every client crosses the WAN
+            return [("c*", "down", n * pb, "model", "wan"),
+                    ("c*", "up", n * ub, "update", "wan")]
+        return [("s*", "down", s * pb, "model", "wan"),
+                ("c*", "down", n * pb, "model", "edge"),
+                ("c*", "up", n * ub, "update", "edge"),
+                ("s*", "up", s * ub, "update", "wan")]
+
+    # -- the round loop ----------------------------------------------------
+
+    def run(self, local_fn: Callable, params, xs, ys,
+            eval_fn: Optional[Callable] = None):
+        """Run ``rounds`` hierarchical rounds.
+
+        ``xs``/``ys`` are stacked client-axis arrays (leading dim
+        ``n_clients``) — e.g. from ``repro.data.cohort.build_cohort``;
+        ``eval_fn(params) → dict`` (optional) is recorded per round.
+        Returns ``(params, history)``."""
+        xs, ys = self.place(xs), self.place(ys)
+        plan = self._tier_plan(local_fn, params, xs, ys)
+        round_fn = self.build_round(local_fn)
+        server_state = self.strategy.init_state(params)
+        history: List[Dict] = []
+        for r in range(self.rounds):
+            with self.timer:
+                params, server_state = round_fn(params, server_state,
+                                                xs, ys)
+                jax.block_until_ready(params)
+            for client, direction, nbytes, what, tier in plan:
+                self.comm.log(r, client, direction, nbytes, what,
+                              tier=tier)
+            if eval_fn is not None:
+                history.append(dict(eval_fn(params), round=r))
+        return params, history

@@ -43,9 +43,12 @@ class Dataset:
     feature_names: List[str]
 
 
-def synthesize(n: int = 4238, positive_rate: float = 0.152,
-               seed: int = 0, noise: float = 0.3) -> Dataset:
-    rng = np.random.default_rng(seed)
+def raw_columns(rng: np.random.Generator, n: int) -> np.ndarray:
+    """The twin's unstandardized feature matrix, ``(n, 15)`` in
+    :data:`FEATURES` order.  One rng, fixed draw order — both
+    :func:`synthesize` and the population-scale cohort generator
+    (``repro.data.cohort``) draw through this single function, so their
+    marginals agree by construction."""
     cols: Dict[str, np.ndarray] = {}
     cols["male"] = (rng.random(n) < 0.43).astype(np.float64)
     cols["age"] = np.clip(rng.normal(49.6, 8.6, n), 32, 70)
@@ -67,18 +70,16 @@ def synthesize(n: int = 4238, positive_rate: float = 0.152,
     cols["heartRate"] = np.clip(rng.normal(75.9, 12, n), 44, 143)
     cols["glucose"] = np.clip(rng.normal(82, 24, n)
                               + 80 * cols["diabetes"], 40, 400)
+    return np.stack([cols[f] for f in FEATURES], axis=1)
 
-    raw = np.stack([cols[f] for f in FEATURES], axis=1)
-    mu, sd = raw.mean(0), raw.std(0) + 1e-9
-    z = (raw - mu) / sd
 
+def teacher_parts(z: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Deterministic halves of the logit teacher on standardized
+    features: ``(lin, nonlin)`` scores, no rng."""
     # logit teacher: linear part proportional to Table-1 importances
     w = np.array([IMPORTANCE[f] for f in FEATURES])
     sign = np.ones(len(FEATURES))
     sign[FEATURES.index("education")] = -1.0
-    # calibration (docs/EXPERIMENTS.md §Methodology): LIN_SCALE/NONLIN_SCALE/
-    # noise are set so that on the twin, centralized XGBoost lands at the
-    # paper's F1=0.78 while linear models trail trees as in the paper.
     lin = LIN_SCALE * (z @ (w * sign))
     zi = {f: z[:, FEATURES.index(f)] for f in FEATURES}
     nonlin = NONLIN_SCALE * (
@@ -87,6 +88,20 @@ def synthesize(n: int = 4238, positive_rate: float = 0.152,
         + 0.65 * np.maximum(zi["glucose"] - 1.0, 0.0) * 2.0
         + 0.40 * np.maximum(zi["sysBP"] - 1.2, 0.0) * 2.0
         + 0.35 * zi["male"] * zi["age"])
+    return lin, nonlin
+
+
+def synthesize(n: int = 4238, positive_rate: float = 0.152,
+               seed: int = 0, noise: float = 0.3) -> Dataset:
+    rng = np.random.default_rng(seed)
+    raw = raw_columns(rng, n)
+    mu, sd = raw.mean(0), raw.std(0) + 1e-9
+    z = (raw - mu) / sd
+
+    # calibration (docs/EXPERIMENTS.md §Methodology): LIN_SCALE/NONLIN_SCALE/
+    # noise are set so that on the twin, centralized XGBoost lands at the
+    # paper's F1=0.78 while linear models trail trees as in the paper.
+    lin, nonlin = teacher_parts(z)
     score = lin + nonlin + rng.normal(0, noise, n) * np.sqrt(
         lin.var() + nonlin.var())
     thr = np.quantile(score, 1 - positive_rate)

@@ -410,27 +410,63 @@ def simulate_parametric(*, model: str = "logreg", n_clients: int = 3,
                         transport: str = "plain",
                         schedule: str = "sync",
                         latency: Optional[str] = None, seed: int = 0,
-                        n_records: int = 4238, verbose: bool = True):
+                        n_records: int = 4238, verbose: bool = True,
+                        mesh: Optional[str] = None, silos: int = 1,
+                        cohort: Optional[str] = None):
     """Parametric FL (paper C1) on the Framingham twin — the CLI face of
     ``repro.core.parametric.train_federated``, sharing the partition /
-    participation / transport / schedule axes with every other mode."""
+    participation / transport / schedule axes with every other mode.
+
+    ``cohort`` switches to the population-scale sharded engine
+    (``repro.core.parametric.train_federated_sharded``): clients come
+    from a synthetic cohort spec (``repro.data.cohort.COHORTS``, e.g.
+    ``framingham_like:100000:16``), ``mesh`` shards the client axis over
+    a device mesh (``repro.launch.mesh.MESHES``: "single" | "host[:D]"),
+    and ``silos`` inserts a hierarchical client→silo→server aggregation
+    tier.  Without ``cohort`` the historical per-client engine runs
+    bit-identically (``mesh``/``silos`` require ``cohort`` because the
+    sharded engine needs equal-sized client shards)."""
     from repro.core import parametric as P
 
-    clients, test = _tabular_clients(n_clients, partition, alpha, seed,
-                                     n_records)
-    cfg = P.FedParametricConfig(model=model, rounds=rounds,
-                                local_steps=local_steps,
-                                sampling=sampling, strategy=strategy,
-                                participation=participation,
-                                transport=transport, schedule=schedule,
-                                latency=latency, seed=seed)
-    params, comm, history, timer = P.train_federated(clients, cfg,
-                                                     test=test)
+    if cohort is None:
+        if mesh is not None or silos != 1:
+            raise ValueError(
+                "--mesh/--silos need --cohort: the sharded engine runs "
+                "on equal-sized synthetic cohort shards "
+                "(e.g. --cohort framingham_like:1024:16); Framingham "
+                "twin partitions stay on the per-client engine")
+        clients, test = _tabular_clients(n_clients, partition, alpha,
+                                         seed, n_records)
+        cfg = P.FedParametricConfig(model=model, rounds=rounds,
+                                    local_steps=local_steps,
+                                    sampling=sampling, strategy=strategy,
+                                    participation=participation,
+                                    transport=transport,
+                                    schedule=schedule,
+                                    latency=latency, seed=seed)
+        params, comm, history, timer = P.train_federated(clients, cfg,
+                                                         test=test)
+    else:
+        from repro.data.cohort import cohort_testset, get_cohort
+        spec = get_cohort(cohort)
+        cfg = P.FedParametricConfig(model=model, rounds=rounds,
+                                    local_steps=local_steps,
+                                    sampling=sampling, strategy=strategy,
+                                    participation=participation,
+                                    transport=transport,
+                                    schedule=schedule,
+                                    latency=latency, seed=seed)
+        params, comm, history, timer = P.train_federated_sharded(
+            spec, cfg, mesh=mesh, silos=silos,
+            test=cohort_testset(seed))
     metrics = history[-1] if history else {}
     if verbose and metrics:
+        tiers = comm.per_tier_bytes("up")
+        tier_s = " ".join(f"{k}={v/1e6:.2f}MB"
+                          for k, v in sorted(tiers.items()))
         print(f"parametric/{model}: F1={metrics['f1']:.3f} "
-              f"uplink={comm.uplink_mb():.2f}MB agg {timer.total_s:.2f}s "
-              f"({schedule})")
+              f"uplink={comm.uplink_mb():.2f}MB ({tier_s}) "
+              f"agg {timer.total_s:.2f}s ({schedule})")
     return {"params": params, "metrics": metrics, "history": history,
             "comm": comm, "uplink_mb": comm.total_mb("up"),
             "round_s": timer.total_s}
@@ -585,6 +621,19 @@ def main():
     # tabular knobs
     ap.add_argument("--model", default="logreg",
                     help="parametric mode: logreg | svm | mlp")
+    ap.add_argument("--mesh", default=None,
+                    help="parametric mode: device mesh spec (repro."
+                    "launch.mesh.MESHES): single | host[:D] — shards "
+                    "the client axis over D devices; needs --cohort")
+    ap.add_argument("--silos", type=int, default=1,
+                    help="parametric mode: hierarchical aggregation "
+                    "tiers — clients group into this many silos, silo "
+                    "partials cross the WAN; needs --cohort")
+    ap.add_argument("--cohort", default=None,
+                    help="parametric mode: synthetic cohort spec "
+                    "(repro.data.cohort.COHORTS, e.g. "
+                    "framingham_like:100000:16) — switches to the "
+                    "population-scale sharded engine")
     ap.add_argument("--depth", type=int, default=4)
     ap.add_argument("--n-bins", type=int, default=32)
     ap.add_argument("--sampling", default="none")
@@ -608,7 +657,8 @@ def main():
                             rounds=args.rounds,
                             local_steps=args.local_steps,
                             sampling=args.sampling,
-                            strategy=args.strategy, **axes)
+                            strategy=args.strategy, mesh=args.mesh,
+                            silos=args.silos, cohort=args.cohort, **axes)
         return
     if args.mode == "tree_subset":
         simulate_tree_subset(n_clients=args.pods, depth=args.depth,

@@ -1,8 +1,65 @@
 """Production mesh builders (functions, not module constants — importing
-this module never touches jax device state)."""
+this module never touches jax device state).
+
+Two families live here:
+
+* the LM dry-run meshes (:func:`make_production_mesh` — 'data'/'model'
+  TP+DP grids, optionally a leading 'pod' federation axis);
+* the **federated client mesh** (:data:`MESHES` / :func:`get_fed_mesh`):
+  a 1-D ``('clients',)`` mesh the sharded federated runtime
+  (``repro.core.runtime.ShardedFedRuntime``) places stacked
+  ``(n_clients, ...)`` pytrees over.  On CPU-only hosts, force multiple
+  virtual devices with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+  *before* importing jax (docs/EXPERIMENTS.md §Fed scaling).
+"""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
+
+#: federated mesh spec name -> what it builds.  Resolved via
+#: :func:`get_fed_mesh` spec strings ("single", "host", "host:D").
+MESHES = {
+    "single": "no mesh — null sharding ctx, single-device vmap path "
+              "(the default; bit-exact with the pre-mesh engine)",
+    "host": "host[:D] — 1-D ('clients',) mesh over D local devices "
+            "(default: all visible devices)",
+}
+
+
+def get_fed_mesh(spec) -> Optional[jax.sharding.Mesh]:
+    """Resolve a federated client-mesh spec.
+
+    ``None`` / ``"single"`` → no mesh (the single-device vmap path);
+    ``"host"`` → 1-D ``('clients',)`` mesh over every visible device;
+    ``"host:D"`` → over the first D devices (error if fewer exist).
+    A prebuilt :class:`jax.sharding.Mesh` passes through unchanged.
+    """
+    if spec is None or isinstance(spec, jax.sharding.Mesh):
+        return spec
+    parts = str(spec).split(":")
+    name, args = parts[0], parts[1:]
+    if name not in MESHES:
+        raise KeyError(f"unknown mesh spec {spec!r}; "
+                       f"available: {sorted(MESHES)} "
+                       f"(spec: single | host[:D])")
+    if name == "single":
+        if args:
+            raise ValueError(f"mesh 'single' takes no args, got {spec!r}")
+        return None
+    devices = jax.devices()
+    d = int(args[0]) if args else len(devices)
+    if len(args) > 1 or d < 1:
+        raise ValueError(f"bad mesh spec {spec!r}: host[:D] takes one "
+                         f"integer D >= 1")
+    if d > len(devices):
+        raise ValueError(
+            f"mesh {spec!r} wants {d} devices but only {len(devices)} "
+            f"are visible; on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={d} before "
+            f"importing jax")
+    return jax.sharding.Mesh(devices[:d], ("clients",))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -4,4 +4,5 @@ from repro.sharding.rules import (  # noqa: F401
     TRAIN_RULES,
     DECODE_RULES,
     LONG_DECODE_RULES,
+    FED_RULES,
 )

@@ -62,10 +62,26 @@ LONG_DECODE_RULES: Rules = dict(
     cache_seq=("data", "model"),
 )
 
+# fed: the federated simulation's only sharded dimension is the leading
+# (n_clients, ...) client axis of stacked per-client pytrees — a *data*
+# axis (clients are independent rows of the simulation), mapped onto the
+# 1-D 'clients' mesh from repro.launch.mesh.  Deliberately NOT derived
+# from TRAIN_RULES: the LM table's fsdp/model/heads mappings are
+# nonsensical for stacked tabular client shards (a 'clients'-sized mesh
+# has no 'model' axis, and fsdp-sharding 16-float logreg params would
+# only replicate anyway, but a larger mesh with reused axis names would
+# silently shard the wrong dims).  Every logical name other than
+# 'clients' replicates.
+FED_RULES: Rules = {
+    "clients": "clients",
+}
+
 
 def rules_for_phase(phase: str, shape_name: str = "") -> Rules:
     if phase == "decode":
         return LONG_DECODE_RULES if shape_name == "long_500k" else DECODE_RULES
+    if phase == "fed":
+        return FED_RULES
     return TRAIN_RULES
 
 

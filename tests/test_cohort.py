@@ -1,0 +1,107 @@
+"""Property tests for the synthetic population cohorts
+(``repro.data.cohort``): marginal fidelity to the Framingham twin,
+label prevalence, determinism + prefix stability, and partitioner
+row-preservation over pooled synthetic rows."""
+import numpy as np
+import pytest
+
+from repro.data import cohort as C
+from repro.data import framingham as F
+from repro.data import partition as P
+
+
+def test_spec_parsing():
+    s = C.get_cohort("framingham_like:1000:16")
+    assert (s.name, s.n_clients, s.rows_per_client) == \
+        ("framingham_like", 1000, 16)
+    assert s.n_features == len(F.FEATURES)
+    assert s.total_rows == 16000
+    assert C.get_cohort(s) is s
+    with pytest.raises(KeyError):
+        C.get_cohort("nope:3:4")
+    with pytest.raises(ValueError):
+        C.get_cohort("framingham_like:3")
+    with pytest.raises(ValueError):
+        C.get_cohort("framingham_like:0:4")
+
+
+def test_shapes_and_dtypes():
+    x, y = C.build_cohort("framingham_like:5:7", seed=3)
+    assert x.shape == (5, 7, len(F.FEATURES))
+    assert y.shape == (5, 7)
+    assert x.dtype == np.float32 and y.dtype == np.float32
+    assert set(np.unique(y)) <= {0.0, 1.0}
+
+
+def test_marginals_match_reference():
+    """Pooled standardized columns sit near zero mean / unit std —
+    within a fraction of the per-feature sd, the right scale for
+    near-constant binary columns (prevalentStroke has mean ~0.006)."""
+    x, _ = C.build_cohort("framingham_like:512:16", seed=0)
+    pooled = x.reshape(-1, x.shape[-1])
+    assert np.all(np.abs(pooled.mean(0)) < 0.1)
+    assert np.all(np.abs(pooled.std(0) - 1.0) < 0.1)
+
+
+def test_label_prevalence():
+    """Pooled prevalence tracks the twin's 15.2% positive rate."""
+    _, y = C.build_cohort("framingham_like:1024:16", seed=0)
+    assert abs(float(y.mean()) - 0.152) < 0.015
+    _, yt = C.cohort_testset(seed=0, n=8192)
+    assert abs(float(yt.mean()) - 0.152) < 0.02
+
+
+def test_determinism_and_seed_sensitivity():
+    x1, y1 = C.build_cohort("framingham_like:64:8", seed=5)
+    x2, y2 = C.build_cohort("framingham_like:64:8", seed=5)
+    assert np.array_equal(x1, x2) and np.array_equal(y1, y2)
+    x3, _ = C.build_cohort("framingham_like:64:8", seed=6)
+    assert not np.array_equal(x1, x3)
+
+
+def test_prefix_stability():
+    """Growing n_clients never changes earlier clients' data — across
+    a chunk boundary (CHUNK=256) and within one."""
+    small_x, small_y = C.build_cohort("framingham_like:100:8", seed=1)
+    big_x, big_y = C.build_cohort(
+        f"framingham_like:{C.CHUNK + 50}:8", seed=1)
+    assert np.array_equal(big_x[:100], small_x)
+    assert np.array_equal(big_y[:100], small_y)
+
+
+def test_rows_per_client_changes_draws():
+    """rows_per_client is part of the stream layout, not a truncation:
+    different row counts are different cohorts by contract."""
+    x8, _ = C.build_cohort("framingham_like:4:8", seed=0)
+    x16, _ = C.build_cohort("framingham_like:4:16", seed=0)
+    assert not np.array_equal(x8, x16[:, :8])
+
+
+def test_testset_disjoint_stream():
+    """The held-out test set never reuses a generation chunk."""
+    x, _ = C.build_cohort("framingham_like:8:16", seed=0)
+    xt, _ = C.cohort_testset(seed=0, n=128)
+    pooled = x.reshape(-1, x.shape[-1])
+    assert not any(np.array_equal(pooled[i], xt[0])
+                   for i in range(len(pooled)))
+
+
+def test_reference_stats_frozen():
+    """Labeling constants come from the reference draw only — they do
+    not move when cohorts of any size are built."""
+    before = C.reference_stats(seed=0)
+    C.build_cohort("framingham_like:300:4", seed=0)
+    after = C.reference_stats(seed=0)
+    assert np.array_equal(before[0], after[0])
+    assert before[2] == after[2] and before[3] == after[3]
+
+
+@pytest.mark.parametrize("name", sorted(P.PARTITIONERS))
+def test_partitioners_preserve_synthetic_rows(name):
+    """Every registered partitioner keeps each pooled synthetic row
+    exactly once — the same invariant the twin's shards carry."""
+    x, y = C.build_cohort("framingham_like:32:8", seed=2)
+    px, py = x.reshape(-1, x.shape[-1]), y.reshape(-1)
+    kw = {"alpha": 0.5} if name in ("dirichlet", "quantity") else {}
+    parts = P.partition_indices(name, px, py, 4, seed=0, **kw)
+    P.check_partition(parts, len(px))

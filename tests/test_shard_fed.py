@@ -1,0 +1,215 @@
+"""Sharded federated engine (``repro.core.runtime.ShardedFedRuntime``):
+parity against the per-client engine at the documented tolerance,
+hierarchical-silo == flat-mean invariance, per-tier ledger math from
+metadata only (no device-to-host gather on the hot path), and the
+``fed_train`` CLI plumbing.  The real 8-device mesh runs in a
+subprocess (tier 2), mirroring tests/test_multidevice.py."""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import parametric as P
+from repro.core.comm import CommLog, get_transport, pytree_bytes
+from repro.core.runtime import ShardedFedRuntime
+from repro.data import cohort as C
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _max_dev(a, b):
+    return max(float(np.max(np.abs(x - y)))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _cfg(**kw):
+    base = dict(model="logreg", rounds=4, local_steps=6, lr=0.05)
+    base.update(kw)
+    return P.FedParametricConfig(**base)
+
+
+# --- parity -----------------------------------------------------------------
+
+def test_sharded_matches_per_client_engine():
+    """Null-mesh flat sharded run == the per-client python-loop engine
+    within PARITY_ATOL (same clients, same rounds, same strategy)."""
+    xs, ys = C.build_cohort("framingham_like:12:32", seed=0)
+    cfg = _cfg()
+    p_sh, comm_sh, _, _ = P.train_federated_sharded((xs, ys), cfg)
+    clients = [(xs[i], ys[i]) for i in range(len(xs))]
+    p_loop, comm_loop, _, _ = P.train_federated(clients, cfg)
+    assert _max_dev(p_sh, p_loop) <= ShardedFedRuntime.PARITY_ATOL
+    # same bytes per round too: flat star == the per-client ledger sum
+    assert comm_sh.total_bytes("up") == comm_loop.total_bytes("up")
+
+
+def test_silo_tree_matches_flat_mean():
+    """Hierarchical silo aggregation == flat mean under equal shards,
+    for every silo count dividing n_clients."""
+    xs, ys = C.build_cohort("framingham_like:24:16", seed=1)
+    cfg = _cfg(rounds=3)
+    ref, *_ = P.train_federated_sharded((xs, ys), cfg, silos=1)
+    for silos in (2, 4, 8, 24):
+        got, *_ = P.train_federated_sharded((xs, ys), cfg, silos=silos)
+        assert _max_dev(got, ref) <= ShardedFedRuntime.PARITY_ATOL, silos
+
+
+def test_server_strategy_state_inside_jit():
+    """A stateful server optimizer (fedadam) runs inside the jitted
+    round and still matches the per-client engine."""
+    xs, ys = C.build_cohort("framingham_like:8:16", seed=2)
+    cfg = _cfg(strategy="fedadam", rounds=3)
+    p_sh, *_ = P.train_federated_sharded((xs, ys), cfg, silos=4)
+    clients = [(xs[i], ys[i]) for i in range(len(xs))]
+    p_loop, *_ = P.train_federated(clients, cfg)
+    assert _max_dev(p_sh, p_loop) <= 1e-5  # adam eps amplifies slightly
+
+
+def test_eval_history_and_cohort_spec_input():
+    params, comm, hist, timer = P.train_federated_sharded(
+        "framingham_like:16:16", _cfg(rounds=2),
+        test=C.cohort_testset(0, 256))
+    assert len(hist) == 2 and {"f1", "round"} <= set(hist[0])
+    assert timer.total_s > 0
+
+
+# --- tiered ledger ----------------------------------------------------------
+
+def test_tier_bytes_math():
+    """edge carries n_clients payloads, wan carries n_silos partials;
+    both directions, exact byte counts from shape metadata."""
+    n, silos, rounds = 16, 4, 3
+    xs, ys = C.build_cohort(f"framingham_like:{n}:8", seed=0)
+    cfg = _cfg(rounds=rounds)
+    _, comm, _, _ = P.train_federated_sharded((xs, ys), cfg, silos=silos)
+    import repro.models.tabular as tabular
+    params = tabular.MODELS["logreg"]["init"](jax.random.PRNGKey(0),
+                                              xs.shape[-1])
+    pb = pytree_bytes(params) + get_transport("plain").frame_overhead
+    up = comm.per_tier_bytes("up")
+    down = comm.per_tier_bytes("down")
+    assert up == {"edge": rounds * n * pb, "wan": rounds * silos * pb}
+    assert down == {"edge": rounds * n * pb, "wan": rounds * silos * pb}
+
+
+def test_flat_star_is_all_wan():
+    xs, ys = C.build_cohort("framingham_like:8:8", seed=0)
+    _, comm, _, _ = P.train_federated_sharded((xs, ys), _cfg(rounds=2))
+    assert set(comm.per_tier_bytes("up")) == {"wan"}
+
+
+def test_untiered_events_report_as_star():
+    log = CommLog()
+    log.log(0, "c0", "up", 100, "update")
+    log.log(0, "c0", "up", 50, "update", tier="edge")
+    assert log.per_tier_bytes("up") == {"star": 100, "edge": 50}
+    # legacy event dicts are unchanged by the tier extension
+    assert "tier" not in log.events[0] and log.events[1]["tier"] == "edge"
+
+
+def test_tier_plan_is_metadata_only(monkeypatch):
+    """The ledger plan must never gather device data to host: it works
+    on purely abstract ShapeDtypeStructs, and a full run never calls
+    jax.device_get."""
+    rt = ShardedFedRuntime(n_clients=8, rounds=1, n_silos=4)
+    local_fn = P.build_local_delta("logreg", 2, 0.05)
+    import repro.models.tabular as tabular
+    params = tabular.MODELS["logreg"]["init"](jax.random.PRNGKey(0), 15)
+    axs = jax.ShapeDtypeStruct((8, 4, 15), np.float32)
+    ays = jax.ShapeDtypeStruct((8, 4), np.float32)
+    plan = rt._tier_plan(local_fn, params, axs, ays)   # no real arrays
+    assert len(plan) == 4 and {e[4] for e in plan} == {"edge", "wan"}
+
+    def boom(*a, **k):
+        raise AssertionError("device_get on the sharded hot path")
+    monkeypatch.setattr(jax, "device_get", boom)
+    xs, ys = C.build_cohort("framingham_like:8:4", seed=0)
+    rt2 = ShardedFedRuntime(n_clients=8, rounds=2, n_silos=4)
+    rt2.run(local_fn, params, xs, ys)
+    assert len(rt2.comm.events) == 8  # 4 tier events x 2 rounds
+
+
+# --- validation -------------------------------------------------------------
+
+def test_silos_must_divide_clients():
+    with pytest.raises(ValueError, match="divide"):
+        ShardedFedRuntime(n_clients=10, rounds=1, n_silos=3)
+
+
+def test_float_transports_rejected():
+    with pytest.raises(ValueError):
+        ShardedFedRuntime(n_clients=4, rounds=1, transport="sparse")
+    ShardedFedRuntime(n_clients=4, rounds=1, transport="framed")  # ok
+
+
+def test_unsupported_axes_rejected():
+    xs, ys = C.build_cohort("framingham_like:4:8", seed=0)
+    for kw in (dict(sampling="smote"), dict(participation="uniform:2"),
+               dict(schedule="async:2")):
+        with pytest.raises(ValueError):
+            P.train_federated_sharded((xs, ys), _cfg(**kw))
+
+
+def test_cli_mesh_requires_cohort():
+    from repro.launch.fed_train import simulate_parametric
+    with pytest.raises(ValueError, match="cohort"):
+        simulate_parametric(mesh="host", verbose=False)
+    with pytest.raises(ValueError, match="cohort"):
+        simulate_parametric(silos=4, verbose=False)
+
+
+def test_cli_cohort_path():
+    from repro.launch.fed_train import simulate_parametric
+    out = simulate_parametric(cohort="framingham_like:16:16", silos=4,
+                              rounds=2, local_steps=4, verbose=False)
+    assert {"edge", "wan"} == set(out["comm"].per_tier_bytes("up"))
+    assert 0.0 <= out["metrics"]["f1"] <= 1.0
+
+
+def test_mesh_spec_registry():
+    from repro.launch.mesh import MESHES, get_fed_mesh
+    assert {"single", "host"} <= set(MESHES)
+    assert get_fed_mesh(None) is None
+    assert get_fed_mesh("single") is None
+    with pytest.raises(KeyError):
+        get_fed_mesh("nope")
+    with pytest.raises(ValueError):
+        get_fed_mesh("host:999")   # more devices than exist
+
+
+# --- real 8-device mesh (subprocess, tier 2) --------------------------------
+
+SCRIPT_MESH = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np
+from repro.core import parametric as P
+from repro.core.runtime import ShardedFedRuntime
+from repro.data.cohort import build_cohort
+assert jax.device_count() == 8
+xs, ys = build_cohort("framingham_like:64:16", seed=0)
+cfg = P.FedParametricConfig(model="logreg", rounds=3, local_steps=5,
+                            lr=0.05)
+pm, comm, _, _ = P.train_federated_sharded((xs, ys), cfg, mesh="host",
+                                           silos=8)
+pn, *_ = P.train_federated_sharded((xs, ys), cfg, mesh=None, silos=8)
+d = max(float(np.max(np.abs(a - b)))
+        for a, b in zip(jax.tree.leaves(pm), jax.tree.leaves(pn)))
+assert d <= ShardedFedRuntime.PARITY_ATOL, d
+assert set(comm.per_tier_bytes("up")) == {"edge", "wan"}
+print("MESH-OK")
+"""
+
+
+@pytest.mark.slow
+def test_mesh_parity_8_devices():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", SCRIPT_MESH], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "MESH-OK" in out.stdout

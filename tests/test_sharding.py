@@ -100,3 +100,33 @@ def test_constrain_under_mesh_runs():
     with jax.sharding.set_mesh(mesh):
         y = f(jnp.ones((4, 3, 8)))
     np.testing.assert_allclose(np.asarray(y), 2.0)
+
+
+def test_fed_rules_phase():
+    """The 'fed' phase maps only the clients logical axis — LM phases
+    are untouched by its existence."""
+    from repro.sharding.rules import FED_RULES, rules_for_phase
+    assert rules_for_phase("fed") is FED_RULES
+    assert FED_RULES == {"clients": "clients"}
+    assert rules_for_phase("train") is TRAIN_RULES
+    assert rules_for_phase("decode") is DECODE_RULES
+    assert rules_for_phase("decode", "long_500k") is LONG_DECODE_RULES
+    assert "clients" not in TRAIN_RULES
+    assert "clients" not in DECODE_RULES
+
+
+def test_fed_rules_clients_axis_divisibility():
+    """Client-axis placement shards when divisible, replicates when
+    not — same degradation contract as the LM rules."""
+    from repro.sharding.rules import FED_RULES
+    n = jax.device_count()
+    if n < 2:
+        pytest.skip("needs >= 2 host devices")
+    mesh = jax.make_mesh((n,), ("clients",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    ctx = ShardingCtx(mesh=mesh, rules=dict(FED_RULES))
+    assert ctx.spec(["clients", None, None], (4 * n, 8, 15)) == \
+        P("clients", None, None)
+    assert ctx.spec(["clients", None], (4 * n + 1, 8)) == P(None, None)
+    # unknown logical names replicate
+    assert ctx.spec(["batch"], (4 * n,)) == P(None)

@@ -60,6 +60,8 @@ REGISTRIES = [
     ("repro.serve.load", "ARRIVALS"),
     ("repro.serve.load", "SERVICE"),
     ("repro.kernels.autotune", "TUNABLES"),
+    ("repro.data.cohort", "COHORTS"),
+    ("repro.launch.mesh", "MESHES"),
 ]
 
 
