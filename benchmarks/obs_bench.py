@@ -1,0 +1,264 @@
+"""Observability overhead bench: what tracing costs per federated round.
+
+Three timings isolate the instrumentation layer from real model compute
+(a near-zero-work :class:`~repro.core.runtime.ClientWork` plugin makes
+round time ≈ runtime bookkeeping, the hot path the tracer guards sit
+on):
+
+* ``obs/round_baseline`` — a hand-inlined copy of the pre-observability
+  sync round loop (participation plan, ledger logging, timeline record,
+  aggregate), with no runtime object at all.  Context row: what the
+  bookkeeping itself costs.
+* ``obs/round_traced_off`` — the instrumented :class:`FedRuntime` with
+  the disabled ``NULL_TRACER``.  The zero-overhead-when-off contract:
+  every guard is one falsy-object truthiness check, no allocations
+  (bit-exactness is gated separately in tests/test_obs.py and
+  ``repro.launch.trace --smoke``; this row gates the *time* via the
+  perf trajectory).
+* ``obs/round_traced_on`` — the same run with a live virtual-clock
+  :class:`Tracer`.  Documented bound: ≤ ``ON_OVERHEAD_X`` × the
+  traced-off round plus an absolute floor (event dicts + per-track
+  stacks are O(spans/round); the bound is generous because these
+  rounds do no model work, so the *relative* cost here is the
+  worst case — real training rounds amortize it to noise).
+
+``obs/guard_1k`` times 1000 disabled-tracer guard checks directly —
+the off-path cost the ≤1% claim rests on, gated at an absolute bound.
+
+The ≤1% traced-off gate (``obs/off_overhead_pct``): instrumented-but-
+off differs from pre-instrumentation code *only* in the guards, so the
+per-round off overhead is (guards/round) × (per-check time from the
+guard micro-bench).  That estimate, as a percentage of a **real**
+measured training round (tiny logreg federation, jit-warmed), must stay
+under ``OFF_OVERHEAD_PCT`` — the zero-allocation claim in time terms.
+
+Rows land in ``results/obs/obs_bench.json`` and gate against the
+repo-root ``BENCH_obs.json`` trajectory through the generic
+``tools/perf_gate.py`` (the ``obs-smoke`` CI job)::
+
+  PYTHONPATH=src python -m benchmarks.obs_bench --smoke
+  PYTHONPATH=src python tools/perf_gate.py --check --smoke \\
+      --current results/obs/obs_bench.json --bench BENCH_obs.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from benchmarks.kernels_bench import bench_meta  # noqa: E402
+from repro.core.comm import CommLog  # noqa: E402
+from repro.core.participation import get_participation  # noqa: E402
+from repro.core.runtime import (ClientMsg, ClientWork, FedRuntime,  # noqa: E402
+                                ServerAgg)
+from repro.obs import NULL_TRACER, Tracer  # noqa: E402
+
+OUT = "results/obs/obs_bench.json"
+N_CLIENTS = 8
+#: traced-on bound: per-round time ≤ ON_OVERHEAD_X × traced-off + floor
+ON_OVERHEAD_X = 2.5
+ON_FLOOR_US = 200.0
+#: 1000 disabled-tracer guard checks must stay under this — the bound
+#: includes the Python loop driving them (~30us of the budget by
+#: itself), so it holds only while each check is a bare __bool__ call
+#: with no allocation behind it
+GUARD_1K_US = 200.0
+#: traced-off overhead on a real training round (guards/round × guard
+#: cost, vs the measured round time) must stay under this percentage
+OFF_OVERHEAD_PCT = 1.0
+
+
+class _TinyWork(ClientWork, ServerAgg):
+    """Near-zero compute: tiny numpy payloads, counting aggregate."""
+
+    def __init__(self):
+        self.payload = np.zeros(8, np.float32)
+
+    def setup(self, rt):
+        return 0
+
+    def client_round(self, rt, state, rnd):
+        msgs = []
+        nb = self.payload.nbytes
+        for c in rnd.computing:
+            rt.log_down(rnd.index, c, nb, "model")
+            rt.log_up(rnd.index, c, nb, "update")
+            msgs.append(ClientMsg(c, self.payload, nb))
+        return msgs
+
+    def aggregate(self, rt, state, msgs, rnd):
+        return state + len(msgs)
+
+
+def _baseline_rounds(rounds: int) -> float:
+    """The pre-observability sync loop, hand-inlined: same plan /
+    ledger / timeline / aggregate work, no runtime object, no guards."""
+    comm = CommLog()
+    part = get_participation("full")
+    rng = np.random.default_rng([0, 0xFED])
+    payload = np.zeros(8, np.float32)
+    nb = payload.nbytes
+    now, state = 0.0, 0
+    for r in range(rounds):
+        plan = part.plan(r, N_CLIENTS, rng)
+        computing = sorted(plan.arrive)
+        msgs = []
+        for c in computing:
+            comm.log(r, f"c{c}", "down", nb, "model")
+            comm.log(r, f"c{c}", "up", nb, "update")
+            msgs.append(ClientMsg(c, payload, nb))
+        now += 1.0
+        state += len(msgs)
+        comm.timeline.append(
+            {"round": r, "t": now, "n_clients": len(msgs),
+             "n_msgs": len(msgs), "staleness": [0] * len(msgs),
+             "bytes": nb * len(msgs)})
+    return state
+
+
+def _runtime_rounds(rounds: int, tracer) -> None:
+    rt = FedRuntime(n_clients=N_CLIENTS, rounds=rounds, tracer=tracer)
+    rt.run(_TinyWork())
+
+
+def _time_us(fn, iters: int) -> float:
+    """Min-over-iters wall time of one fn() call, in microseconds."""
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _guard_1k_us(iters: int) -> float:
+    tr = NULL_TRACER
+
+    def body():
+        n = 0
+        for _ in range(1000):
+            if tr:           # the exact hot-path guard shape
+                n += 1
+        return n
+
+    return _time_us(body, iters)
+
+
+def _real_round_us(iters: int) -> float:
+    """Per-round time of a real (tiny, jit-warmed) logreg federation —
+    the denominator for the ≤1% off-overhead gate."""
+    from repro.core import parametric as P
+    from repro.data import framingham as F
+    ds = F.synthesize(n=200, seed=1)
+    train, _ = F.train_test_split(ds)
+    clients = [(c.x, c.y) for c in F.partition_clients(train, 3)]
+    cfg = P.FedParametricConfig(model="logreg", rounds=3, local_steps=4,
+                                seed=0)
+    P.train_federated(clients, cfg)       # warm the jit caches
+    return _time_us(lambda: P.train_federated(clients, cfg),
+                    iters) / cfg.rounds
+
+
+def run(smoke: bool = False) -> List[Dict]:
+    rounds = 100 if smoke else 400
+    iters = 5 if smoke else 10
+    meta = bench_meta()
+
+    base = _time_us(lambda: _baseline_rounds(rounds), iters) / rounds
+    off = _time_us(lambda: _runtime_rounds(rounds, NULL_TRACER),
+                   iters) / rounds
+    on = _time_us(
+        lambda: _runtime_rounds(rounds, Tracer(clock="virtual")),
+        iters) / rounds
+    guard = _guard_1k_us(iters)
+    real = _real_round_us(iters)
+    # guards on one sync round of n clients: log_down/log_up/encode per
+    # client plus the span/timeline/drop-branch checks
+    n_guards = 3 * N_CLIENTS + 4
+    off_us = n_guards * guard / 1000.0
+    off_pct = 100.0 * off_us / real
+
+    rows = [
+        {"name": "obs/round_baseline", "us": base,
+         "note": f"hand-inlined loop;n_clients={N_CLIENTS}", **meta},
+        {"name": "obs/round_traced_off", "us": off,
+         "note": f"FedRuntime+NULL_TRACER;n_clients={N_CLIENTS}",
+         **meta},
+        {"name": "obs/round_traced_on", "us": on,
+         "note": f"FedRuntime+Tracer;bound={ON_OVERHEAD_X}x+"
+         f"{ON_FLOOR_US:.0f}us", **meta},
+        {"name": "obs/guard_1k", "us": guard,
+         "note": f"1000 falsy guard checks;bound={GUARD_1K_US:.0f}us",
+         **meta},
+        {"name": "obs/off_overhead_pct", "us": off_us,
+         "note": f"pct={off_pct:.4f};guards={n_guards};"
+         f"real_round_us={real:.0f};bound={OFF_OVERHEAD_PCT}%",
+         **meta},
+    ]
+    for r in rows:
+        print(f"  {r['name']:<26} {r['us']:>10.1f}us  {r['note']}")
+    return rows
+
+
+def check_bounds(rows: List[Dict]) -> List[str]:
+    """The in-bench overhead gates (trajectory drift is perf_gate's
+    job; these are the absolute documented bounds)."""
+    by = {r["name"]: r["us"] for r in rows}
+    failures = []
+    limit_on = by["obs/round_traced_off"] * ON_OVERHEAD_X + ON_FLOOR_US
+    if by["obs/round_traced_on"] > limit_on:
+        failures.append(
+            f"traced-on round {by['obs/round_traced_on']:.1f}us > "
+            f"{limit_on:.1f}us ({ON_OVERHEAD_X}x traced-off + "
+            f"{ON_FLOOR_US:.0f}us)")
+    if by["obs/guard_1k"] > GUARD_1K_US:
+        failures.append(
+            f"1000 disabled guards took {by['obs/guard_1k']:.1f}us > "
+            f"{GUARD_1K_US:.0f}us — the off path is no longer a bare "
+            f"truthiness check")
+    (pct_row,) = [r for r in rows
+                  if r["name"] == "obs/off_overhead_pct"]
+    pct = float(pct_row["note"].split("pct=")[1].split(";")[0])
+    if pct > OFF_OVERHEAD_PCT:
+        failures.append(
+            f"traced-off overhead {pct:.3f}% of a real round > "
+            f"{OFF_OVERHEAD_PCT}% ({pct_row['note']})")
+    return failures
+
+
+def save_rows(rows: List[Dict], path: str = OUT,
+              smoke: bool = False) -> str:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump({"meta": {**bench_meta(), "smoke": smoke},
+                   "rows": rows}, f, indent=1)
+        f.write("\n")
+    return path
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI shape set (fewer rounds/iters)")
+    ap.add_argument("--out", default=OUT)
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke)
+    save_rows(rows, args.out, smoke=args.smoke)
+    print(f"wrote {args.out}")
+    failures = check_bounds(rows)
+    for f in failures:
+        print(f"OVERHEAD  {f}", file=sys.stderr)
+    print(f"obs_bench: {len(failures)} overhead-bound failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

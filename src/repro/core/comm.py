@@ -37,6 +37,10 @@ def pytree_bytes(tree) -> int:
 @dataclass
 class CommLog:
     events: List[Dict] = field(default_factory=list)
+    #: per-aggregation records in the unified timeline schema
+    #: (``FedRuntime._timeline_record``: round / t / n_clients /
+    #: staleness / bytes); empty for ledgers not driven by a runtime
+    timeline: List[Dict] = field(default_factory=list)
 
     def log(self, round_idx: int, client: str, direction: str,
             nbytes: int, what: str = "", t: Optional[float] = None,
@@ -118,7 +122,12 @@ class WireCtx:
     client inside *this round's* active set (pairwise secure-agg masks
     must cancel among the clients that actually ship), ``weight_scale``
     is the pre-folded combine weight for weighted strategies, and
-    ``sensitivity`` calibrates server-side DP noise."""
+    ``sensitivity`` calibrates server-side DP noise.
+
+    ``tracer``/``t`` are set by the runtime only when tracing is enabled
+    (``repro.obs``): :meth:`Transport.encode` then records per-layer
+    bytes in/out events.  Both default to ``None`` so untraced encoding
+    does no observability work at all."""
     round: int = 0
     client: int = 0
     slot: int = 0
@@ -126,6 +135,8 @@ class WireCtx:
     seed: int = 0
     weight_scale: float = 1.0
     sensitivity: float = 1.0
+    tracer: Any = None
+    t: Optional[float] = None
 
 
 @dataclass
@@ -287,8 +298,15 @@ class Transport:
                       pytree_bytes(payload) if nbytes is None else nbytes,
                       state)
         ctx = ctx or WireCtx()
+        tr = ctx.tracer
         for layer in self.layers:
+            b_in = msg.nbytes if tr else 0
             msg = layer.encode(msg, ctx)
+            if tr:  # per-layer wire accounting (repro.obs)
+                tr.instant("comm.layer", track="comm", t=ctx.t,
+                           layer=layer.name, round=ctx.round,
+                           client=ctx.client, bytes_in=b_in,
+                           bytes_out=msg.nbytes)
         return msg
 
     def post_aggregate(self, payload, ctx: Optional[WireCtx] = None):

@@ -77,6 +77,7 @@ federation.
 from __future__ import annotations
 
 import heapq
+import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
@@ -90,6 +91,7 @@ from repro.core.comm import (CommLog, MaskLayer, Timer, Transport, WireCtx,
 from repro.core.latency import Draw, get_latency
 from repro.core.participation import Participation, get_participation
 from repro.core.strategies import get_strategy
+from repro.obs import current as _ambient_tracer
 
 
 #: schedule name -> what the mode does.  Resolved via
@@ -213,6 +215,12 @@ class FedRuntime:
     comm: CommLog = field(default_factory=CommLog)
     timer: Timer = field(default_factory=Timer)
     transport_cfg: Optional[dict] = None
+    #: ``None`` resolves to the ambient :func:`repro.obs.current` tracer
+    #: (the falsy NULL_TRACER unless a run installed one), so existing
+    #: entry points pick up tracing without signature churn.  Every hot
+    #: path guards with ``if tr:`` — traced-off runs are bit-exact with
+    #: untraced ones (tests/test_obs.py).
+    tracer: Any = None
 
     def __post_init__(self):
         self.participation = get_participation(self.participation)
@@ -221,7 +229,9 @@ class FedRuntime:
         self.schedule_mode, self.agg_every = get_schedule(self.schedule)
         self.latency = get_latency(self.latency, seed=self.seed)
         self.now = 0.0            # virtual wall clock (seconds)
-        self.timeline: List[Dict] = []   # one record per aggregation
+        # one record per aggregation, shared with the comm ledger so
+        # entry points that only hold the CommLog can surface it
+        self.timeline: List[Dict] = self.comm.timeline
         has_mask = any(isinstance(l, MaskLayer)
                        for l in self.transport.layers)
         if (self.allow_stale and self.participation.may_straggle
@@ -249,6 +259,8 @@ class FedRuntime:
                     f"masks would never cancel in the server sum.  Drop "
                     f"the mask layer or use schedule 'sync'")
         self._rng = np.random.default_rng([self.seed, 0xFED])
+        if self.tracer is None:
+            self.tracer = _ambient_tracer()
 
     # -- ledger helpers ----------------------------------------------------
 
@@ -262,14 +274,18 @@ class FedRuntime:
     def log_up(self, round_idx: int, client: int, nbytes: int, what: str):
         self.comm.log(round_idx, f"{self.client_prefix}{client}", "up",
                       nbytes, what, t=self._stamp())
+        if self.tracer:
+            self.tracer.metrics.inc("bytes_up", nbytes)
 
     def log_down(self, round_idx: int, client: int, nbytes: int,
                  what: str):
         """Broadcast accounting; framing overhead applies to the
         downlink too."""
+        wire = nbytes + self.transport.frame_overhead
         self.comm.log(round_idx, f"{self.client_prefix}{client}", "down",
-                      nbytes + self.transport.frame_overhead, what,
-                      t=self._stamp())
+                      wire, what, t=self._stamp())
+        if self.tracer:
+            self.tracer.metrics.inc("bytes_down", wire)
 
     # -- transport helpers -------------------------------------------------
 
@@ -281,6 +297,8 @@ class FedRuntime:
         ctx = WireCtx(round=round_idx, client=client, slot=slot,
                       n_active=n_active, seed=self.seed,
                       weight_scale=weight_scale)
+        if self.tracer:  # per-layer byte events (repro.obs)
+            ctx.tracer, ctx.t = self.tracer, self.now
         return self.transport.encode(payload, nbytes=nbytes, state=state,
                                      ctx=ctx)
 
@@ -290,6 +308,27 @@ class FedRuntime:
         ctx = WireCtx(round=round_idx, seed=self.seed,
                       sensitivity=sensitivity)
         return self.transport.post_aggregate(payload, ctx)
+
+    # -- timeline ----------------------------------------------------------
+
+    def _timeline_record(self, round_idx: int, msgs: List[ClientMsg]):
+        """Append one per-aggregation timeline record with the unified
+        schema shared by the sync and async paths: ``round``, ``t``
+        (virtual clock), ``n_clients`` (messages folded into this
+        aggregation), ``staleness`` (per message), ``bytes`` (wire bytes
+        those messages occupied).  ``n_msgs`` is kept as a legacy alias
+        of ``n_clients`` — tests/test_obs.py gates the schema."""
+        self.timeline.append(
+            {"round": round_idx, "t": self.now,
+             "n_clients": len(msgs), "n_msgs": len(msgs),
+             "staleness": [m.staleness for m in msgs],
+             "bytes": sum(m.nbytes for m in msgs)})
+        tr = self.tracer
+        if tr:
+            tr.metrics.inc("msgs_delivered", len(msgs))
+            for m in msgs:
+                if m.staleness > 0:
+                    tr.metrics.observe("staleness_rounds", m.staleness)
 
     # -- the round loop ----------------------------------------------------
 
@@ -313,6 +352,7 @@ class FedRuntime:
 
     def _run_sync(self, work: ClientWork, agg: ServerAgg, state):
         pending: List[ClientMsg] = []
+        tr = self.tracer
         for r in range(self.rounds):
             plan = self.participation.plan(r, self.n_clients, self._rng)
             arrive = sorted(plan.arrive)
@@ -324,21 +364,39 @@ class FedRuntime:
                 stragglers = []
                 if not arrive and plan.stragglers:
                     arrive = sorted(plan.stragglers)[:1]
+                if tr:
+                    for c in sorted(set(plan.stragglers) - set(arrive)):
+                        tr.instant("fed.drop", track=f"c{c}", t=self.now,
+                                   round=r, reason="straggler")
             computing = sorted(set(arrive) | set(stragglers))
             rnd = RoundInfo(r, computing, arrive, stragglers)
+            t_start = self.now
             msgs = (work.client_round(self, state, rnd)
                     if computing else [])
             # the synchronous barrier: the round takes as long as the
             # slowest computing client (drops are a participation-axis
             # concern in sync mode, so the dropped flag is ignored)
-            self.now += (max(self._draw(c).delay for c in computing)
-                         if self.latency is not None and computing
-                         else 1.0)
+            if self.latency is not None and computing:
+                delays = [self._draw(c).delay for c in computing]
+                self.now += max(delays)
+            else:
+                delays = None
+                self.now += 1.0
+            if tr:
+                for j, c in enumerate(computing):
+                    dt = delays[j] if delays is not None else 1.0
+                    tr.span_at("client.compute", t_start, t_start + dt,
+                               track=f"c{c}", round=r,
+                               straggler=c in stragglers)
             late_set = set(stragglers)
             fresh = [m for m in msgs if m.client not in late_set]
             late = [m for m in msgs if m.client in late_set]
             for m in late:
                 m.staleness += 1
+                if tr:
+                    tr.instant("fed.straggle", track=f"c{m.client}",
+                               t=self.now, round=r,
+                               staleness=m.staleness)
             for m in pending:  # stale-update handling: discount the
                 # payload itself, so the reduced contribution holds for
                 # every aggregator (uniform means, weighted combines,
@@ -349,9 +407,15 @@ class FedRuntime:
             pending = late
             if deliver:
                 state = agg.aggregate(self, state, deliver, rnd)
-                self.timeline.append(
-                    {"round": r, "t": self.now, "n_msgs": len(deliver),
-                     "staleness": [m.staleness for m in deliver]})
+                self._timeline_record(r, deliver)
+            if tr:
+                tr.span_at("fed.round", t_start, self.now,
+                           track="server", round=r,
+                           n_computing=len(computing),
+                           n_delivered=len(deliver),
+                           n_stragglers=len(stragglers),
+                           bytes=sum(m.nbytes for m in deliver))
+                tr.metrics.observe("round_s", self.now - t_start)
         return state
 
     def _run_async(self, work: ClientWork, agg: ServerAgg, state):
@@ -374,6 +438,11 @@ class FedRuntime:
         buffer: List[ClientMsg] = []
         ready = list(range(self.n_clients))
         version, seq = 0, 0
+        tr = self.tracer
+        # open client.compute span handles by dispatch seq (explicit
+        # begin/end: a span opened at dispatch closes many events later)
+        open_spans: Dict[int, Any] = {}
+        last_agg_t = 0.0
         # with a drop-everything availability model arrivals never come;
         # bound total dispatches so the loop fails loudly instead
         budget = 64 * (self.rounds + 1) * max(self.n_clients, 1)
@@ -397,17 +466,30 @@ class FedRuntime:
                                           m.client,
                                           None if d.dropped else m,
                                           version))
+                    if tr:
+                        open_spans[seq] = tr.begin(
+                            "client.compute", track=f"c{m.client}",
+                            t=self.now, version=version)
                     seq += 1
                 continue
             if not heap:
                 raise RuntimeError("async runtime stalled: no client "
                                    "ready and nothing in flight")
-            t, _, client, msg, v0 = heapq.heappop(heap)
+            t, s, client, msg, v0 = heapq.heappop(heap)
             self.now = max(self.now, t)
             if msg is None:          # upload lost in transit: the bytes
-                ready.append(client)  # were spent; the client retries
+                if tr:                # were spent; the client retries
+                    tr.end(open_spans.pop(s), t=self.now, dropped=True)
+                    tr.instant("fed.drop", track=f"c{client}",
+                               t=self.now, version=version,
+                               reason="transit")
+                    tr.metrics.inc("msgs_dropped")
+                ready.append(client)
                 continue              # on the then-current model
             msg.staleness = version - v0
+            if tr:
+                tr.end(open_spans.pop(s), t=self.now,
+                       staleness=msg.staleness)
             buffer.append(msg)
             if len(buffer) < K:
                 continue
@@ -420,12 +502,24 @@ class FedRuntime:
             arrived = sorted(m.client for m in buffer)
             rnd = RoundInfo(version, arrived, arrived, [])
             state = agg.aggregate(self, state, buffer, rnd)
-            self.timeline.append(
-                {"round": version, "t": self.now, "n_msgs": len(buffer),
-                 "staleness": [m.staleness for m in buffer]})
+            self._timeline_record(version, buffer)
+            if tr:
+                tr.instant("fed.aggregate", track="server", t=self.now,
+                           version=version, n_msgs=len(buffer),
+                           staleness=[m.staleness for m in buffer],
+                           bytes=sum(m.nbytes for m in buffer))
+                tr.metrics.observe("round_s",
+                                   max(self.now - last_agg_t, 0.0))
+                last_agg_t = self.now
             version += 1
             ready.extend(m.client for m in buffer)
             buffer = []
+        if tr:
+            # the run stops mid-flight once `rounds` aggregations land;
+            # truncate still-open compute spans at the final clock so
+            # traces never leak open spans (tests/test_obs.py)
+            for s in sorted(open_spans, reverse=True):
+                tr.end(open_spans.pop(s), t=self.now, inflight=True)
         return state
 
 
@@ -478,6 +572,12 @@ class ShardedFedRuntime:
     seed: int = 0
     comm: CommLog = field(default_factory=CommLog)
     timer: Timer = field(default_factory=Timer)
+    #: ``None`` resolves to the ambient tracer; per-round spans use the
+    #: process wall clock (this runtime has no virtual clock) and the
+    #: per-tier byte events come from the same metadata-only plan the
+    #: ledger uses — tracing never adds a device-to-host gather
+    #: (regression-tested in tests/test_obs.py).
+    tracer: Any = None
 
     #: documented mesh-vs-single-device parity tolerance (float32): the
     #: silo tree-reduce reorders the cross-client sum, which perturbs
@@ -499,6 +599,8 @@ class ShardedFedRuntime:
             self.strategy = get_strategy(self.strategy)
         self.transport = get_transport(self.transport)
         self.transport.require_bytes_only("sharded")
+        if self.tracer is None:
+            self.tracer = _ambient_tracer()
 
     @property
     def n_devices(self) -> int:
@@ -580,7 +682,9 @@ class ShardedFedRuntime:
         round_fn = self.build_round(local_fn)
         server_state = self.strategy.init_state(params)
         history: List[Dict] = []
+        tr = self.tracer
         for r in range(self.rounds):
+            t0 = time.perf_counter() if tr else 0.0
             with self.timer:
                 params, server_state = round_fn(params, server_state,
                                                 xs, ys)
@@ -588,6 +692,20 @@ class ShardedFedRuntime:
             for client, direction, nbytes, what, tier in plan:
                 self.comm.log(r, client, direction, nbytes, what,
                               tier=tier)
+            if tr:  # spans from the same metadata-only plan as the
+                # ledger — never a device-to-host gather
+                t1 = time.perf_counter()
+                tr.span_at("fed.round", t0, t1, track="server", round=r,
+                           n_clients=self.n_clients,
+                           n_silos=self.n_silos)
+                tr.metrics.observe("round_s", t1 - t0)
+                for client, direction, nbytes, what, tier in plan:
+                    tr.instant("fed.tier", track=f"tier:{tier}", t=t1,
+                               round=r, client=client,
+                               direction=direction, bytes=nbytes,
+                               what=what)
+                    tr.metrics.inc("bytes_up" if direction == "up"
+                                   else "bytes_down", nbytes)
             if eval_fn is not None:
                 history.append(dict(eval_fn(params), round=r))
         return params, history

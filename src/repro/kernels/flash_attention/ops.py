@@ -10,6 +10,7 @@ from repro.kernels import autotune
 from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.models.attention import chunked_attention
+from repro.obs import annotate
 
 
 def _on_cpu() -> bool:
@@ -29,10 +30,13 @@ def attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
     if impl in ("pallas", "pallas_interpret"):
         cfg = autotune.resolve("flash_attention", q.shape, q.dtype,
                                block_q=block_q, block_kv=block_kv)
-        return flash_attention(q, k, v, causal=causal, window=window,
-                               block_q=cfg["block_q"],
-                               block_kv=cfg["block_kv"],
-                               interpret=(impl == "pallas_interpret"))
+        with annotate("kernels.flash_attention.pallas"):
+            return flash_attention(q, k, v, causal=causal, window=window,
+                                   block_q=cfg["block_q"],
+                                   block_kv=cfg["block_kv"],
+                                   interpret=(impl == "pallas_interpret"))
     if impl == "xla":
-        return chunked_attention(q, k, v, causal=causal, window=window)
+        with annotate("kernels.flash_attention.xla"):
+            return chunked_attention(q, k, v, causal=causal,
+                                     window=window)
     return attention_ref(q, k, v, causal=causal, window=window)

@@ -45,6 +45,7 @@ from jax.experimental import pallas as pl
 
 from repro.kernels import autotune
 from repro.kernels.forest_infer.ref import forest_infer_ref
+from repro.obs import annotate
 
 MODES = ("vote", "margin")
 
@@ -196,12 +197,14 @@ def forest_score(forest, x, *, mode: str, lr: float = 1.0,
                                block_n=block_n)
         interpret = (impl == "pallas_interpret"
                      or jax.default_backend() == "cpu")
-        return fused_forest_score_pallas(
-            forest.feature, forest.threshold, forest.leaf, x, mode=mode,
-            lr=lr, base=base, platt=platt, block_n=cfg["block_n"],
-            interpret=interpret)
+        with annotate("kernels.forest_score.pallas"):
+            return fused_forest_score_pallas(
+                forest.feature, forest.threshold, forest.leaf, x,
+                mode=mode, lr=lr, base=base, platt=platt,
+                block_n=cfg["block_n"], interpret=interpret)
     if impl != "xla":
         raise ValueError(f"unknown forest_score impl {impl!r}")
-    return fused_forest_score_ref(forest.feature, forest.threshold,
-                                  forest.leaf, x, mode=mode, lr=lr,
-                                  base=base, platt=platt)
+    with annotate("kernels.forest_score.xla"):
+        return fused_forest_score_ref(forest.feature, forest.threshold,
+                                      forest.leaf, x, mode=mode, lr=lr,
+                                      base=base, platt=platt)

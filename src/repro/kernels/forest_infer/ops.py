@@ -8,6 +8,7 @@ import jax
 from repro.kernels import autotune
 from repro.kernels.forest_infer.kernel import forest_infer_pallas
 from repro.kernels.forest_infer.ref import forest_infer_ref
+from repro.obs import annotate
 
 
 def forest_infer(forest, x, *, impl: str = "auto",
@@ -47,10 +48,13 @@ def forest_infer(forest, x, *, impl: str = "auto",
                                block_n=block_n)
         interpret = (impl == "pallas_interpret"
                      or jax.default_backend() == "cpu")
-        return forest_infer_pallas(forest.feature, forest.threshold,
-                                   forest.leaf, x, block_n=cfg["block_n"],
-                                   interpret=interpret)
+        with annotate("kernels.forest_infer.pallas"):
+            return forest_infer_pallas(forest.feature, forest.threshold,
+                                       forest.leaf, x,
+                                       block_n=cfg["block_n"],
+                                       interpret=interpret)
     if impl != "xla":
         raise ValueError(f"unknown forest_infer impl {impl!r}")
-    return forest_infer_ref(forest.feature, forest.threshold, forest.leaf,
-                            x)
+    with annotate("kernels.forest_infer.xla"):
+        return forest_infer_ref(forest.feature, forest.threshold,
+                                forest.leaf, x)

@@ -8,6 +8,7 @@ import jax
 from repro.kernels import autotune
 from repro.kernels.hist.kernel import hist_pallas
 from repro.kernels.hist.ref import hist_ref
+from repro.obs import annotate
 
 
 def gradient_histogram(bins, grad, hess, n_bins: int, *, impl: str = "auto",
@@ -54,6 +55,8 @@ def gradient_histogram(bins, grad, hess, n_bins: int, *, impl: str = "auto",
                                block_n=block_n, block_f=block_f)
         interpret = (impl == "pallas_interpret"
                      or jax.default_backend() == "cpu")
-        return hist_pallas(bins, grad, hess, n_bins, interpret=interpret,
-                           **cfg)
-    return hist_ref(bins, grad, hess, n_bins)
+        with annotate("kernels.hist.pallas"):
+            return hist_pallas(bins, grad, hess, n_bins,
+                               interpret=interpret, **cfg)
+    with annotate("kernels.hist.xla"):
+        return hist_ref(bins, grad, hess, n_bins)

@@ -8,6 +8,7 @@ import jax
 from repro.kernels import autotune
 from repro.kernels.ssd.kernel import ssd_pallas
 from repro.models.ssm import ssd_chunked
+from repro.obs import annotate
 
 
 def ssd(x, dt, a_log, b, c, chunk: Optional[int] = None, *,
@@ -21,6 +22,9 @@ def ssd(x, dt, a_log, b, c, chunk: Optional[int] = None, *,
         impl = "pallas" if jax.default_backend() != "cpu" else "xla"
     if impl in ("pallas", "pallas_interpret"):
         assert init_state is None, "pallas SSD path starts from zero state"
-        return ssd_pallas(x, dt, a_log, b, c, chunk,
-                          interpret=(impl == "pallas_interpret"))
-    return ssd_chunked(x, dt, a_log, b, c, chunk, init_state=init_state)
+        with annotate("kernels.ssd.pallas"):
+            return ssd_pallas(x, dt, a_log, b, c, chunk,
+                              interpret=(impl == "pallas_interpret"))
+    with annotate("kernels.ssd.xla"):
+        return ssd_chunked(x, dt, a_log, b, c, chunk,
+                           init_state=init_state)

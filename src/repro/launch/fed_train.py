@@ -376,11 +376,20 @@ def simulate_fed_hist(*, n_clients: int = 3, rounds: int = 20,
         per_what = {k: f"{v/1e6:.2f}MB"
                     for k, v in comm.per_what_bytes().items()}
         print(f"fed_hist: F1={metrics['f1']:.3f} "
-              f"uplink={comm.uplink_mb():.2f}MB {per_what} "
-              f"growth {timer.total_s:.2f}s ({engine} engine)")
+              f"uplink={comm.uplink_mb():.2f}MB ({tier_summary(comm)}) "
+              f"{per_what} growth {timer.total_s:.2f}s ({engine} engine)")
     return {"metrics": metrics, "comm": comm,
             "uplink_mb": comm.total_mb("up"), "round_s": timer.total_s,
-            "engine": engine}
+            "engine": engine, "timeline": comm.timeline}
+
+
+def tier_summary(comm) -> str:
+    """Per-tier uplink breakdown for the end-of-run summary line:
+    ``edge=…MB wan=…MB`` for hierarchical ledgers, ``star=…MB`` (the
+    flat total) when untiered — every mode prints it, not just the
+    sharded cohort path."""
+    return " ".join(f"{k}={v/1e6:.2f}MB"
+                    for k, v in sorted(comm.per_tier_bytes("up").items()))
 
 
 # --- tabular pipeline drivers (paper C1-C3 on the Framingham twin) ------------
@@ -461,15 +470,12 @@ def simulate_parametric(*, model: str = "logreg", n_clients: int = 3,
             test=cohort_testset(seed))
     metrics = history[-1] if history else {}
     if verbose and metrics:
-        tiers = comm.per_tier_bytes("up")
-        tier_s = " ".join(f"{k}={v/1e6:.2f}MB"
-                          for k, v in sorted(tiers.items()))
         print(f"parametric/{model}: F1={metrics['f1']:.3f} "
-              f"uplink={comm.uplink_mb():.2f}MB ({tier_s}) "
+              f"uplink={comm.uplink_mb():.2f}MB ({tier_summary(comm)}) "
               f"agg {timer.total_s:.2f}s ({schedule})")
     return {"params": params, "metrics": metrics, "history": history,
             "comm": comm, "uplink_mb": comm.total_mb("up"),
-            "round_s": timer.total_s}
+            "round_s": timer.total_s, "timeline": comm.timeline}
 
 
 def simulate_tree_subset(*, n_clients: int = 3, trees_per_client: int = 20,
@@ -498,9 +504,11 @@ def simulate_tree_subset(*, n_clients: int = 3, trees_per_client: int = 20,
     metrics = TS.evaluate_rf(model, test[0], test[1])
     if verbose:
         print(f"tree_subset: F1={metrics['f1']:.3f} "
-              f"uplink={comm.uplink_mb():.2f}MB ({schedule})")
+              f"uplink={comm.uplink_mb():.2f}MB ({tier_summary(comm)}) "
+              f"({schedule})")
     return {"model": model, "metrics": metrics, "comm": comm,
-            "uplink_mb": comm.total_mb("up"), "round_s": timer.total_s}
+            "uplink_mb": comm.total_mb("up"), "round_s": timer.total_s,
+            "timeline": comm.timeline}
 
 
 def simulate_feature_extract(*, n_clients: int = 3, rounds: int = 15,
@@ -530,9 +538,11 @@ def simulate_feature_extract(*, n_clients: int = 3, rounds: int = 15,
     metrics = FE.evaluate_fe(model, test[0], test[1])
     if verbose:
         print(f"feature_extract: F1={metrics['f1']:.3f} "
-              f"uplink={comm.uplink_mb():.2f}MB ({schedule})")
+              f"uplink={comm.uplink_mb():.2f}MB ({tier_summary(comm)}) "
+              f"({schedule})")
     return {"model": model, "metrics": metrics, "comm": comm,
-            "uplink_mb": comm.total_mb("up"), "round_s": timer.total_s}
+            "uplink_mb": comm.total_mb("up"), "round_s": timer.total_s,
+            "timeline": comm.timeline}
 
 
 # --- multi-pod dry-run artifact -----------------------------------------------
@@ -682,7 +692,8 @@ def main():
                    strategy=args.strategy, engine=args.engine,
                    sync_sampler=args.sync_sampler)
     print(f"final round loss {out['loss_history'][-1]:.4f}, "
-          f"uplink {out['uplink_mb']:.2f} MB, "
+          f"uplink {out['uplink_mb']:.2f} MB "
+          f"({tier_summary(out['comm'])}), "
           f"{out['round_s']:.2f}s in local training "
           f"({args.engine} engine, {args.strategy})")
 

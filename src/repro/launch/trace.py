@@ -1,0 +1,276 @@
+"""Traced scenario runner: any fed_train / serve_load scenario with the
+``repro.obs`` tracing layer on, exporting the trace artifact plus a
+per-round / per-tier summary.
+
+One command produces a Chrome-trace / Perfetto file, stamped on the
+same virtual clock the FedRuntime and the serve load engine share
+(docs/ARCHITECTURE.md §Observability)::
+
+  # (a) a sync federated run
+  PYTHONPATH=src python -m repro.launch.trace --mode parametric \\
+      --rounds 20 --n-clients 5 --out results/obs/sync
+
+  # (b) an async:K run on a latency model
+  PYTHONPATH=src python -m repro.launch.trace --mode parametric \\
+      --schedule async:2 --latency lognormal:0.1:0.5 \\
+      --out results/obs/async
+
+  # (c) a serve-load sweep
+  PYTHONPATH=src python -m repro.launch.trace --mode serve_load \\
+      --sweep --deadline 0.05 --out results/obs/sweep
+
+Each run writes ``<out>.jsonl`` (byte-stable event log) and
+``<out>.trace.json`` (load it at https://ui.perfetto.dev or
+chrome://tracing), then prints the aggregated span/metric summary.
+``--export`` overrides the exporter set with explicit
+``repro.obs.export.EXPORTERS`` specs (``jsonl:path,chrome:path``).
+
+CI gate (the ``obs-smoke`` job)::
+
+  PYTHONPATH=src python -m repro.launch.trace --smoke
+
+``--smoke`` asserts the non-negotiable contract: traced runs are
+**bit-exact** with untraced runs (sync, async, and serve-load parity —
+tracing must never perturb the simulation), the JSONL export is
+byte-stable and round-trips, and the Chrome export is valid
+trace-event JSON (``json.load`` + required keys).  Sample trace
+artifacts land in ``results/obs/`` for the CI artifact upload.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.obs import (Tracer, format_summary, get_exporter, jsonl_bytes,
+                       summarize, use)
+
+SMOKE_DIR = "results/obs"
+
+
+# --- scenario runners ---------------------------------------------------------
+
+def _fed_kwargs(args) -> dict:
+    return dict(n_clients=args.n_clients, rounds=args.rounds,
+                partition=args.partition, participation=args.participation,
+                transport=args.transport, schedule=args.schedule,
+                latency=args.latency, seed=args.seed,
+                n_records=args.n_records, verbose=args.verbose)
+
+
+def run_fed(mode: str, args, tracer) -> dict:
+    """One federated scenario under the tracer (virtual clock)."""
+    from repro.launch import fed_train as FT
+    kw = _fed_kwargs(args)
+    with use(tracer):
+        if mode == "parametric":
+            return FT.simulate_parametric(model=args.model, **kw)
+        if mode == "tree_subset":
+            return FT.simulate_tree_subset(**kw)
+        if mode == "feature_extract":
+            return FT.simulate_feature_extract(**kw)
+        if mode == "fed_hist":
+            return FT.simulate_fed_hist(**kw)
+    raise ValueError(f"unknown fed mode {mode!r}")
+
+
+def run_serve(args, tracer) -> dict:
+    """One serve-load run (or a QPS sweep) under the tracer."""
+    from repro.serve.load import (LoadConfig, qps_sweep, simulate_load,
+                                  sweep_rates)
+    cfg = LoadConfig(arrivals=args.arrivals, n_requests=args.requests,
+                     max_wait=args.max_wait, max_queue=args.max_queue,
+                     deadline=args.deadline, service=args.service,
+                     seed=args.seed)
+    with use(tracer):
+        if args.sweep:
+            from repro.serve.load import get_service
+            svc = get_service(args.service, args.seed)
+            bmax = max(cfg.bucket_sizes)
+            capacity = bmax / svc(bmax, bmax, 0)
+            rows, max_qps = qps_sweep(cfg, sweep_rates(capacity, n=6))
+            return {"rows": rows, "max_sustainable_qps": max_qps}
+        res = simulate_load(cfg)
+        return {"row": res.row, "records": res.records,
+                "batches": res.batches}
+
+
+def _export(tracer, args) -> list:
+    """Run the exporter set; returns the written paths."""
+    specs = (args.export.split(",") if args.export else
+             [f"jsonl:{args.out}.jsonl", f"chrome:{args.out}.trace.json"])
+    paths = []
+    for spec in specs:
+        get_exporter(spec)(tracer)
+        name, _, path = spec.partition(":")
+        if path:
+            paths.append(path)
+    return paths
+
+
+# --- the smoke gate -----------------------------------------------------------
+
+def _fed_fingerprint(out) -> str:
+    """Bit-exact digest of a fed run: final metrics, full history, the
+    ledger events, and the raw bytes of every param/model leaf."""
+    import hashlib
+
+    import jax
+    import numpy as np
+    h = hashlib.sha256()
+    h.update(json.dumps(out["metrics"], sort_keys=True).encode())
+    h.update(json.dumps(out.get("history", []), sort_keys=True,
+                        default=float).encode())
+    h.update(json.dumps(out["comm"].events, sort_keys=True).encode())
+    for leaf in jax.tree.leaves(out.get("params")):
+        h.update(np.asarray(leaf).tobytes())
+    return h.hexdigest()
+
+
+def _load_fingerprint(out) -> str:
+    return json.dumps({"row": out["row"], "records": out["records"],
+                       "batches": out["batches"]}, sort_keys=True)
+
+
+def smoke() -> int:
+    """Parity + exporter round-trip + Perfetto validity (CI gate)."""
+    import os
+
+    from repro.launch import fed_train as FT
+    from repro.serve.load import LoadConfig, simulate_load
+
+    os.makedirs(SMOKE_DIR, exist_ok=True)
+    failures = []
+
+    def check(name, fn):
+        try:
+            fn()
+            print(f"  ok   {name}")
+        except Exception as e:  # noqa: BLE001 — report all, then fail
+            failures.append((name, e))
+            print(f"  FAIL {name}: {e}")
+
+    fed_kw = dict(model="logreg", n_clients=3, rounds=3, local_steps=5,
+                  n_records=400, seed=0, verbose=False)
+    async_kw = dict(fed_kw, schedule="async:2",
+                    latency="lognormal:0.05:0.4")
+    load_cfg = LoadConfig(arrivals="poisson:2000", n_requests=500,
+                          deadline=0.05, max_queue=128, seed=0)
+    tracers = {}
+
+    def traced_equals_untraced():
+        for label, kw in (("sync", fed_kw), ("async", async_kw)):
+            base = _fed_fingerprint(FT.simulate_parametric(**kw))
+            tr = Tracer(clock="virtual", meta={"scenario": label})
+            with use(tr):
+                traced = _fed_fingerprint(FT.simulate_parametric(**kw))
+            assert traced == base, f"{label}: traced run diverged"
+            assert tr.events, f"{label}: tracer recorded no events"
+            tracers[label] = tr
+        base = _load_fingerprint(simulate_load(load_cfg).__dict__)
+        tr = Tracer(clock="virtual", meta={"scenario": "serve_load"})
+        res = simulate_load(load_cfg, tracer=tr)
+        assert _load_fingerprint(res.__dict__) == base, \
+            "serve_load: traced run diverged"
+        assert tr.events, "serve_load: tracer recorded no events"
+        tracers["serve_load"] = tr
+
+    def jsonl_round_trip():
+        for label, tr in sorted(tracers.items()):
+            data = jsonl_bytes(tr)
+            assert data == jsonl_bytes(tr), f"{label}: export not stable"
+            lines = [json.loads(l) for l in data.decode().splitlines()]
+            assert lines[0]["ph"] == "meta" and \
+                lines[-1]["ph"] == "metrics", f"{label}: bad framing"
+            assert len(lines) == len(tr.events) + 2, \
+                f"{label}: event count mismatch"
+            with open(f"{SMOKE_DIR}/trace_{label}.jsonl", "wb") as f:
+                f.write(data)
+
+    def chrome_is_valid():
+        for label, tr in sorted(tracers.items()):
+            path = f"{SMOKE_DIR}/trace_{label}.trace.json"
+            get_exporter(f"chrome:{path}")(tr)
+            with open(path) as f:
+                payload = json.load(f)     # Perfetto-format validity
+            evs = payload["traceEvents"]
+            assert evs, f"{label}: empty traceEvents"
+            for ev in evs:
+                assert ev["ph"] in ("X", "i", "C", "M"), ev
+                if ev["ph"] == "X":
+                    assert ev["dur"] >= 0 and "ts" in ev, ev
+
+    def summary_aggregates():
+        s = summarize(tracers["sync"])
+        assert any(r["name"] == "fed.round" for r in s["spans"]), \
+            "sync summary missing fed.round spans"
+        assert s["metrics"]["msgs_delivered"]["value"] > 0
+
+    print("trace --smoke (traced==untraced parity + exporter gates)")
+    check("traced == untraced (sync, async, serve_load)",
+          traced_equals_untraced)
+    check("jsonl export byte-stable + round-trips", jsonl_round_trip)
+    check("chrome export is valid Perfetto JSON", chrome_is_valid)
+    check("summary aggregates spans + metrics", summary_aggregates)
+    print(f"trace --smoke: {len(failures)} failures "
+          f"(artifacts in {SMOKE_DIR}/)")
+    return 1 if failures else 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="run a fed_train/serve_load scenario with tracing on")
+    ap.add_argument("--mode", default="parametric",
+                    choices=["parametric", "tree_subset",
+                             "feature_extract", "fed_hist", "serve_load"])
+    ap.add_argument("--out", default="results/obs/trace",
+                    help="artifact prefix: writes <out>.jsonl + "
+                    "<out>.trace.json")
+    ap.add_argument("--export", default=None,
+                    help="explicit exporter specs (comma-separated "
+                    "name[:path]; overrides --out defaults)")
+    ap.add_argument("--clock", default="virtual",
+                    choices=["virtual", "wall"])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quiet", dest="verbose", action="store_false")
+    # federated scenario axes (repro.launch.fed_train)
+    ap.add_argument("--model", default="logreg")
+    ap.add_argument("--n-clients", type=int, default=3)
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--partition", default="iid")
+    ap.add_argument("--participation", default="full")
+    ap.add_argument("--transport", default="plain")
+    ap.add_argument("--schedule", default="sync")
+    ap.add_argument("--latency", default=None)
+    ap.add_argument("--n-records", type=int, default=4238)
+    # serve-load scenario axes (repro.serve.load)
+    ap.add_argument("--arrivals", default="poisson:2000")
+    ap.add_argument("--requests", type=int, default=2000)
+    ap.add_argument("--service", default="affine:0.001:0.00001")
+    ap.add_argument("--max-wait", type=float, default=0.002)
+    ap.add_argument("--max-queue", type=int, default=None)
+    ap.add_argument("--deadline", type=float, default=0.05)
+    ap.add_argument("--sweep", action="store_true",
+                    help="serve_load: traced QPS ladder")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: parity + exporter round-trip + "
+                    "Perfetto validity")
+    args = ap.parse_args()
+    if args.smoke:
+        return smoke()
+    tracer = Tracer(clock=args.clock,
+                    meta={"mode": args.mode, "seed": args.seed,
+                          "schedule": args.schedule})
+    if args.mode == "serve_load":
+        run_serve(args, tracer)
+    else:
+        run_fed(args.mode, args, tracer)
+    paths = _export(tracer, args)
+    print(format_summary(summarize(tracer)))
+    for p in paths:
+        print(f"wrote {p}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

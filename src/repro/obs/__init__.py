@@ -1,0 +1,30 @@
+"""Unified tracing + metrics subsystem (see docs/ARCHITECTURE.md
+§Observability).
+
+Spans stamp from the same virtual clock the FedRuntime and the serve
+load engine share (wall-clock mode for benches), metrics follow the
+repo registry idiom, and exporters emit byte-stable JSONL, Chrome
+trace-event / Perfetto files, or an aggregated summary table.  The
+disabled tracer (``NULL_TRACER``) is falsy and allocation-free, so
+instrumented-but-off runs stay bit-exact with untraced runs.
+"""
+from .trace import (  # noqa: F401
+    NULL_TRACER,
+    NullTracer,
+    Tracer,
+    annotate,
+    annotations_enabled,
+    current,
+    install,
+    set_annotations,
+    use,
+)
+from .metrics import METRICS, MetricSpec, MetricsRegistry  # noqa: F401
+from .export import (  # noqa: F401
+    EXPORTERS,
+    chrome_payload,
+    format_summary,
+    get_exporter,
+    jsonl_bytes,
+    summarize,
+)

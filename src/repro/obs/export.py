@@ -1,0 +1,178 @@
+"""Trace exporters: ``jsonl`` (byte-stable event log), ``chrome``
+(Chrome trace-event / Perfetto format), ``summary`` (aggregated table).
+
+``EXPORTERS`` follows the repo registry idiom — selectable by name,
+``check_docs``-enforced — and :func:`get_exporter` resolves colon specs
+(``jsonl:results/trace.jsonl``, ``chrome:trace.json``, ``summary``)
+to a ``fn(tracer) -> payload`` closure that also writes the file when a
+path is given.
+
+Byte stability: ``jsonl_bytes`` serializes every event with
+``json.dumps(sort_keys=True)`` one per line, header line first and a
+final metrics line last.  Both the federated virtual-time runtimes and
+the serve-load simulator are deterministic given a seed, so a traced
+re-run produces an identical file — the golden trace snapshot and the
+same-seed replay property test both hinge on this.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Callable, Dict, List
+
+
+def _dumps(obj: Any) -> str:
+    return json.dumps(obj, sort_keys=True, separators=(",", ":"))
+
+
+def jsonl_bytes(tracer) -> bytes:
+    """One event per line: meta header, events in record order, metrics."""
+    lines = [_dumps({"ph": "meta", "clock": tracer.clock,
+                     "meta": tracer.meta})]
+    lines.extend(_dumps(ev) for ev in tracer.events)
+    lines.append(_dumps({"ph": "metrics",
+                         "metrics": tracer.metrics.snapshot()}))
+    return ("\n".join(lines) + "\n").encode()
+
+
+def chrome_payload(tracer) -> dict:
+    """Chrome trace-event JSON (the format Perfetto/chrome://tracing
+    loads).  Tracks map to threads of one process; timestamps are
+    microseconds on the tracer's clock."""
+    tids: Dict[str, int] = {}
+    trace_events: List[dict] = []
+
+    def tid(track: str) -> int:
+        if track not in tids:
+            tids[track] = len(tids)
+            trace_events.append(
+                {"ph": "M", "name": "thread_name", "pid": 0,
+                 "tid": tids[track], "args": {"name": track}})
+        return tids[track]
+
+    for ev in tracer.events:
+        ph, name, track = ev["ph"], ev["name"], ev["track"]
+        args = ev.get("args", {})
+        if ph == "span":
+            trace_events.append(
+                {"ph": "X", "name": name, "cat": "obs", "pid": 0,
+                 "tid": tid(track), "ts": ev["t0"] * 1e6,
+                 "dur": (ev["t1"] - ev["t0"]) * 1e6, "args": args})
+        elif ph == "inst":
+            trace_events.append(
+                {"ph": "i", "name": name, "cat": "obs", "s": "t",
+                 "pid": 0, "tid": tid(track), "ts": ev["t"] * 1e6,
+                 "args": args})
+        elif ph == "count":
+            trace_events.append(
+                {"ph": "C", "name": name, "pid": 0, "tid": tid(track),
+                 "ts": ev["t"] * 1e6, "args": {name: ev["value"]}})
+    return {"traceEvents": trace_events, "displayTimeUnit": "ms",
+            "otherData": {"clock": tracer.clock, **tracer.meta}}
+
+
+def summarize(tracer) -> dict:
+    """Aggregate spans per (track, name) plus instant counts + metrics.
+
+    The span rows are what ``repro.launch.trace`` prints as the
+    per-round/per-tier summary and what ``report.py`` style tables
+    consume: count, total duration, mean/min/max on the trace clock.
+    """
+    spans: Dict[tuple, dict] = {}
+    instants: Dict[tuple, int] = {}
+    for ev in tracer.events:
+        key = (ev["track"], ev["name"])
+        if ev["ph"] == "span":
+            dur = ev["t1"] - ev["t0"]
+            row = spans.setdefault(
+                key, {"count": 0, "total": 0.0,
+                      "min": dur, "max": dur})
+            row["count"] += 1
+            row["total"] += dur
+            row["min"] = min(row["min"], dur)
+            row["max"] = max(row["max"], dur)
+        elif ev["ph"] == "inst":
+            instants[key] = instants.get(key, 0) + 1
+    span_rows = [
+        {"track": tr, "name": nm, "count": row["count"],
+         "total_s": row["total"], "mean_s": row["total"] / row["count"],
+         "min_s": row["min"], "max_s": row["max"]}
+        for (tr, nm), row in sorted(spans.items())]
+    inst_rows = [{"track": tr, "name": nm, "count": n}
+                 for (tr, nm), n in sorted(instants.items())]
+    return {"spans": span_rows, "instants": inst_rows,
+            "metrics": tracer.metrics.snapshot()}
+
+
+def format_summary(summary: dict) -> str:
+    """Render :func:`summarize` output as an aligned text table."""
+    lines = []
+    if summary["spans"]:
+        lines.append(f"{'track':<14} {'span':<22} {'count':>6} "
+                     f"{'total_s':>10} {'mean_s':>10} {'max_s':>10}")
+        for r in summary["spans"]:
+            lines.append(
+                f"{r['track']:<14} {r['name']:<22} {r['count']:>6} "
+                f"{r['total_s']:>10.4f} {r['mean_s']:>10.5f} "
+                f"{r['max_s']:>10.5f}")
+    if summary["instants"]:
+        lines.append("")
+        lines.append(f"{'track':<14} {'event':<22} {'count':>6}")
+        for r in summary["instants"]:
+            lines.append(f"{r['track']:<14} {r['name']:<22} "
+                         f"{r['count']:>6}")
+    counters = {k: v for k, v in summary["metrics"].items()
+                if v["kind"] in ("counter", "gauge")}
+    if counters:
+        lines.append("")
+        for k, v in sorted(counters.items()):
+            lines.append(f"{k:<36} {v['value']:>14.1f}")
+    return "\n".join(lines)
+
+
+def _write(path: str, data: bytes) -> None:
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(data)
+    os.replace(tmp, path)
+
+
+def _export_jsonl(tracer, path: str = "") -> bytes:
+    data = jsonl_bytes(tracer)
+    if path:
+        _write(path, data)
+    return data
+
+
+def _export_chrome(tracer, path: str = "") -> dict:
+    payload = chrome_payload(tracer)
+    if path:
+        _write(path, (json.dumps(payload, sort_keys=True) + "\n").encode())
+    return payload
+
+
+def _export_summary(tracer, path: str = "") -> dict:
+    summary = summarize(tracer)
+    if path:
+        _write(path, (_dumps(summary) + "\n").encode())
+    return summary
+
+
+EXPORTERS: Dict[str, Callable] = {
+    "jsonl": _export_jsonl,
+    "chrome": _export_chrome,
+    "summary": _export_summary,
+}
+
+
+def get_exporter(spec: str) -> Callable[[Any], Any]:
+    """Resolve ``'name[:path]'`` to a ``fn(tracer)`` closure."""
+    name, _, path = spec.partition(":")
+    if name not in EXPORTERS:
+        known = ", ".join(sorted(EXPORTERS))
+        raise ValueError(f"unknown exporter {name!r}; known: {known}")
+    fn = EXPORTERS[name]
+    return lambda tracer: fn(tracer, path)

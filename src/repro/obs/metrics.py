@@ -1,0 +1,132 @@
+"""Metrics registry: named counters, gauges, and exponential-bucket
+histograms shared by every instrumented runtime.
+
+Follows the repo's registry idiom: ``METRICS`` maps a metric name to a
+:class:`MetricSpec` (kind + docstring + bucket geometry), and
+``tools/check_docs.py`` fails CI if a registered name is missing from the
+docs corpus.  A :class:`MetricsRegistry` instance holds the *values* for
+one tracer; recording against a name that is not in ``METRICS`` raises,
+so ad-hoc metric names cannot silently leak into traces.
+
+Histograms use exponential buckets: upper bounds ``lo * growth**i`` for
+``i in range(n)`` plus a +inf overflow bucket.  Snapshots are plain dicts
+with sorted keys, so exported metrics are byte-stable under a fixed seed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List
+
+
+@dataclass(frozen=True)
+class MetricSpec:
+    """Declaration of one metric: kind, doc line, histogram geometry."""
+
+    kind: str            # 'counter' | 'gauge' | 'hist'
+    desc: str
+    lo: float = 1e-4     # hist: upper bound of the first bucket
+    growth: float = 4.0  # hist: geometric growth factor between buckets
+    n: int = 12          # hist: number of finite buckets
+
+    def bounds(self) -> List[float]:
+        if self.kind != "hist":
+            raise ValueError(f"metric kind {self.kind!r} has no buckets")
+        return [self.lo * self.growth ** i for i in range(self.n)]
+
+
+METRICS: Dict[str, MetricSpec] = {
+    # federated training
+    "bytes_up": MetricSpec("counter", "client->server payload bytes"),
+    "bytes_down": MetricSpec("counter", "server->client payload bytes"),
+    "msgs_delivered": MetricSpec(
+        "counter", "client messages delivered to the aggregator"),
+    "msgs_dropped": MetricSpec(
+        "counter", "client uploads lost to dropout/straggling"),
+    "round_s": MetricSpec(
+        "hist", "per-round duration on the tracer's clock (s)",
+        lo=1e-3, growth=4.0, n=12),
+    "staleness_rounds": MetricSpec(
+        "hist", "staleness (in rounds) of delivered messages",
+        lo=1.0, growth=2.0, n=8),
+    # serving
+    "queue_wait_s": MetricSpec(
+        "hist", "request wait between arrival and batch start (s)",
+        lo=1e-4, growth=4.0, n=12),
+    "batch_rows": MetricSpec(
+        "hist", "rows per formed batch", lo=1.0, growth=2.0, n=12),
+    "queue_depth": MetricSpec("gauge", "requests queued at last event"),
+    "deadline_misses": MetricSpec(
+        "counter", "requests completed after their deadline"),
+    "rejections": MetricSpec(
+        "counter", "requests rejected by admission control"),
+    "score_s": MetricSpec(
+        "hist", "wall-clock ScoringEngine.score latency (s)",
+        lo=1e-5, growth=4.0, n=14),
+}
+
+
+class MetricsRegistry:
+    """Value store for the metrics declared in ``METRICS``.
+
+    One instance per tracer.  All mutation paths validate the metric name
+    and kind against the spec registry; ``snapshot()`` returns a plain
+    sorted-key dict suitable for byte-stable JSON export.
+    """
+
+    def __init__(self) -> None:
+        self._counters: Dict[str, float] = {}
+        self._gauges: Dict[str, float] = {}
+        self._hists: Dict[str, dict] = {}
+
+    @staticmethod
+    def _spec(name: str, kind: str) -> MetricSpec:
+        spec = METRICS.get(name)
+        if spec is None:
+            known = ", ".join(sorted(METRICS))
+            raise KeyError(f"unknown metric {name!r}; known: {known}")
+        if spec.kind != kind:
+            raise ValueError(
+                f"metric {name!r} is a {spec.kind}, not a {kind}")
+        return spec
+
+    def inc(self, name: str, value: float = 1.0) -> None:
+        self._spec(name, "counter")
+        self._counters[name] = self._counters.get(name, 0.0) + value
+
+    def set(self, name: str, value: float) -> None:
+        self._spec(name, "gauge")
+        self._gauges[name] = float(value)
+
+    def observe(self, name: str, value: float) -> None:
+        spec = self._spec(name, "hist")
+        h = self._hists.get(name)
+        if h is None:
+            h = {"counts": [0] * (spec.n + 1), "sum": 0.0, "count": 0}
+            self._hists[name] = h
+        i = 0
+        bound = spec.lo
+        while i < spec.n and value > bound:
+            bound *= spec.growth
+            i += 1
+        h["counts"][i] += 1
+        h["sum"] += float(value)
+        h["count"] += 1
+
+    def snapshot(self) -> dict:
+        """Sorted, JSON-ready view of every metric touched so far."""
+        out: dict = {}
+        for name in sorted(self._counters):
+            out[name] = {"kind": "counter", "value": self._counters[name]}
+        for name in sorted(self._gauges):
+            out[name] = {"kind": "gauge", "value": self._gauges[name]}
+        for name in sorted(self._hists):
+            spec = METRICS[name]
+            h = self._hists[name]
+            out[name] = {
+                "kind": "hist",
+                "count": h["count"],
+                "sum": h["sum"],
+                "bounds": spec.bounds(),
+                "counts": list(h["counts"]),
+            }
+        return out

@@ -1,0 +1,269 @@
+"""Span tracer: virtual-clock and wall-clock spans with a zero-cost off
+path.
+
+Two tracer types share one call surface:
+
+* :data:`NULL_TRACER` — the disabled tracer.  It is *falsy*
+  (``bool(NULL_TRACER) is False``), so every hot path in the repo guards
+  instrumentation with ``if tr:`` and pays one truthiness check — no
+  allocations, no kwargs dicts, no event objects.  Instrumented-but-off
+  runs are bit-exact with untraced runs (parity-gated in
+  tests/test_obs.py and ``repro.launch.trace --smoke``).
+* :class:`Tracer` — the enabled tracer.  Events are appended to a flat
+  in-memory list in deterministic order and exported through
+  ``repro.obs.export`` (jsonl / chrome / summary).
+
+Clock sources
+-------------
+``Tracer(clock='virtual')`` has **no clock of its own**: every record
+call must carry an explicit ``t=`` stamp taken from the caller's virtual
+clock (``FedRuntime.now``, the serve-load simulator's event time).  A
+missing stamp raises, so virtual traces can never be polluted by wall
+time.  ``Tracer(clock='wall')`` defaults stamps to
+``time.perf_counter()`` for benches and the scoring engine; explicit
+``t=`` stamps are still honoured.
+
+Span lifecycle
+--------------
+Three recording styles cover every call site:
+
+* ``span_at(name, t0, t1, ...)`` — retrospective complete span, used
+  when both endpoints are already known (sync rounds, batch service).
+* ``begin(...)`` / ``end(handle)`` — explicit open/close for the async
+  event loop, where a client's compute span closes many events later.
+  Handles form a per-track stack; closing out of order raises, which is
+  what the "spans nest" property test leans on.
+* ``span(name, ...)`` — context manager for wall-clock sections.
+
+Tracks map to Perfetto threads: ``server``, ``c<i>`` per client,
+``queue``, ``comm``, ``tier:<name>``.
+
+The ambient tracer (``current()`` / ``use()`` / ``install()``) lets CLI
+entry points enable tracing without threading a parameter through every
+``simulate_*`` signature; runtimes resolve ``tracer=None`` to it.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Any, Dict, List, Optional
+
+from .metrics import MetricsRegistry
+
+
+class _NullSpan:
+    """Shared no-op context manager / span handle."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class NullTracer:
+    """Disabled tracer: falsy, allocation-free, accepts every call."""
+
+    enabled = False
+
+    def __bool__(self) -> bool:
+        return False
+
+    def span(self, name, track="main", t=None, **attrs):
+        return _NULL_SPAN
+
+    def span_at(self, name, t0, t1, track="main", **attrs):
+        pass
+
+    def begin(self, name, track="main", t=None, **attrs):
+        return _NULL_SPAN
+
+    def end(self, handle, t=None, **attrs):
+        pass
+
+    def instant(self, name, track="main", t=None, **attrs):
+        pass
+
+    def count(self, name, value, track="main", t=None):
+        pass
+
+
+NULL_TRACER = NullTracer()
+
+
+class _Span:
+    """Handle returned by ``Tracer.begin`` / used by the ``span`` CM."""
+
+    __slots__ = ("tracer", "name", "track", "t0", "attrs", "open")
+
+    def __init__(self, tracer, name, track, t0, attrs):
+        self.tracer = tracer
+        self.name = name
+        self.track = track
+        self.t0 = t0
+        self.attrs = attrs
+        self.open = True
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.tracer.end(self)
+        return False
+
+
+class Tracer:
+    """Enabled tracer collecting span/instant/counter events in memory.
+
+    Parameters
+    ----------
+    clock:
+        ``'virtual'`` (default) — every record call must pass ``t=``;
+        ``'wall'`` — ``t`` defaults to ``time.perf_counter()``.
+    meta:
+        Free-form run metadata carried into exporter headers.
+    """
+
+    enabled = True
+
+    def __init__(self, clock: str = "virtual",
+                 meta: Optional[dict] = None) -> None:
+        if clock not in ("virtual", "wall"):
+            raise ValueError(f"unknown clock {clock!r}: virtual|wall")
+        self.clock = clock
+        self.meta = dict(meta or {})
+        self.events: List[Dict[str, Any]] = []
+        self.metrics = MetricsRegistry()
+        self._stacks: Dict[str, List[_Span]] = {}
+
+    def __bool__(self) -> bool:
+        return True
+
+    def _now(self, t) -> float:
+        if t is not None:
+            return float(t)
+        if self.clock == "wall":
+            return time.perf_counter()
+        raise ValueError(
+            "virtual-clock tracer needs an explicit t= stamp; "
+            "pass the runtime's virtual time or use Tracer(clock='wall')")
+
+    # -- recording ----------------------------------------------------
+    def span_at(self, name, t0, t1, track="main", **attrs) -> None:
+        """Record a complete span with both endpoints known."""
+        t0, t1 = float(t0), float(t1)
+        if t1 < t0:
+            raise ValueError(f"span {name!r}: end {t1} < begin {t0}")
+        ev = {"ph": "span", "name": name, "track": track,
+              "t0": t0, "t1": t1}
+        if attrs:
+            ev["args"] = attrs
+        self.events.append(ev)
+
+    def begin(self, name, track="main", t=None, **attrs) -> _Span:
+        """Open a span; close it with ``end(handle)``.  Handles stack
+        per track, so spans on one track must nest."""
+        sp = _Span(self, name, track, self._now(t), attrs)
+        self._stacks.setdefault(track, []).append(sp)
+        return sp
+
+    def end(self, handle: _Span, t=None, **attrs) -> None:
+        stack = self._stacks.get(handle.track, [])
+        if not stack or stack[-1] is not handle:
+            raise ValueError(
+                f"span {handle.name!r} on track {handle.track!r} is not "
+                "the innermost open span (spans must nest per track)")
+        if not handle.open:
+            raise ValueError(f"span {handle.name!r} already closed")
+        stack.pop()
+        handle.open = False
+        if attrs:
+            handle.attrs.update(attrs)
+        self.span_at(handle.name, handle.t0, self._now(t),
+                     track=handle.track, **handle.attrs)
+
+    def span(self, name, track="main", t=None, **attrs) -> _Span:
+        """Context-manager form of begin/end (wall clock, or explicit
+        ``t`` on enter — exit stamps with the clock's now)."""
+        return self.begin(name, track=track, t=t, **attrs)
+
+    def instant(self, name, track="main", t=None, **attrs) -> None:
+        ev = {"ph": "inst", "name": name, "track": track,
+              "t": self._now(t)}
+        if attrs:
+            ev["args"] = attrs
+        self.events.append(ev)
+
+    def count(self, name, value, track="main", t=None) -> None:
+        self.events.append({"ph": "count", "name": name, "track": track,
+                            "t": self._now(t), "value": float(value)})
+
+    # -- inspection ---------------------------------------------------
+    def open_spans(self) -> List[_Span]:
+        return [sp for stack in self._stacks.values() for sp in stack]
+
+
+# -- ambient tracer ---------------------------------------------------
+_CURRENT: Any = NULL_TRACER
+
+
+def current() -> Any:
+    """The ambient tracer (NULL_TRACER unless one was installed)."""
+    return _CURRENT
+
+
+def install(tracer: Any) -> Any:
+    """Install ``tracer`` as the ambient tracer; returns the previous."""
+    global _CURRENT
+    prev = _CURRENT
+    _CURRENT = tracer if tracer is not None else NULL_TRACER
+    return prev
+
+
+class use:
+    """``with use(tracer): ...`` — scoped ambient-tracer install."""
+
+    def __init__(self, tracer: Any) -> None:
+        self.tracer = tracer
+        self._prev: Any = None
+
+    def __enter__(self):
+        self._prev = install(self.tracer)
+        return self.tracer
+
+    def __exit__(self, *exc):
+        install(self._prev)
+        return False
+
+
+# -- jax.profiler annotations ----------------------------------------
+_ANNOTATE = os.environ.get("REPRO_OBS_ANNOTATE", "") not in ("", "0")
+
+
+def set_annotations(on: bool) -> None:
+    """Toggle jax.profiler annotations around kernel entry points."""
+    global _ANNOTATE
+    _ANNOTATE = bool(on)
+
+
+def annotations_enabled() -> bool:
+    return _ANNOTATE
+
+
+def annotate(name: str):
+    """``jax.profiler.TraceAnnotation`` context for kernel dispatch.
+
+    Off by default (returns a shared no-op CM) so instrumented kernel
+    entry points stay bit-exact and allocation-free; enable with
+    ``REPRO_OBS_ANNOTATE=1`` or :func:`set_annotations` when capturing a
+    device profile.
+    """
+    if not _ANNOTATE:
+        return _NULL_SPAN
+    import jax.profiler
+    return jax.profiler.TraceAnnotation(name)

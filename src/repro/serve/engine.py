@@ -61,6 +61,7 @@ from repro.core.compression import int8_sr_quantize
 from repro.kernels.forest_infer.fused import forest_score
 from repro.kernels.forest_infer.ops import forest_infer
 from repro.models import tabular
+from repro.obs import current as _ambient_tracer
 from repro.serve.bundle import ModelBundle
 from repro.trees.growth import Tree
 
@@ -239,7 +240,7 @@ class ScoringEngine:
     def __init__(self, bundles, weights: Optional[Sequence[float]] = None,
                  bucket_sizes: Sequence[int] = (64, 256, 1024),
                  impl: str = "auto", fused: bool = False,
-                 quantize: Optional[str] = None):
+                 quantize: Optional[str] = None, tracer=None):
         if isinstance(bundles, ModelBundle):
             bundles = [bundles]
         if not bundles:
@@ -260,6 +261,10 @@ class ScoringEngine:
         self.bucket_calls: Dict[int, int] = {}
         self.fused = bool(fused)
         self.quantize = quantize
+        # None resolves to the ambient repro.obs tracer (falsy
+        # NULL_TRACER unless a run installed one); score() records
+        # wall-clock spans only when it is truthy
+        self.tracer = _ambient_tracer() if tracer is None else tracer
         wj = jnp.asarray(self.weights)
 
         if self.fused:
@@ -351,8 +356,13 @@ class ScoringEngine:
             out[i:i + bucket - pad] = probs[:bucket - pad]
         if self.calibration is not None and not self.fused:
             out = apply_platt(out, self.calibration).astype(np.float32)
-        self.latencies_s.append(time.perf_counter() - t0)
+        t1 = time.perf_counter()
+        self.latencies_s.append(t1 - t0)
         self.rows_scored += n
+        tr = self.tracer
+        if tr:
+            tr.span_at("engine.score", t0, t1, track="engine", rows=n)
+            tr.metrics.observe("score_s", t1 - t0)
         return out
 
     def predict(self, x, threshold: float = 0.5) -> np.ndarray:

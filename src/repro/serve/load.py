@@ -88,6 +88,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs import current as _ambient_tracer
+
 #: SeedSequence tag isolating load-engine draws from every other
 #: seeded stream in the repo (latency models use 0x1A7, the runtime
 #: 0xFED).
@@ -360,13 +362,20 @@ class LoadResult:
     batches: List[Dict]
 
 
-def simulate_load(cfg: LoadConfig, engine=None, features=None
-                  ) -> LoadResult:
+def simulate_load(cfg: LoadConfig, engine=None, features=None,
+                  tracer=None) -> LoadResult:
     """Run one trace through the queue + continuous-batching state
     machine on the virtual clock (module docstring).  With a virtual
     ``service`` model no engine is needed and the result is a pure
     function of (cfg, seed); with ``service='measured'`` the batches
-    are really scored through ``engine``."""
+    are really scored through ``engine``.
+
+    ``tracer=None`` resolves to the ambient ``repro.obs`` tracer
+    (NULL_TRACER unless a run installed one); batch service spans,
+    queue-wait observations, and deadline-miss / rejection events are
+    recorded on the virtual clock, on tracks suffixed with the arrival
+    spec so sweep rungs stay distinguishable in one trace.  Traced-off
+    runs are byte-identical to untraced ones (tests/test_obs.py)."""
     buckets = tuple(sorted(int(b) for b in cfg.bucket_sizes))
     if not buckets or buckets[0] < 1:
         raise ValueError(f"bad bucket_sizes {cfg.bucket_sizes!r}")
@@ -381,6 +390,9 @@ def simulate_load(cfg: LoadConfig, engine=None, features=None
     req_rows = _request_rows(cfg.rows, cfg.seed, n, bmax)
     service = get_service(cfg.service, cfg.seed, engine=engine,
                           features=features)
+    tr = _ambient_tracer() if tracer is None else tracer
+    srv_track = f"serve[{arrivals.name}]"
+    q_track = f"queue[{arrivals.name}]"
 
     INF = float("inf")
     queue: deque = deque()         # admitted requests awaiting a batch
@@ -404,8 +416,16 @@ def simulate_load(cfg: LoadConfig, engine=None, features=None
                "miss": False}
         if cfg.max_queue is not None and len(queue) >= cfg.max_queue:
             rec["rejected"] = True         # admission control: bounce
+            if tr:
+                tr.instant("load.reject", track=q_track,
+                           t=rec["t_arrive"], id=idx)
+                tr.metrics.inc("rejections")
         else:
             queue.append(rec)
+            if tr:
+                tr.count("queue_depth", len(queue), track=q_track,
+                         t=rec["t_arrive"])
+                tr.metrics.set("queue_depth", len(queue))
         records.append(rec)
 
     def batch_prefix() -> Tuple[int, int]:
@@ -430,6 +450,13 @@ def simulate_load(cfg: LoadConfig, engine=None, features=None
                 "n_requests": k, "occupancy": total / bucket}
         done_t = now + float(service(total, bucket, len(batches)))
         in_flight = (batch, brec)
+        if tr:  # batch formation: queue waits drain into this batch
+            for rec in batch:
+                tr.metrics.observe("queue_wait_s",
+                                   now - rec["t_arrive"])
+            tr.metrics.observe("batch_rows", total)
+            tr.count("queue_depth", len(queue), track=q_track, t=now)
+            tr.metrics.set("queue_depth", len(queue))
 
     while i < n or queue or in_flight is not None:
         t_arr = float(times[i]) if i < n else INF
@@ -446,6 +473,17 @@ def simulate_load(cfg: LoadConfig, engine=None, features=None
                     rec["latency"] = t - rec["t_arrive"]
                     rec["miss"] = (cfg.deadline is not None
                                    and rec["latency"] > cfg.deadline)
+                    if tr and rec["miss"]:
+                        tr.instant("load.deadline_miss", track=srv_track,
+                                   t=t, id=rec["id"],
+                                   latency=rec["latency"])
+                        tr.metrics.inc("deadline_misses")
+                if tr:
+                    tr.span_at("load.batch", brec["t_start"], t,
+                               track=srv_track, rows=brec["rows"],
+                               bucket=brec["bucket"],
+                               n_requests=brec["n_requests"],
+                               occupancy=brec["occupancy"])
                 in_flight, done_t = None, INF
             else:
                 t = t_arr

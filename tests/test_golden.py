@@ -33,11 +33,12 @@ def test_golden_covers_every_pipeline():
     assert set(GOLDEN["metrics"]) == set(RG.GOLDEN_RUNS)
 
 
-def test_golden_serve_load_exact(computed):
-    # the load engine is a pure function of (spec, seed) — no BLAS
-    # jitter, so the snapshot must match to the rounding digit, not
-    # merely within TOLERANCE
-    assert computed["serve_load"] == GOLDEN["metrics"]["serve_load"]
+@pytest.mark.parametrize("pipeline", sorted(RG.EXACT_RUNS))
+def test_golden_pure_runs_exact(computed, pipeline):
+    # the load engine and the trace export are pure functions of
+    # (spec, seed) — no BLAS jitter, so the snapshot must match to the
+    # rounding digit, not merely within TOLERANCE
+    assert computed[pipeline] == GOLDEN["metrics"][pipeline]
 
 
 @pytest.mark.parametrize("pipeline", sorted(RG.GOLDEN_RUNS))

@@ -1,0 +1,289 @@
+"""Observability layer (repro.obs): span invariants, metrics registry
+validation, exporter round-trips, traced-vs-untraced bit-exact parity,
+the unified timeline schema, and the sharded runtime's metadata-only
+guarantee with tracing enabled."""
+import hashlib
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import parametric as P
+from repro.core.runtime import ShardedFedRuntime
+from repro.data import cohort as C
+from repro.obs import (METRICS, NULL_TRACER, Tracer, annotate,
+                       annotations_enabled, chrome_payload, current,
+                       get_exporter, jsonl_bytes, set_annotations,
+                       summarize, use)
+from repro.obs.trace import _NULL_SPAN
+
+
+# --- span invariants ---------------------------------------------------------
+
+def test_null_tracer_is_falsy_and_inert():
+    assert not NULL_TRACER and bool(Tracer()) is True
+    # every recording call is a no-op returning the shared handle
+    assert NULL_TRACER.begin("x") is NULL_TRACER.span("y")
+    with NULL_TRACER.span("z"):
+        pass
+    NULL_TRACER.end(NULL_TRACER.begin("x"))
+    NULL_TRACER.span_at("a", 0, 1)
+    NULL_TRACER.instant("i")
+    NULL_TRACER.count("c", 3)
+
+
+def test_virtual_clock_requires_explicit_stamp():
+    tr = Tracer(clock="virtual")
+    with pytest.raises(ValueError, match="explicit t="):
+        tr.instant("x")
+    tr.instant("x", t=1.0)         # explicit stamp is fine
+    wall = Tracer(clock="wall")
+    wall.instant("x")              # wall clock self-stamps
+    assert wall.events[0]["t"] > 0
+    with pytest.raises(ValueError, match="unknown clock"):
+        Tracer(clock="cpu")
+
+
+def test_span_end_must_not_precede_begin():
+    tr = Tracer()
+    with pytest.raises(ValueError, match="end .* < begin"):
+        tr.span_at("bad", 2.0, 1.0)
+    h = tr.begin("s", t=5.0)
+    with pytest.raises(ValueError, match="end .* < begin"):
+        tr.end(h, t=4.0)
+
+
+def test_spans_nest_per_track():
+    tr = Tracer()
+    outer = tr.begin("outer", track="a", t=0.0)
+    inner = tr.begin("inner", track="a", t=1.0)
+    other = tr.begin("other", track="b", t=0.5)   # tracks independent
+    with pytest.raises(ValueError, match="must nest"):
+        tr.end(outer, t=2.0)
+    tr.end(inner, t=2.0)
+    tr.end(outer, t=3.0)
+    tr.end(other, t=1.0)
+    assert not tr.open_spans()
+    with pytest.raises(ValueError, match="must nest"):
+        tr.end(inner, t=4.0)       # closing twice never works
+    names = [e["name"] for e in tr.events]
+    assert names == ["inner", "outer", "other"]   # close order
+
+
+def test_span_context_manager_and_attrs():
+    tr = Tracer(clock="wall")
+    with tr.span("work", track="t", phase="x") as sp:
+        assert tr.open_spans() == [sp]
+    (ev,) = tr.events
+    assert ev["ph"] == "span" and ev["args"] == {"phase": "x"}
+    assert ev["t1"] >= ev["t0"]
+
+
+# --- metrics registry --------------------------------------------------------
+
+def test_metrics_registry_validates_names_and_kinds():
+    tr = Tracer()
+    with pytest.raises(KeyError):
+        tr.metrics.inc("not_a_metric")
+    with pytest.raises(ValueError, match="counter"):
+        tr.metrics.observe("bytes_up", 1.0)    # counter, not histogram
+    with pytest.raises(ValueError, match="gauge"):
+        tr.metrics.inc("queue_depth")
+
+
+def test_histogram_buckets_and_snapshot():
+    tr = Tracer()
+    spec = METRICS["round_s"]
+    bounds = spec.bounds()
+    assert len(bounds) == spec.n and bounds[0] == pytest.approx(spec.lo)
+    tr.metrics.observe("round_s", 0.0)           # first bucket
+    tr.metrics.observe("round_s", 1e9)           # overflow bucket
+    snap = tr.metrics.snapshot()
+    h = snap["round_s"]
+    assert h["count"] == 2 and len(h["counts"]) == spec.n + 1
+    assert h["counts"][0] == 1 and h["counts"][-1] == 1
+    json.dumps(snap)                             # JSON-ready
+
+
+# --- exporters ---------------------------------------------------------------
+
+def _toy_tracer():
+    tr = Tracer(meta={"run": "toy"})
+    tr.span_at("round", 0.0, 1.0, track="server", round=0)
+    tr.instant("drop", track="c1", t=0.5, client=1)
+    tr.count("queue_depth", 3, track="q", t=0.25)
+    tr.metrics.inc("bytes_up", 100)
+    return tr
+
+
+def test_jsonl_is_byte_stable_and_framed():
+    tr = _toy_tracer()
+    data = jsonl_bytes(tr)
+    assert data == jsonl_bytes(_toy_tracer())    # same inputs, same bytes
+    lines = [json.loads(l) for l in data.decode().splitlines()]
+    assert lines[0]["ph"] == "meta" and lines[0]["meta"] == {"run": "toy"}
+    assert lines[-1]["ph"] == "metrics"
+    assert [l["ph"] for l in lines[1:-1]] == ["span", "inst", "count"]
+
+
+def test_chrome_payload_shape():
+    payload = chrome_payload(_toy_tracer())
+    evs = payload["traceEvents"]
+    assert {e["ph"] for e in evs} == {"X", "i", "C", "M"}
+    (span,) = [e for e in evs if e["ph"] == "X"]
+    assert span["ts"] == 0 and span["dur"] == pytest.approx(1e6)  # µs
+    names = {e["args"]["name"] for e in evs if e["ph"] == "M"}
+    assert names == {"server", "c1", "q"}
+
+
+def test_summary_groups_by_track_and_name():
+    s = summarize(_toy_tracer())
+    (row,) = s["spans"]
+    assert (row["track"], row["name"], row["count"]) == ("server",
+                                                         "round", 1)
+    assert row["total_s"] == pytest.approx(1.0)
+    assert s["metrics"]["bytes_up"]["value"] == 100
+
+
+def test_exporter_registry():
+    with pytest.raises(ValueError, match="exporter"):
+        get_exporter("protobuf:x")
+    out = get_exporter("summary")(_toy_tracer())
+    assert out["spans"][0]["track"] == "server"
+
+
+def test_jsonl_file_roundtrip(tmp_path):
+    path = tmp_path / "t.jsonl"
+    tr = _toy_tracer()
+    get_exporter(f"jsonl:{path}")(tr)
+    lines = path.read_bytes()
+    assert lines == jsonl_bytes(tr)
+
+
+# --- traced == untraced parity ----------------------------------------------
+
+FED_KW = dict(model="logreg", n_clients=3, rounds=2, local_steps=4,
+              n_records=300, seed=0, verbose=False)
+
+
+def _fed_digest(out):
+    h = hashlib.sha256()
+    h.update(json.dumps(out["metrics"], sort_keys=True).encode())
+    h.update(json.dumps(out["history"], sort_keys=True,
+                        default=float).encode())
+    h.update(json.dumps(out["comm"].events, sort_keys=True).encode())
+    for leaf in jax.tree.leaves(out["params"]):
+        h.update(np.asarray(leaf).tobytes())
+    return h.hexdigest()
+
+
+@pytest.mark.parametrize("extra", [
+    {},                                               # sync
+    dict(schedule="async:2", latency="lognormal:0.05:0.4"),
+])
+def test_traced_run_is_bit_exact(extra):
+    from repro.launch.fed_train import simulate_parametric
+    kw = dict(FED_KW, **extra)
+    base = _fed_digest(simulate_parametric(**kw))
+    tr = Tracer(clock="virtual")
+    with use(tr):
+        traced = _fed_digest(simulate_parametric(**kw))
+    assert traced == base
+    assert tr.events and not tr.open_spans()
+
+
+@pytest.mark.parametrize("extra", [
+    {},
+    dict(schedule="async:2", latency="lognormal:0.05:0.4"),
+])
+def test_same_seed_trace_replay_is_byte_identical(extra):
+    from repro.launch.fed_train import simulate_parametric
+    kw = dict(FED_KW, **extra)
+
+    def one_trace():
+        tr = Tracer(clock="virtual", meta={"seed": kw["seed"]})
+        with use(tr):
+            simulate_parametric(**kw)
+        return jsonl_bytes(tr)
+
+    assert one_trace() == one_trace()
+
+
+def test_serve_load_traced_parity():
+    from repro.serve.load import LoadConfig, simulate_load
+    cfg = LoadConfig(arrivals="poisson:2000", n_requests=300,
+                     deadline=0.05, max_queue=64, seed=0)
+    base = simulate_load(cfg)
+    tr = Tracer(clock="virtual")
+    res = simulate_load(cfg, tracer=tr)
+    assert res.row == base.row
+    assert res.records == base.records and res.batches == base.batches
+    assert tr.events
+
+
+def test_ambient_tracer_scoping():
+    assert current() is NULL_TRACER
+    tr = Tracer()
+    with use(tr):
+        assert current() is tr
+    assert current() is NULL_TRACER
+
+
+# --- timeline schema ---------------------------------------------------------
+
+@pytest.mark.parametrize("extra", [
+    {},
+    dict(schedule="async:2", latency="lognormal:0.05:0.4"),
+])
+def test_timeline_schema_is_unified(extra):
+    from repro.launch.fed_train import simulate_parametric
+    out = simulate_parametric(**dict(FED_KW, **extra))
+    tl = out["timeline"]
+    assert len(tl) == FED_KW["rounds"]
+    for rec in tl:
+        assert set(rec) == {"round", "t", "n_clients", "n_msgs",
+                            "staleness", "bytes"}
+        assert rec["n_msgs"] == rec["n_clients"]    # legacy alias
+        assert len(rec["staleness"]) == rec["n_clients"]
+        assert rec["bytes"] > 0 and rec["t"] >= 0.0
+
+
+# --- sharded runtime: tracing stays metadata-only ---------------------------
+
+def test_sharded_tracing_never_gathers(monkeypatch):
+    """Per-tier spans come from the ledger plan alone: a traced sharded
+    run must still never call jax.device_get (the no-device_get
+    regression from tests/test_shard_fed.py, with tracing ON)."""
+    local_fn = P.build_local_delta("logreg", 2, 0.05)
+    import repro.models.tabular as tabular
+    params = tabular.MODELS["logreg"]["init"](jax.random.PRNGKey(0), 15)
+    xs, ys = C.build_cohort("framingham_like:8:4", seed=0)
+
+    def boom(*a, **k):
+        raise AssertionError("device_get on the traced sharded path")
+    monkeypatch.setattr(jax, "device_get", boom)
+    tr = Tracer(clock="wall")
+    rt = ShardedFedRuntime(n_clients=8, rounds=2, n_silos=4, tracer=tr)
+    rt.run(local_fn, params, xs, ys)
+    spans = [e for e in tr.events if e["ph"] == "span"]
+    tiers = [e for e in tr.events if e["name"] == "fed.tier"]
+    assert len(spans) == 2 and all(e["name"] == "fed.round"
+                                   for e in spans)
+    assert len(tiers) == 8                       # 4 tier events x 2 rounds
+    assert {e["track"] for e in tiers} == {"tier:edge", "tier:wan"}
+
+
+# --- kernel annotations ------------------------------------------------------
+
+def test_annotate_is_noop_unless_enabled():
+    assert not annotations_enabled()
+    assert annotate("kernels.x") is _NULL_SPAN
+    set_annotations(True)
+    try:
+        cm = annotate("kernels.x")
+        assert cm is not _NULL_SPAN
+        with cm:                                  # usable as a CM
+            pass
+    finally:
+        set_annotations(False)

@@ -62,6 +62,8 @@ REGISTRIES = [
     ("repro.kernels.autotune", "TUNABLES"),
     ("repro.data.cohort", "COHORTS"),
     ("repro.launch.mesh", "MESHES"),
+    ("repro.obs.export", "EXPORTERS"),
+    ("repro.obs.metrics", "METRICS"),
 ]
 
 

@@ -109,6 +109,30 @@ def _serve_load():
     }
 
 
+def _obs_trace():
+    """Golden trace snapshot: a tiny traced sync federated run on the
+    virtual clock.  With no latency model every stamp is a small exact
+    float and every event attribute is an integer, so the jsonl export
+    is byte-stable across platforms — snapshotted as numeric
+    fingerprints (event count, export size, sha256 prefix as an exact
+    48-bit float).  Any change to event shapes, stamp placement, or
+    export framing shows up as a digest diff."""
+    import hashlib
+
+    from repro.core import parametric as P
+    from repro.obs import Tracer, jsonl_bytes, use
+    clients, _ = _clients(n=200, k=3)
+    cfg = P.FedParametricConfig(model="logreg", rounds=3, local_steps=4,
+                                lr=0.05, seed=SEED)
+    tr = Tracer(clock="virtual", meta={"golden": "obs_trace"})
+    with use(tr):
+        P.train_federated(clients, cfg)
+    data = jsonl_bytes(tr)
+    digest = int(hashlib.sha256(data).hexdigest()[:12], 16)
+    return {"n_events": float(len(tr.events)),
+            "n_bytes": float(len(data)), "digest": float(digest)}
+
+
 #: pipeline name -> zero-arg callable returning its metrics dict.  The
 #: async_parametric row pins the virtual-time event loop end to end
 #: (fixed seed => deterministic dispatch/arrival order => stable F1).
@@ -120,11 +144,16 @@ GOLDEN_RUNS = {
     "feature_extract": _feature_extract,
     "fed_hist": _fed_hist,
     "serve_load": _serve_load,
+    "obs_trace": _obs_trace,
 }
 
 #: runs whose returned dict is snapshotted on its own keys (already
 #: O(1)-scale summary values) instead of the METRIC_KEYS filter.
-RAW_RUNS = {"serve_load"}
+RAW_RUNS = {"serve_load", "obs_trace"}
+
+#: RAW_RUNS that are pure functions of (spec, seed) — no BLAS jitter —
+#: so the snapshot must match exactly, not merely within TOLERANCE.
+EXACT_RUNS = {"serve_load", "obs_trace"}
 
 
 def compute_metrics() -> dict:
