@@ -1,0 +1,262 @@
+"""Privacy-layer bench: what secure aggregation costs, and what DP buys.
+
+Timed rows (perf-gated against the repo-root ``BENCH_privacy.json``
+trajectory through the generic ``tools/perf_gate.py``, like the kernel
+and observability benches):
+
+* ``privacy/mask_encode`` — one client's pairwise-mask application
+  (:func:`~repro.core.privacy.mask_update`, the single-pass rewrite)
+  over an 8-member cohort on a logreg-sized pytree.
+* ``privacy/mask_recover`` — server-side dropout recovery of one
+  delivered payload missing 3 of its 8 cohort peers
+  (:func:`~repro.core.privacy.strip_missing_masks` through a fresh
+  :class:`~repro.core.privacy.SeedShareBook` — Shamir reconstruction
+  included, the worst case; warm books only pay the PRG).
+* ``privacy/rdp_step`` — one accountant step + epsilon conversion at a
+  fresh subsampling rate (the uncached path; steps at a repeated q are
+  a dict add).
+* ``privacy/he_encode`` — the Paillier-shaped fixed-point encode of a
+  16k-scalar update (:class:`~repro.core.comm.HELayer`).
+
+In-bench correctness gates (absolute, not trajectory): recovered masked
+sums must match plain sums, and the accountant must match the q=1
+Gaussian closed form and show subsampling amplification.
+
+The privacy/utility frontier sweeps ``dp_epsilon`` over the paper's
+tabular pipeline for the DP transport stacks (``dp`` | ``secure_dp`` |
+``he_dp``) and records (per-round epsilon, cumulative accountant
+epsilon, F1, uplink MB) per point into
+``results/privacy/frontier.json`` — the e-vs-utility curve
+docs/EXPERIMENTS.md plots, with HE ciphertext expansion visible in the
+uplink column::
+
+  PYTHONPATH=src python -m benchmarks.privacy_bench --smoke
+  PYTHONPATH=src python tools/perf_gate.py --check --smoke \\
+      --current results/privacy/privacy_bench.json \\
+      --bench BENCH_privacy.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from benchmarks.kernels_bench import bench_meta  # noqa: E402
+from repro.core import privacy  # noqa: E402
+from repro.core.comm import HELayer, WireCtx  # noqa: E402
+
+OUT = "results/privacy/privacy_bench.json"
+FRONTIER_OUT = "results/privacy/frontier.json"
+COHORT = 8
+#: recovery parity tolerance: float32 masks, sums over an 8-cohort
+PARITY_ATOL = 1e-3
+FRONTIER_STACKS = ("dp", "secure_dp", "he_dp")
+EPS_GRID = (0.25, 0.5, 1.0, 2.0, 4.0)
+EPS_GRID_SMOKE = (0.5, 2.0)
+
+
+def _logreg_tree(rng):
+    return {"w": np.asarray(rng.normal(size=(16, 1)), np.float32),
+            "b": np.asarray(rng.normal(size=(1,)), np.float32)}
+
+
+def _time_us(fn, iters: int) -> float:
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _mask_encode_us(iters: int) -> float:
+    u = _logreg_tree(np.random.default_rng(0))
+    return _time_us(
+        lambda: privacy.mask_update(u, 3, COHORT, round_seed=11), iters)
+
+
+def _mask_recover_us(iters: int) -> float:
+    rs = privacy.mask_round_seed(7, 0)
+    u = privacy.mask_update(_logreg_tree(np.random.default_rng(1)),
+                            0, COHORT, round_seed=rs)
+    present = {0, 2, 4, 6, 7}          # slots 1, 3, 5 missing
+
+    def body():
+        book = privacy.SeedShareBook(rs, COHORT, COHORT // 2 + 1)
+        privacy.strip_missing_masks(u, book, 0, present)
+
+    return _time_us(body, iters)
+
+
+def _rdp_step_us(iters: int) -> float:
+    qs = iter(np.linspace(0.05, 0.95, iters * 2))
+
+    def body():
+        acc = privacy.RDPAccountant(noise_multiplier=1.1)
+        acc.step(range(COHORT), q=float(next(qs)))
+        acc.epsilon()
+
+    return _time_us(body, iters)
+
+
+def _he_encode_us(iters: int) -> float:
+    rng = np.random.default_rng(2)
+    delta = {"w": np.asarray(rng.normal(size=(16384,)) * 0.01,
+                             np.float32)}
+    lay = HELayer()
+    ctx = WireCtx(round=0, client=0, slot=0, n_active=COHORT, seed=0)
+    from repro.core.comm import WireMsg
+    return _time_us(
+        lambda: lay.encode(WireMsg(payload=delta, nbytes=0), ctx), iters)
+
+
+def _recovery_parity_err() -> float:
+    """Max |masked+recovered sum - plain sum| over a random drop split."""
+    rng = np.random.default_rng(3)
+    rs = privacy.mask_round_seed(3, 1)
+    updates = [_logreg_tree(rng) for _ in range(COHORT)]
+    masked = [privacy.mask_update(u, i, COHORT, round_seed=rs)
+              for i, u in enumerate(updates)]
+    present = {0, 1, 4, 5, 6}
+    book = privacy.SeedShareBook(rs, COHORT, COHORT // 2 + 1)
+    got = privacy.secure_sum(
+        [privacy.strip_missing_masks(masked[s], book, s, present)[0]
+         for s in sorted(present)])
+    want = privacy.secure_sum([updates[s] for s in sorted(present)])
+    import jax
+    return max(float(np.abs(np.asarray(a) - np.asarray(b)).max())
+               for a, b in zip(jax.tree.leaves(got),
+                               jax.tree.leaves(want)))
+
+
+def _accountant_spot_err() -> float:
+    """|accountant - closed form| at q=1 (subsampling gate is binary)."""
+    z, delta, T = 1.3, 1e-5, 10
+    acc = privacy.RDPAccountant(noise_multiplier=z, delta=delta)
+    sub = privacy.RDPAccountant(noise_multiplier=z, delta=delta)
+    for _ in range(T):
+        acc.step([0], q=1.0)
+        sub.step([0], q=0.2)
+    closed = min(T * a / (2 * z * z) + np.log(1 / delta) / (a - 1)
+                 for a in acc.orders)
+    if not 0.0 < sub.epsilon() < acc.epsilon():
+        return float("inf")
+    return abs(acc.epsilon() - closed)
+
+
+def frontier(smoke: bool = False) -> List[Dict]:
+    """Sweep per-round dp_epsilon x DP transport stacks on the tabular
+    parametric pipeline; one point = (stack, eps/round, cumulative
+    accountant eps, F1, uplink MB)."""
+    from repro.core import parametric as P
+    from repro.data import framingham as F
+    ds = F.synthesize(n=600 if smoke else 2000, seed=0)
+    train, test = F.train_test_split(ds)
+    clients = [(c.x, c.y) for c in F.partition_clients(train, 4)]
+    points = []
+    for stack in FRONTIER_STACKS:
+        for eps in (EPS_GRID_SMOKE if smoke else EPS_GRID):
+            cfg = P.FedParametricConfig(
+                model="logreg", rounds=3 if smoke else 10,
+                local_steps=3 if smoke else 10,
+                transport=stack, dp_epsilon=eps, seed=0)
+            _, comm, history, _ = P.train_federated(
+                clients, cfg, test=(test.x, test.y))
+            points.append({
+                "pipeline": f"parametric/{stack}",
+                "dp_epsilon_per_round": eps,
+                "epsilon_cumulative": comm.privacy["epsilon"],
+                "delta": comm.privacy["delta"],
+                "f1": history[-1]["f1"],
+                "uplink_mb": comm.total_mb("up"),
+            })
+            print(f"  frontier {points[-1]['pipeline']:<22} "
+                  f"eps/round={eps:<5} "
+                  f"eps_cum={points[-1]['epsilon_cumulative']:.2f} "
+                  f"F1={points[-1]['f1']:.3f} "
+                  f"uplink={points[-1]['uplink_mb']:.2f}MB")
+    return points
+
+
+def run(smoke: bool = False) -> List[Dict]:
+    iters = 5 if smoke else 20
+    meta = bench_meta()
+    rows = [
+        {"name": "privacy/mask_encode", "us": _mask_encode_us(iters),
+         "note": f"mask_update;cohort={COHORT};logreg tree", **meta},
+        {"name": "privacy/mask_recover", "us": _mask_recover_us(iters),
+         "note": f"strip_missing_masks;3 of {COHORT} missing;"
+         "cold share book", **meta},
+        {"name": "privacy/rdp_step", "us": _rdp_step_us(iters),
+         "note": "step+epsilon at fresh q (uncached)", **meta},
+        {"name": "privacy/he_encode", "us": _he_encode_us(iters),
+         "note": "HELayer fixed-point encode;16k scalars", **meta},
+    ]
+    for r in rows:
+        print(f"  {r['name']:<22} {r['us']:>10.1f}us  {r['note']}")
+    return rows
+
+
+def check_correctness() -> List[str]:
+    failures = []
+    err = _recovery_parity_err()
+    if not err <= PARITY_ATOL:
+        failures.append(
+            f"dropout-recovery parity: masked+recovered sum deviates "
+            f"from plain sum by {err:.2e} > {PARITY_ATOL:.0e}")
+    err = _accountant_spot_err()
+    if not err <= 1e-9:
+        failures.append(
+            f"RDP accountant spot check failed: q=1 closed-form "
+            f"deviation {err:.2e} (inf = amplification ordering broken)")
+    return failures
+
+
+def save_rows(rows: List[Dict], path: str = OUT,
+              smoke: bool = False) -> str:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump({"meta": {**bench_meta(), "smoke": smoke},
+                   "rows": rows}, f, indent=1)
+        f.write("\n")
+    return path
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI shape set (fewer iters, 2-point frontier)")
+    ap.add_argument("--out", default=OUT)
+    ap.add_argument("--frontier-out", default=FRONTIER_OUT)
+    ap.add_argument("--skip-frontier", action="store_true",
+                    help="timed rows + correctness gates only")
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke)
+    save_rows(rows, args.out, smoke=args.smoke)
+    print(f"wrote {args.out}")
+    if not args.skip_frontier:
+        points = frontier(smoke=args.smoke)
+        os.makedirs(os.path.dirname(args.frontier_out) or ".",
+                    exist_ok=True)
+        with open(args.frontier_out, "w") as f:
+            json.dump({"meta": {**bench_meta(), "smoke": args.smoke},
+                       "points": points}, f, indent=1)
+            f.write("\n")
+        print(f"wrote {args.frontier_out}")
+    failures = check_correctness()
+    for f in failures:
+        print(f"PRIVACY  {f}", file=sys.stderr)
+    print(f"privacy_bench: {len(failures)} correctness failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

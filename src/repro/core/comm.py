@@ -15,11 +15,13 @@ pytrees) and the tree pipelines (histograms, shipped forests).
 """
 from __future__ import annotations
 
+import math
 import time
 from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -41,6 +43,11 @@ class CommLog:
     #: (``FedRuntime._timeline_record``: round / t / n_clients /
     #: staleness / bytes); empty for ledgers not driven by a runtime
     timeline: List[Dict] = field(default_factory=list)
+    #: cumulative DP ledger (``repro.core.privacy.RDPAccountant
+    #: .summary()``: epsilon / delta / noise_multiplier / steps /
+    #: per_client), refreshed by the runtime at every aggregation —
+    #: ``None`` for runs whose transport carries no dpnoise layer
+    privacy: Optional[Dict] = None
 
     def log(self, round_idx: int, client: str, direction: str,
             nbytes: int, what: str = "", t: Optional[float] = None,
@@ -124,6 +131,11 @@ class WireCtx:
     is the pre-folded combine weight for weighted strategies, and
     ``sensitivity`` calibrates server-side DP noise.
 
+    ``cohort`` numbers the dispatch cohort the message belongs to —
+    the async engine opens a fresh cohort per dispatch group so mask
+    seeds are never reused across re-dispatches at the same server
+    version; the sync engine always uses cohort 0.
+
     ``tracer``/``t`` are set by the runtime only when tracing is enabled
     (``repro.obs``): :meth:`Transport.encode` then records per-layer
     bytes in/out events.  Both default to ``None`` so untraced encoding
@@ -133,6 +145,7 @@ class WireCtx:
     slot: int = 0
     n_active: int = 1
     seed: int = 0
+    cohort: int = 0
     weight_scale: float = 1.0
     sensitivity: float = 1.0
     tracer: Any = None
@@ -213,31 +226,128 @@ class WeightLayer(TransportLayer):
 
 
 class MaskLayer(TransportLayer):
-    """Bonawitz-style pairwise secure-agg masks over this round's active
-    set; masks cancel in the server's sum (``privacy.mask_update``)."""
+    """Bonawitz-style pairwise secure-agg masks over this round's
+    dispatch cohort; masks cancel in the server's sum
+    (``privacy.mask_update``), and the cohort's pair seeds are Shamir
+    t-of-n shared (``privacy.SeedShareBook``) so the runtime can
+    reconstruct the terms of members that never reach an aggregation.
+
+    ``threshold`` sets the Shamir t: ``0`` (default) resolves to a
+    majority of the cohort (n//2 + 1), a fraction in (0, 1) to
+    ``ceil(f * n)``, an int >= 1 is used as-is (clamped to the
+    cohort)."""
     name = "mask"
+
+    def __init__(self, threshold: float = 0.0):
+        if threshold < 0:
+            raise ValueError(f"mask: threshold must be >= 0, "
+                             f"got {threshold!r}")
+        self.threshold = threshold
+
+    def resolve_threshold(self, n_active: int) -> int:
+        t = self.threshold
+        if t == 0:
+            t = n_active // 2 + 1
+        elif t < 1:
+            t = math.ceil(t * n_active)
+        return int(min(max(1, t), n_active))
 
     def encode(self, msg, ctx):
         from repro.core import privacy
-        masked = privacy.mask_update(msg.payload, ctx.slot, ctx.n_active,
-                                     ctx.seed * 7919 + ctx.round)
+        masked = privacy.mask_update(
+            msg.payload, ctx.slot, ctx.n_active,
+            privacy.mask_round_seed(ctx.seed, ctx.round, ctx.cohort))
         return replace(msg, payload=masked)
 
 
 class DPNoiseLayer(TransportLayer):
     """Server-side Gaussian DP noise on the aggregated payload,
     calibrated by ``ctx.sensitivity`` (the engine supplies
-    ``clip * max(weight)``)."""
+    ``clip * max(weight)``).  ``epsilon``/``delta`` are the *per-round*
+    target; the cumulative cost of repeated releases is tracked by the
+    runtime's ``privacy.RDPAccountant`` at :attr:`noise_multiplier`."""
     name = "dpnoise"
 
     def __init__(self, epsilon: float = 0.5, delta: float = 1e-5):
-        self.epsilon, self.delta = epsilon, delta
+        if not epsilon > 0:
+            raise ValueError(f"dpnoise: epsilon must be > 0, "
+                             f"got {epsilon!r}")
+        if not 0 < delta < 1:
+            raise ValueError(f"dpnoise: delta must be in (0, 1), "
+                             f"got {delta!r}")
+        self.epsilon, self.delta = float(epsilon), float(delta)
+
+    @property
+    def noise_multiplier(self) -> float:
+        """sigma / sensitivity — the accountant's calibration knob."""
+        from repro.core import privacy
+        return privacy.gaussian_sigma(self.epsilon, self.delta, 1.0)
 
     def post_aggregate(self, payload, ctx):
         from repro.core import privacy
         return privacy.add_dp_noise(payload, self.epsilon, self.delta,
                                     ctx.sensitivity,
                                     ctx.seed * 31 + ctx.round)
+
+
+class HELayer(TransportLayer):
+    """Paillier-shaped additively-homomorphic transport *cost model*.
+
+    No actual encryption happens (DESIGN.md §Changed-assumptions) — the
+    layer models what an additively-homomorphic pipeline would do to the
+    payload and the wire:
+
+    * **payload**: fixed-point plaintext encoding — each scalar is
+      quantized to ``frac_bits`` fractional bits with magnitudes clipped
+      at ``2^int_bits`` (quantize → dequantize, so downstream layers and
+      the aggregator still see floats; the quantization error, bounded
+      by ``2^-(frac_bits+1)`` per scalar, is the fidelity price);
+    * **bytes**: scalars pack into ciphertext slots of
+      ``int_bits + frac_bits + 1`` sign ``+ ceil(log2(n_active))``
+      sum-headroom bits (so homomorphic sums cannot overflow a slot),
+      ``key_bits // slot_bits`` slots per ciphertext, and every Paillier
+      ciphertext occupies ``2 * key_bits`` bits on the wire — the
+      honest ciphertext-expansion accounting the bench reports.
+    """
+    name = "he"
+
+    def __init__(self, key_bits: int = 2048, frac_bits: int = 16,
+                 int_bits: int = 8):
+        if key_bits < 256:
+            raise ValueError(f"he: key_bits must be >= 256, "
+                             f"got {key_bits!r}")
+        if frac_bits < 1 or int_bits < 1:
+            raise ValueError(f"he: frac_bits and int_bits must be >= 1, "
+                             f"got frac_bits={frac_bits!r}, "
+                             f"int_bits={int_bits!r}")
+        if int_bits + frac_bits + 1 > key_bits:
+            raise ValueError(f"he: one slot ({int_bits + frac_bits + 1} "
+                             f"bits) cannot exceed key_bits={key_bits}")
+        self.key_bits = int(key_bits)
+        self.frac_bits = int(frac_bits)
+        self.int_bits = int(int_bits)
+
+    def wire_bytes(self, n_scalars: int, n_active: int) -> int:
+        headroom = max(1, int(n_active)).bit_length()
+        slot_bits = self.int_bits + self.frac_bits + 1 + headroom
+        slots_per_ct = max(1, self.key_bits // slot_bits)
+        n_ct = -(-int(n_scalars) // slots_per_ct)
+        return n_ct * (2 * self.key_bits // 8)
+
+    def encode(self, msg, ctx):
+        scale = float(1 << self.frac_bits)
+        qmax = float((1 << (self.int_bits + self.frac_bits)) - 1)
+
+        def quantize(x):
+            a = np.asarray(x, dtype=np.float64)
+            v = np.clip(np.rint(a * scale), -qmax, qmax) / scale
+            return jnp.asarray(v, dtype=jnp.asarray(x).dtype)
+
+        payload = jax.tree.map(quantize, msg.payload)
+        n = sum(int(np.prod(np.shape(x), dtype=np.int64))
+                for x in jax.tree.leaves(msg.payload))
+        return WireMsg(payload, self.wire_bytes(n, ctx.n_active),
+                       msg.state)
 
 
 class FrameLayer(TransportLayer):
@@ -263,9 +373,12 @@ LAYERS: Dict[str, Callable[[dict], TransportLayer]] = {
     "int8_sr": lambda c: CodecLayer("int8_sr"),
     "clip": lambda c: ClipLayer(c.get("dp_clip", 1.0)),
     "weight": lambda c: WeightLayer(),
-    "mask": lambda c: MaskLayer(),
+    "mask": lambda c: MaskLayer(c.get("mask_threshold", 0.0)),
     "dpnoise": lambda c: DPNoiseLayer(c.get("dp_epsilon", 0.5),
                                       c.get("dp_delta", 1e-5)),
+    "he": lambda c: HELayer(c.get("he_key_bits", 2048),
+                            c.get("he_frac_bits", 16),
+                            c.get("he_int_bits", 8)),
     "frame": lambda c: FrameLayer(c.get("frame_header", 28)),
 }
 
@@ -279,6 +392,8 @@ TRANSPORTS: Dict[str, str] = {
     "secure": "mask",
     "dp": "clip>dpnoise",
     "secure_dp": "clip>mask>dpnoise",
+    "he": "clip>he",
+    "he_dp": "clip>he>dpnoise",
     "full_stack": "topk>clip>mask>dpnoise>frame",
 }
 
@@ -341,13 +456,14 @@ class Transport:
         through ``encode``.  Clip layers are no-ops (per-sample
         grad/hess contributions are already bounded — the configured DP
         sensitivity covers them); codec layers are unsupported."""
-        codecs = [l.name for l in self.layers if isinstance(l, CodecLayer)]
+        codecs = [l.name for l in self.layers
+                  if isinstance(l, (CodecLayer, HELayer))]
         if codecs:
             raise ValueError(
-                f"transport {self.name!r}: codec layers {codecs} are not "
-                f"supported for histogram payloads (fed_hist histograms "
-                f"aggregate inside the jitted tree growth); use "
-                f"mask/dpnoise/frame layers")
+                f"transport {self.name!r}: codec/HE layers {codecs} are "
+                f"not supported for histogram payloads (fed_hist "
+                f"histograms aggregate inside the jitted tree growth); "
+                f"use mask/dpnoise/frame layers")
         dp = next((l for l in self.layers if isinstance(l, DPNoiseLayer)),
                   None)
         return {"secure": any(isinstance(l, MaskLayer)

@@ -46,6 +46,7 @@ class FedParametricConfig:
     dp_epsilon: float = 0.0          # >0 -> DP noise on the aggregate
     dp_delta: float = 1e-5
     dp_clip: float = 1.0
+    dp_budget: Optional[float] = None  # cumulative RDP epsilon stop
     participation: str = "full"      # repro.core.participation spec
     transport: str = "plain"         # repro.core.comm.TRANSPORTS spec
     schedule: str = "sync"           # repro.core.runtime.SCHEDULES spec
@@ -246,7 +247,7 @@ def train_federated(clients: Sequence[Tuple[np.ndarray, np.ndarray]],
                     participation=cfg.participation,
                     transport=_parametric_transport(cfg, strat),
                     schedule=cfg.schedule, latency=cfg.latency,
-                    seed=cfg.seed)
+                    seed=cfg.seed, dp_budget=cfg.dp_budget)
     params = rt.run(work)
     return params, rt.comm, work.history, rt.timer
 

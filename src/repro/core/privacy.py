@@ -3,18 +3,66 @@
 * Secure aggregation: pairwise additive masks (Bonawitz-style, simulated)
   — client i adds PRG(seed_ij)*sign(i-j) for every peer j; masks cancel in
   the server's sum, so the server only ever sees the aggregate.  Stand-in
-  for the paper's homomorphic encryption (DESIGN.md §Changed-assumptions).
+  for the paper's homomorphic encryption (DESIGN.md §Changed-assumptions;
+  the ``he`` transport layer models the HE *cost* separately).
+* Dropout tolerance: every pair seed is Shamir t-of-n secret-shared over
+  the dispatch cohort (:class:`SeedShareBook`), so the server can
+  reconstruct — and subtract — the mask terms of clients whose uploads
+  never reach an aggregation (drops, stragglers, async cohort mixing).
+  The share round is *simulated honestly*: shares are derived
+  deterministically rather than exchanged over authenticated channels,
+  and every cohort member is assumed to answer the reconstruction
+  request (so recovery needs ``threshold`` <= cohort size, which
+  :meth:`SeedShareBook.recover_seed` enforces).
 * Differential privacy: Gaussian noise on the aggregated update with
   sigma = sqrt(2 ln(1.25/delta)) * sensitivity / epsilon  (eps=0.5,
-  delta=1e-5 per the paper).
+  delta=1e-5 per the paper), plus an :class:`RDPAccountant` that tracks
+  the cumulative Rényi-DP cost of repeated releases with subsampling
+  amplification from the per-round participation fraction.
 """
 from __future__ import annotations
 
-from typing import List, Sequence
+import math
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+#: Shamir field modulus (Mersenne prime 2^127-1): large enough that the
+#: 128-bit pair seeds reduced into it keep full PRG entropy, cheap to
+#: invert with ``pow(x, P-2, P)``.
+SHAMIR_PRIME = (1 << 127) - 1
+
+
+class MaskRecoveryError(RuntimeError):
+    """Mask recovery is impossible: fewer live cohort members than the
+    Shamir threshold — the aggregate for this cohort cannot be opened."""
+
+
+def mask_round_seed(seed: int, round_idx: int, cohort: int = 0) -> int:
+    """Per-cohort root seed for a round's pairwise masks.  ``cohort``
+    disambiguates multiple dispatch cohorts at the same server version
+    (the async engine re-dispatches clients while a version is open);
+    ``cohort=0`` reproduces the pre-cohort seeds exactly."""
+    return seed * 7919 + round_idx + (cohort << 41)
+
+
+def pair_seed(round_seed: int, lo: int, hi: int) -> int:
+    """Collision-free seed for the (lo, hi) pair mask.
+
+    The legacy formula ``round_seed*1000003 + lo*1009 + hi`` is
+    non-injective once ``hi`` can exceed 1009 — e.g. (0, 2018) and
+    (1, 1009) collide — which silently *reuses one mask across distinct
+    pairs* at cohort scale (a one-time pad reused; the sum still cancels
+    pair-by-pair, but the server can difference colliding uploads).
+    ``np.random.SeedSequence`` hashes the tuple injectively instead.
+    The result is reduced mod :data:`SHAMIR_PRIME` so the seed is
+    directly secret-sharable."""
+    ss = np.random.SeedSequence(
+        (int(round_seed) % (1 << 64), int(lo), int(hi)))
+    a, b = ss.generate_state(2, np.uint64)
+    return (int(a) | (int(b) << 64)) % SHAMIR_PRIME
 
 
 def _pair_mask(seed: int, tree):
@@ -25,16 +73,29 @@ def _pair_mask(seed: int, tree):
 
 
 def mask_update(update, client_idx: int, n_clients: int, round_seed: int):
-    """Add pairwise-cancelling masks to one client's update."""
-    masked = update
+    """Add pairwise-cancelling masks to one client's update.
+
+    Single pass over the flattened leaves: one accumulator list, one
+    mask leaf materialized at a time — O(n_clients) leaf allocations
+    instead of the old per-peer full-pytree copies (O(n_clients^2)
+    allocations per round across the cohort).  Per-leaf accumulation
+    order matches the old per-peer loop, so results are bit-identical
+    (tests/test_privacy.py gates parity against a reference loop)."""
+    leaves, treedef = jax.tree.flatten(update)
+    shapes = [np.shape(x) for x in leaves]
+    dtypes = [jnp.asarray(x).dtype for x in leaves]
+    acc = list(leaves)
     for j in range(n_clients):
         if j == client_idx:
             continue
         lo, hi = min(client_idx, j), max(client_idx, j)
-        m = _pair_mask(round_seed * 1000003 + lo * 1009 + hi, update)
+        rng = np.random.default_rng(pair_seed(round_seed, lo, hi))
         sgn = 1.0 if client_idx < j else -1.0
-        masked = jax.tree.map(lambda a, b: a + sgn * b, masked, m)
-    return masked
+        for k in range(len(acc)):
+            m = jnp.asarray(rng.normal(0, 1.0, shapes[k]),
+                            dtype=dtypes[k])
+            acc[k] = acc[k] + sgn * m
+    return jax.tree.unflatten(treedef, acc)
 
 
 def secure_sum(updates: Sequence):
@@ -45,8 +106,146 @@ def secure_sum(updates: Sequence):
     return total
 
 
+# --- Shamir t-of-n seed sharing (dropout recovery) ----------------------------
+
+def shamir_share(secret: int, n_shares: int, threshold: int,
+                 rng: np.random.Generator) -> List[Tuple[int, int]]:
+    """Split ``secret`` (mod :data:`SHAMIR_PRIME`) into ``n_shares``
+    points of a random degree-(threshold-1) polynomial; any
+    ``threshold`` of them reconstruct, fewer reveal nothing."""
+    if not 1 <= threshold <= n_shares:
+        raise ValueError(f"shamir: need 1 <= threshold <= n_shares, got "
+                         f"t={threshold}, n={n_shares}")
+    P = SHAMIR_PRIME
+    coeffs = [int(secret) % P]
+    coeffs += [int.from_bytes(rng.bytes(16), "little") % P
+               for _ in range(threshold - 1)]
+    shares = []
+    for x in range(1, n_shares + 1):
+        y = 0
+        for c in reversed(coeffs):       # Horner, mod P
+            y = (y * x + c) % P
+        shares.append((x, y))
+    return shares
+
+
+def shamir_reconstruct(shares: Sequence[Tuple[int, int]]) -> int:
+    """Lagrange-interpolate the polynomial at 0 from >= threshold
+    shares.  (With fewer than threshold shares this returns a value, but
+    not the secret — callers enforce the threshold.)"""
+    P = SHAMIR_PRIME
+    xs = [x for x, _ in shares]
+    if len(set(xs)) != len(xs):
+        raise ValueError("shamir: duplicate share points")
+    secret = 0
+    for xi, yi in shares:
+        num = den = 1
+        for xj in xs:
+            if xj == xi:
+                continue
+            num = num * (-xj) % P
+            den = den * (xi - xj) % P
+        secret = (secret + yi * num * pow(den, P - 2, P)) % P
+    return secret
+
+
+class SeedShareBook:
+    """Shamir share book for one dispatch cohort's pair seeds.
+
+    Honest simulation of the Bonawitz share-distribution round: at
+    dispatch, each of the cohort's ``n`` members notionally splits every
+    pair seed it owns into ``n`` shares at threshold ``t`` and deals one
+    to each peer.  Here the shares are derived deterministically from
+    the cohort's ``round_seed`` (no authenticated channels), and every
+    live member is assumed to answer a reconstruction request — so
+    recovery of a pair's seed needs only that at least ``t`` cohort
+    members exist, which :meth:`recover_seed` enforces (raising
+    :class:`MaskRecoveryError` otherwise).
+
+    Shares are generated lazily per pair (only recovered pairs ever pay
+    for them) and :attr:`shares_pulled` counts every share consumed, so
+    the runtime can charge the reconstruction traffic to the comm
+    ledger at :data:`SHARE_NBYTES` per share."""
+
+    #: wire size of one share: 16-byte field element + 4-byte point index
+    SHARE_NBYTES = 20
+
+    def __init__(self, round_seed: int, n_active: int, threshold: int):
+        if not 1 <= threshold <= n_active:
+            raise ValueError(f"seed share book: need 1 <= threshold <= "
+                             f"n_active, got t={threshold}, n={n_active}")
+        self.round_seed = int(round_seed)
+        self.n = int(n_active)
+        self.t = int(threshold)
+        self._shares: Dict[Tuple[int, int], List[Tuple[int, int]]] = {}
+        self.shares_pulled = 0
+
+    def _pair_shares(self, lo: int, hi: int) -> List[Tuple[int, int]]:
+        key = (lo, hi)
+        if key not in self._shares:
+            # share polynomial rng: distinct SeedSequence stream from
+            # the pair seed itself (extra tuple element)
+            rng = np.random.default_rng(np.random.SeedSequence(
+                (self.round_seed % (1 << 64), int(lo), int(hi), 0x5EED)))
+            self._shares[key] = shamir_share(
+                pair_seed(self.round_seed, lo, hi), self.n, self.t, rng)
+        return self._shares[key]
+
+    def recover_seed(self, lo: int, hi: int,
+                     respondents: Optional[Iterable[int]] = None) -> int:
+        """Reconstruct the (lo, hi) pair seed from the shares held by
+        ``respondents`` (cohort slots; default: the whole cohort —
+        the honest-simulation assumption that everyone answers)."""
+        resp = (sorted(set(respondents)) if respondents is not None
+                else list(range(self.n)))
+        if len(resp) < self.t:
+            raise MaskRecoveryError(
+                f"cannot recover pair ({lo}, {hi}) seed: "
+                f"{len(resp)} respondents < threshold {self.t}")
+        shares = self._pair_shares(lo, hi)
+        use = [shares[s] for s in resp[:self.t]]
+        self.shares_pulled += self.t
+        return shamir_reconstruct(use)
+
+
+def strip_missing_masks(payload, book: SeedShareBook, slot: int,
+                        present: Set[int]):
+    """Subtract from one delivered masked payload every pair-mask term
+    whose peer slot is absent from this aggregation batch.
+
+    Pair terms between two slots in the *same* batch cancel in the sum
+    and are left in place (they still blind the individual payloads);
+    every other term is reconstructed through the cohort's share book
+    and removed — so a batch's masked sum equals its plain sum under any
+    drop/straggle/async-mixing pattern.  Returns ``(payload,
+    n_recovered_seeds)``."""
+    missing = [d for d in range(book.n) if d != slot and d not in present]
+    if not missing:
+        return payload, 0
+    leaves, treedef = jax.tree.flatten(payload)
+    shapes = [np.shape(x) for x in leaves]
+    dtypes = [jnp.asarray(x).dtype for x in leaves]
+    for d in missing:
+        lo, hi = min(slot, d), max(slot, d)
+        rng = np.random.default_rng(book.recover_seed(lo, hi))
+        sgn = 1.0 if slot < d else -1.0
+        for k in range(len(leaves)):
+            m = jnp.asarray(rng.normal(0, 1.0, shapes[k]),
+                            dtype=dtypes[k])
+            leaves[k] = leaves[k] - sgn * m
+    return jax.tree.unflatten(treedef, leaves), len(missing)
+
+
+# --- differential privacy -----------------------------------------------------
+
 def gaussian_sigma(epsilon: float, delta: float,
                    sensitivity: float = 1.0) -> float:
+    if not epsilon > 0:
+        raise ValueError(f"gaussian_sigma: epsilon must be > 0, "
+                         f"got {epsilon!r}")
+    if not 0 < delta < 1:
+        raise ValueError(f"gaussian_sigma: delta must be in (0, 1), "
+                         f"got {delta!r}")
     return float(np.sqrt(2 * np.log(1.25 / delta)) * sensitivity / epsilon)
 
 
@@ -66,3 +265,123 @@ def add_dp_noise(tree, epsilon: float, delta: float, sensitivity: float,
         lambda x: x + jnp.asarray(
             rng.normal(0, sigma, np.shape(x)),
             dtype=jnp.asarray(x).dtype), tree)
+
+
+# --- Rényi-DP accounting ------------------------------------------------------
+
+#: integer Rényi orders the accountant optimizes the (eps, delta)
+#: conversion over — dense where the optimum usually lands, sparse tail
+#: for very small noise multipliers
+DEFAULT_RDP_ORDERS: Tuple[int, ...] = tuple(range(2, 33)) + (48, 64,
+                                                             128, 256)
+
+
+def _log_binom(n: int, k: int) -> float:
+    return (math.lgamma(n + 1) - math.lgamma(k + 1)
+            - math.lgamma(n - k + 1))
+
+
+def subsampled_gaussian_rdp(q: float, noise_multiplier: float,
+                            order: int) -> float:
+    """RDP epsilon of one subsampled-Gaussian release at integer order.
+
+    Exact integer-order expression for Poisson subsampling at rate
+    ``q`` with noise multiplier ``z = sigma / sensitivity``::
+
+        eps(a) = log( sum_{k=0..a} C(a,k) (1-q)^(a-k) q^k
+                      * exp((k^2 - k) / (2 z^2)) ) / (a - 1)
+
+    At ``q = 1`` this reduces to the plain Gaussian's ``a / (2 z^2)``
+    (the closed form tests/test_privacy.py spot-checks)."""
+    if order < 2 or int(order) != order:
+        raise ValueError(f"integer order >= 2 required, got {order!r}")
+    if not noise_multiplier > 0:
+        raise ValueError(f"noise_multiplier must be > 0, "
+                         f"got {noise_multiplier!r}")
+    if q <= 0:
+        return 0.0
+    z2 = 2.0 * noise_multiplier * noise_multiplier
+    if q >= 1.0:
+        return order / z2
+    terms = [_log_binom(order, k) + (order - k) * math.log1p(-q)
+             + k * math.log(q) + (k * k - k) / z2
+             for k in range(order + 1)]
+    m = max(terms)
+    log_sum = m + math.log(sum(math.exp(t - m) for t in terms))
+    return max(0.0, log_sum / (order - 1))
+
+
+class RDPAccountant:
+    """Cumulative Rényi-DP ledger over repeated noisy aggregations.
+
+    Each server release is one subsampled-Gaussian mechanism at the
+    round's participation fraction ``q``; :meth:`step` adds its RDP
+    vector (cached per distinct ``q``) to the accumulator of every
+    client that *actually participated* — individual-accounting
+    semantics: a client's loss accrues only in rounds it is sampled
+    into, with amplification from the sampling rate, so heterogeneous
+    participation yields heterogeneous per-client epsilon.  The headline
+    :meth:`epsilon` is the max over clients (equals the uniform bound
+    under full participation).  Conversion to (eps, delta) optimizes
+    ``rdp(a) + log(1/delta)/(a-1)`` over :data:`DEFAULT_RDP_ORDERS`."""
+
+    def __init__(self, noise_multiplier: float, delta: float = 1e-5,
+                 orders: Sequence[int] = DEFAULT_RDP_ORDERS):
+        if not noise_multiplier > 0:
+            raise ValueError(f"rdp accountant: noise_multiplier must be "
+                             f"> 0, got {noise_multiplier!r}")
+        if not 0 < delta < 1:
+            raise ValueError(f"rdp accountant: delta must be in (0, 1), "
+                             f"got {delta!r}")
+        self.noise_multiplier = float(noise_multiplier)
+        self.delta = float(delta)
+        self.orders = tuple(int(a) for a in orders)
+        self._rdp_cache: Dict[float, np.ndarray] = {}
+        self._per_client: Dict[int, np.ndarray] = {}
+        self.steps = 0
+
+    def _rdp_vec(self, q: float) -> np.ndarray:
+        key = round(float(q), 12)
+        if key not in self._rdp_cache:
+            self._rdp_cache[key] = np.array(
+                [subsampled_gaussian_rdp(key, self.noise_multiplier, a)
+                 for a in self.orders])
+        return self._rdp_cache[key]
+
+    def step(self, clients: Iterable[int], q: float):
+        """Record one release over ``clients`` at sampling rate ``q``."""
+        if not 0 < q <= 1:
+            raise ValueError(f"participation fraction q must be in "
+                             f"(0, 1], got {q!r}")
+        vec = self._rdp_vec(q)
+        for c in clients:
+            acc = self._per_client.get(c)
+            self._per_client[c] = vec.copy() if acc is None else acc + vec
+        self.steps += 1
+
+    def _eps(self, vec: np.ndarray, delta: float) -> float:
+        return float(min(v + math.log(1.0 / delta) / (a - 1)
+                         for a, v in zip(self.orders, vec)))
+
+    def epsilon(self, client: Optional[int] = None,
+                delta: Optional[float] = None) -> float:
+        """Cumulative (eps, delta)-DP epsilon — for one client, or the
+        max over all tracked clients (0.0 before any step)."""
+        delta = self.delta if delta is None else delta
+        if client is not None:
+            vec = self._per_client.get(client)
+            return 0.0 if vec is None else self._eps(vec, delta)
+        if not self._per_client:
+            return 0.0
+        return max(self._eps(v, delta)
+                   for v in self._per_client.values())
+
+    def summary(self) -> Dict:
+        """Ledger-attachable snapshot (``CommLog.privacy``)."""
+        return {"epsilon": self.epsilon(),
+                "delta": self.delta,
+                "noise_multiplier": self.noise_multiplier,
+                "steps": self.steps,
+                "per_client": {c: self._eps(v, self.delta)
+                               for c, v in
+                               sorted(self._per_client.items())}}

@@ -86,8 +86,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.comm import (CommLog, MaskLayer, Timer, Transport, WireCtx,
-                             WireMsg, get_transport, pytree_bytes)
+from repro.core import privacy
+from repro.core.comm import (CommLog, DPNoiseLayer, MaskLayer, Timer,
+                             Transport, WireCtx, WireMsg, get_transport,
+                             pytree_bytes)
 from repro.core.latency import Draw, get_latency
 from repro.core.participation import Participation, get_participation
 from repro.core.strategies import get_strategy
@@ -140,6 +142,12 @@ class ClientMsg:
     weight: float = 1.0
     staleness: int = 0
     what: str = "update"
+    #: secure-agg bookkeeping, set by ``FedRuntime._annotate_masks`` on
+    #: messages whose payload was mask-encoded: the share-book key of
+    #: the dispatch cohort and the client's slot in it.  Cleared once
+    #: the message's masks have been reconciled (``_recover_masks``).
+    mask_key: Any = None
+    mask_slot: int = -1
 
 
 @dataclass
@@ -211,6 +219,12 @@ class FedRuntime:
     seed: int = 0
     stale_discount: float = 0.5
     allow_stale: bool = True
+    #: stop criterion on the cumulative RDP epsilon: once the
+    #: accountant's max-over-clients epsilon reaches this budget the
+    #: run halts after the offending aggregation (recorded in
+    #: ``comm.privacy['budget_stop_round']``).  Requires a dpnoise
+    #: layer in the transport.
+    dp_budget: Optional[float] = None
     client_prefix: str = "c"
     comm: CommLog = field(default_factory=CommLog)
     timer: Timer = field(default_factory=Timer)
@@ -232,32 +246,35 @@ class FedRuntime:
         # one record per aggregation, shared with the comm ledger so
         # entry points that only hold the CommLog can surface it
         self.timeline: List[Dict] = self.comm.timeline
-        has_mask = any(isinstance(l, MaskLayer)
-                       for l in self.transport.layers)
-        if (self.allow_stale and self.participation.may_straggle
-                and has_mask):
+        if (self.schedule_mode == "async"
+                and self.participation.name != "full"):
             raise ValueError(
-                f"participation {self.participation.name!r} can deliver "
-                f"straggler updates a round late, but transport "
-                f"{self.transport.name!r} carries secure-agg masks keyed "
-                f"to the compute round's active set — the pairwise masks "
-                f"would never cancel in the server sum.  Use "
-                f"'dropout:p' (stragglers lost, p_straggle=0) or drop "
-                f"the mask layer")
-        if self.schedule_mode == "async":
-            if self.participation.name != "full":
-                raise ValueError(
-                    f"schedule 'async' needs participation 'full' (got "
-                    f"{self.participation.name!r}): who computes when is "
-                    f"driven by the latency/availability model, not a "
-                    f"round schedule")
-            if has_mask:
-                raise ValueError(
-                    f"transport {self.transport.name!r} carries secure-"
-                    f"agg masks keyed to a dispatch cohort, but buffered "
-                    f"async aggregation mixes cohorts — the pairwise "
-                    f"masks would never cancel in the server sum.  Drop "
-                    f"the mask layer or use schedule 'sync'")
+                f"schedule 'async' needs participation 'full' (got "
+                f"{self.participation.name!r}): who computes when is "
+                f"driven by the latency/availability model, not a "
+                f"round schedule")
+        # secure-agg mask recovery state: masked payloads whose cohort
+        # peers miss an aggregation (stragglers, async cohort mixing,
+        # transit drops) are repaired by reconstructing the absent
+        # pair seeds from the cohort's Shamir share book — see
+        # docs/ARCHITECTURE.md §Privacy
+        self._mask_layer = next(
+            (l for l in self.transport.layers
+             if isinstance(l, MaskLayer)), None)
+        self._mask_books: Dict[tuple, privacy.SeedShareBook] = {}
+        self._mask_slots: Dict[tuple, int] = {}
+        self._cohort = 0          # current dispatch cohort (sync: 0)
+        self._next_cohort = 0     # async: fresh cohort per dispatch
+        dp = next((l for l in self.transport.layers
+                   if isinstance(l, DPNoiseLayer)), None)
+        self.dp_accountant = (
+            privacy.RDPAccountant(dp.noise_multiplier, dp.delta)
+            if dp is not None else None)
+        if self.dp_budget is not None and self.dp_accountant is None:
+            raise ValueError(
+                f"dp_budget={self.dp_budget} needs a 'dpnoise' layer in "
+                f"transport {self.transport.name!r} — there is no DP "
+                f"mechanism to account for")
         self._rng = np.random.default_rng([self.seed, 0xFED])
         if self.tracer is None:
             self.tracer = _ambient_tracer()
@@ -296,7 +313,19 @@ class FedRuntime:
         """Run one client's payload through the transport stack."""
         ctx = WireCtx(round=round_idx, client=client, slot=slot,
                       n_active=n_active, seed=self.seed,
-                      weight_scale=weight_scale)
+                      cohort=self._cohort, weight_scale=weight_scale)
+        if self._mask_layer is not None and n_active > 1:
+            # open (or join) the dispatch cohort's Shamir share book and
+            # remember which slot this client masked under, so delivery
+            # batches can locate and reconcile the message's masks
+            key = (round_idx, self._cohort)
+            if key not in self._mask_books:
+                self._mask_books[key] = privacy.SeedShareBook(
+                    privacy.mask_round_seed(self.seed, round_idx,
+                                            self._cohort),
+                    n_active,
+                    self._mask_layer.resolve_threshold(n_active))
+            self._mask_slots[(key, client)] = slot
         if self.tracer:  # per-layer byte events (repro.obs)
             ctx.tracer, ctx.t = self.tracer, self.now
         return self.transport.encode(payload, nbytes=nbytes, state=state,
@@ -308,6 +337,79 @@ class FedRuntime:
         ctx = WireCtx(round=round_idx, seed=self.seed,
                       sensitivity=sensitivity)
         return self.transport.post_aggregate(payload, ctx)
+
+    # -- secure-agg mask recovery ------------------------------------------
+
+    def _annotate_masks(self, msgs: List[ClientMsg], round_idx: int):
+        """Tag messages produced under the current dispatch cohort with
+        their share-book key/slot so delivery batches can reconcile
+        their masks (no-op for unmasked transports and payload-free
+        messages, e.g. fed_hist's in-jit histograms)."""
+        if self._mask_layer is None:
+            return
+        key = (round_idx, self._cohort)
+        for m in msgs:
+            slot = self._mask_slots.get((key, m.client))
+            if slot is not None and m.payload is not None:
+                m.mask_key, m.mask_slot = key, slot
+
+    def _recover_masks(self, msgs: List[ClientMsg], round_idx: int):
+        """Reconcile secure-agg masks for one delivery group.
+
+        Per dispatch cohort represented in ``msgs``: pair terms between
+        two members of the *same* group cancel in the aggregate sum and
+        are left in place (they keep blinding the individual payloads);
+        terms against every absent cohort member are reconstructed from
+        the cohort's Shamir share book and subtracted — so the group's
+        masked sum equals its plain sum under any drop / straggler /
+        async-mixing pattern.  Reconstruction traffic (threshold shares
+        per recovered seed) is charged to the ledger as 'mask-shares'.
+        Must run *before* staleness discounting: mask terms subtract at
+        full scale, and the surviving in-group terms scale together
+        (one cohort dispatch = one staleness) so they still cancel."""
+        if self._mask_layer is None:
+            return
+        groups: Dict[Any, List[ClientMsg]] = {}
+        for m in msgs:
+            if m.mask_key is not None:
+                groups.setdefault(m.mask_key, []).append(m)
+        tr = self.tracer
+        for key, group in groups.items():
+            book = self._mask_books[key]
+            present = {m.mask_slot for m in group}
+            pulled0, n_rec = book.shares_pulled, 0
+            for m in group:
+                m.payload, n = privacy.strip_missing_masks(
+                    m.payload, book, m.mask_slot, present)
+                m.mask_key = None
+                n_rec += n
+            if n_rec:
+                nb = (book.shares_pulled - pulled0) * book.SHARE_NBYTES
+                self.comm.log(round_idx, f"{self.client_prefix}*", "up",
+                              nb, "mask-shares", t=self._stamp())
+                if tr:
+                    tr.instant("fed.mask_recover", track="server",
+                               t=self.now, round=round_idx,
+                               cohort=key[1], seeds=n_rec, bytes=nb)
+                    tr.metrics.inc("bytes_up", nb)
+
+    def _dp_budget_hit(self, round_idx: int) -> bool:
+        """True once the cumulative RDP epsilon reaches ``dp_budget``
+        (checked after each aggregation; the stop round is recorded in
+        the ledger's privacy snapshot)."""
+        if self.dp_budget is None or self.dp_accountant is None:
+            return False
+        eps = self.dp_accountant.epsilon()
+        if eps < self.dp_budget:
+            return False
+        if self.comm.privacy is not None:
+            self.comm.privacy["budget"] = self.dp_budget
+            self.comm.privacy["budget_stop_round"] = round_idx
+        if self.tracer:
+            self.tracer.instant("fed.dp_budget_stop", track="server",
+                                t=self.now, round=round_idx,
+                                epsilon=eps, budget=self.dp_budget)
+        return True
 
     # -- timeline ----------------------------------------------------------
 
@@ -323,6 +425,15 @@ class FedRuntime:
              "n_clients": len(msgs), "n_msgs": len(msgs),
              "staleness": [m.staleness for m in msgs],
              "bytes": sum(m.nbytes for m in msgs)})
+        if self.dp_accountant is not None and msgs:
+            # one subsampled-Gaussian release per aggregation: the
+            # participation fraction is the amplification rate, and only
+            # the clients actually folded in accrue loss (individual
+            # accounting — privacy.RDPAccountant)
+            part = {m.client for m in msgs}
+            self.dp_accountant.step(
+                part, min(1.0, len(part) / max(self.n_clients, 1)))
+            self.comm.privacy = self.dp_accountant.summary()
         tr = self.tracer
         if tr:
             tr.metrics.inc("msgs_delivered", len(msgs))
@@ -373,6 +484,7 @@ class FedRuntime:
             t_start = self.now
             msgs = (work.client_round(self, state, rnd)
                     if computing else [])
+            self._annotate_masks(msgs, r)
             # the synchronous barrier: the round takes as long as the
             # slowest computing client (drops are a participation-axis
             # concern in sync mode, so the dropped flag is ignored)
@@ -397,6 +509,13 @@ class FedRuntime:
                     tr.instant("fed.straggle", track=f"c{m.client}",
                                t=self.now, round=r,
                                staleness=m.staleness)
+            if self._mask_layer is not None:
+                # reconcile cohort masks per delivery group: the fresh
+                # batch loses its straggler terms, the held batch loses
+                # its fresh terms (mutual straggler terms survive — they
+                # cancel when pending is delivered together next round)
+                self._recover_masks(fresh, r)
+                self._recover_masks(late, r)
             for m in pending:  # stale-update handling: discount the
                 # payload itself, so the reduced contribution holds for
                 # every aggregator (uniform means, weighted combines,
@@ -416,6 +535,8 @@ class FedRuntime:
                            n_stragglers=len(stragglers),
                            bytes=sum(m.nbytes for m in deliver))
                 tr.metrics.observe("round_s", self.now - t_start)
+            if deliver and self._dp_budget_hit(r):
+                break
         return state
 
     def _run_async(self, work: ClientWork, agg: ServerAgg, state):
@@ -459,8 +580,16 @@ class FedRuntime:
                         f"latency model "
                         f"{getattr(self.latency, 'name', None)!r} drops "
                         f"(almost) every upload")
+                # fresh dispatch cohort: mask seeds must differ between
+                # dispatch groups even at the same server version (a
+                # client retrying after a transit drop would otherwise
+                # reuse its pair masks — a one-time pad reused)
+                self._cohort = self._next_cohort
+                self._next_cohort += 1
                 rnd = RoundInfo(version, group, list(group), [])
-                for m in work.client_round(self, state, rnd):
+                msgs = work.client_round(self, state, rnd)
+                self._annotate_masks(msgs, version)
+                for m in msgs:
                     d = self._draw(m.client)
                     heapq.heappush(heap, (self.now + d.delay, seq,
                                           m.client,
@@ -493,6 +622,13 @@ class FedRuntime:
             buffer.append(msg)
             if len(buffer) < K:
                 continue
+            # reconcile masks before discounting: cohort members absent
+            # from this buffer (still in flight, dropped, or already
+            # aggregated earlier) get their pair terms reconstructed
+            # and subtracted; in-buffer cohort peers share a dispatch
+            # (same staleness), so their surviving mutual terms scale
+            # together and still cancel
+            self._recover_masks(buffer, version)
             for m in buffer:
                 if m.staleness > 0:  # same stale-update discounting as
                     # the sync loop's straggler path (payload scaling
@@ -514,6 +650,8 @@ class FedRuntime:
             version += 1
             ready.extend(m.client for m in buffer)
             buffer = []
+            if self._dp_budget_hit(version - 1):
+                break
         if tr:
             # the run stops mid-flight once `rounds` aggregations land;
             # truncate still-open compute spans at the final clock so

@@ -210,6 +210,11 @@ class _PodWork(ClientWork, ServerAgg):
         upd, state["server"] = self.strat.aggregate(
             state["server"], [m.payload for m in msgs],
             [m.weight for m in msgs])
+        # server-side transport tail: identity for plain stacks; for
+        # dpnoise-carrying transports this noises the applied update (at
+        # sensitivity 1.0 — pair with a clip layer to actually bound
+        # per-pod influence), keeping the RDP accountant honest
+        upd = rt.post_aggregate(upd, round_idx=rnd.index)
         state["params"] = jax.tree.map(lambda g, u: g + u,
                                        state["params"], upd)
         if self.verbose:
@@ -233,7 +238,8 @@ def simulate(arch: str, *, n_pods: int = 3, rounds: int = 10,
              schedule: str = "sync", latency: Optional[str] = None,
              sync_sampler: bool = False, seed: int = 0,
              run: Optional[RunConfig] = None, verbose: bool = True,
-             strategy: str = "fedavg", engine: str = "vmap"):
+             strategy: str = "fedavg", engine: str = "vmap",
+             dp_budget: Optional[float] = None):
     """Federated training of the reduced ``arch`` across virtual pods.
 
     Args:
@@ -264,6 +270,8 @@ def simulate(arch: str, *, n_pods: int = 3, rounds: int = 10,
       latency: per-pod latency/availability model spec
         (``repro.core.latency.LATENCY``, e.g. "lognormal:0:1").
       sync_sampler: synchronize pod samplers (fed-SMOTE analog).
+      dp_budget: cumulative RDP epsilon stop criterion (needs a
+        dpnoise layer in the transport, e.g. "dp"/"secure_dp").
 
     Returns a dict with ``loss_history`` (per-aggregation mean loss),
     ``comm`` (CommLog, exact bytes up/down per pod per round),
@@ -312,7 +320,8 @@ def simulate(arch: str, *, n_pods: int = 3, rounds: int = 10,
     rt = FedRuntime(n_clients=n_pods, rounds=rounds,
                     participation=participation, transport=transport,
                     schedule=schedule, latency=latency,
-                    seed=seed, client_prefix="pod")
+                    seed=seed, dp_budget=dp_budget,
+                    client_prefix="pod")
     state = rt.run(work)
     return {"loss_history": state["history"], "comm": rt.comm,
             "uplink_mb": rt.comm.total_mb("up"),
@@ -387,9 +396,17 @@ def tier_summary(comm) -> str:
     """Per-tier uplink breakdown for the end-of-run summary line:
     ``edge=…MB wan=…MB`` for hierarchical ledgers, ``star=…MB`` (the
     flat total) when untiered — every mode prints it, not just the
-    sharded cohort path."""
-    return " ".join(f"{k}={v/1e6:.2f}MB"
-                    for k, v in sorted(comm.per_tier_bytes("up").items()))
+    sharded cohort path.  When the run carried a DP ledger
+    (``CommLog.privacy``, the runtime's RDP accountant snapshot) the
+    cumulative epsilon rides along: ``eps=…@delta=…``."""
+    parts = [f"{k}={v/1e6:.2f}MB"
+             for k, v in sorted(comm.per_tier_bytes("up").items())]
+    p = getattr(comm, "privacy", None)
+    if p:
+        parts.append(f"eps={p['epsilon']:.2f}@delta={p['delta']:.0e}")
+        if "budget_stop_round" in p:
+            parts.append(f"dp-budget-stop@r{p['budget_stop_round']}")
+    return " ".join(parts)
 
 
 # --- tabular pipeline drivers (paper C1-C3 on the Framingham twin) ------------
@@ -421,7 +438,9 @@ def simulate_parametric(*, model: str = "logreg", n_clients: int = 3,
                         latency: Optional[str] = None, seed: int = 0,
                         n_records: int = 4238, verbose: bool = True,
                         mesh: Optional[str] = None, silos: int = 1,
-                        cohort: Optional[str] = None):
+                        cohort: Optional[str] = None,
+                        secure_agg: bool = False, dp_epsilon: float = 0.0,
+                        dp_budget: Optional[float] = None):
     """Parametric FL (paper C1) on the Framingham twin — the CLI face of
     ``repro.core.parametric.train_federated``, sharing the partition /
     participation / transport / schedule axes with every other mode.
@@ -452,7 +471,10 @@ def simulate_parametric(*, model: str = "logreg", n_clients: int = 3,
                                     participation=participation,
                                     transport=transport,
                                     schedule=schedule,
-                                    latency=latency, seed=seed)
+                                    latency=latency, seed=seed,
+                                    secure_agg=secure_agg,
+                                    dp_epsilon=dp_epsilon,
+                                    dp_budget=dp_budget)
         params, comm, history, timer = P.train_federated(clients, cfg,
                                                          test=test)
     else:
@@ -464,7 +486,10 @@ def simulate_parametric(*, model: str = "logreg", n_clients: int = 3,
                                     participation=participation,
                                     transport=transport,
                                     schedule=schedule,
-                                    latency=latency, seed=seed)
+                                    latency=latency, seed=seed,
+                                    secure_agg=secure_agg,
+                                    dp_epsilon=dp_epsilon,
+                                    dp_budget=dp_budget)
         params, comm, history, timer = P.train_federated_sharded(
             spec, cfg, mesh=mesh, silos=silos,
             test=cohort_testset(seed))
@@ -649,6 +674,11 @@ def main():
     ap.add_argument("--sampling", default="none")
     ap.add_argument("--secure-agg", action="store_true")
     ap.add_argument("--dp-epsilon", type=float, default=0.0)
+    ap.add_argument("--dp-budget", type=float, default=None,
+                    help="cumulative RDP epsilon stop criterion: halt "
+                    "training once the accountant's max per-client "
+                    "epsilon reaches this (needs a dpnoise transport, "
+                    "e.g. --transport dp|secure_dp or --dp-epsilon)")
     args = ap.parse_args()
     axes = dict(partition=args.partition or "iid", alpha=args.alpha,
                 participation=args.participation,
@@ -668,7 +698,10 @@ def main():
                             local_steps=args.local_steps,
                             sampling=args.sampling,
                             strategy=args.strategy, mesh=args.mesh,
-                            silos=args.silos, cohort=args.cohort, **axes)
+                            silos=args.silos, cohort=args.cohort,
+                            secure_agg=args.secure_agg,
+                            dp_epsilon=args.dp_epsilon,
+                            dp_budget=args.dp_budget, **axes)
         return
     if args.mode == "tree_subset":
         simulate_tree_subset(n_clients=args.pods, depth=args.depth,
@@ -690,7 +723,8 @@ def main():
                    transport=args.transport, schedule=args.schedule,
                    latency=args.latency,
                    strategy=args.strategy, engine=args.engine,
-                   sync_sampler=args.sync_sampler)
+                   sync_sampler=args.sync_sampler,
+                   dp_budget=args.dp_budget)
     print(f"final round loss {out['loss_history'][-1]:.4f}, "
           f"uplink {out['uplink_mb']:.2f} MB "
           f"({tier_summary(out['comm'])}), "

@@ -1,0 +1,328 @@
+"""Privacy-layer unit + property tests (tests/proptest.py driver):
+
+* pair-seed injectivity — regression for the legacy
+  ``round_seed*1000003 + lo*1009 + hi`` formula whose collisions reuse
+  one mask across distinct pairs at cohort scale (> 1009 clients);
+* ``mask_update`` single-pass rewrite is bit-identical to the old
+  per-peer pytree loop;
+* Shamir t-of-n seed sharing: any t shares reconstruct, fewer don't,
+  and :class:`SeedShareBook` enforces the threshold;
+* dropout recovery: a delivery batch's masked sum equals its plain sum
+  after :func:`strip_missing_masks`, for random shapes / drop patterns
+  / thresholds — and end-to-end through the FedRuntime under
+  ``dropout:p:p_straggle`` and ``async:K`` schedules;
+* RDP accountant: closed form at q=1, monotone in steps, subsampling
+  amplification, and the ``dp_budget`` stop criterion;
+* layer construction validation (DPNoiseLayer / gaussian_sigma).
+"""
+import itertools
+
+import jax
+import numpy as np
+import pytest
+
+from proptest import cases, for_cases, ints
+
+from repro.core import privacy
+from repro.core.comm import DPNoiseLayer, MaskLayer
+from repro.core.parametric import FedParametricConfig, train_federated
+from repro.core.privacy import (MaskRecoveryError, RDPAccountant,
+                                SeedShareBook, mask_round_seed,
+                                mask_update, pair_seed, secure_sum,
+                                shamir_reconstruct, shamir_share,
+                                strip_missing_masks,
+                                subsampled_gaussian_rdp)
+
+
+def _legacy_pair_seed(round_seed, lo, hi):
+    """The pre-fix formula, kept here as the regression target."""
+    return round_seed * 1000003 + lo * 1009 + hi
+
+
+def _leaves(t):
+    return [np.asarray(x) for x in jax.tree.leaves(t)]
+
+
+# --- pair-seed collision regression -------------------------------------------
+
+def test_legacy_pair_seed_collides_beyond_1009_clients():
+    """The documented counterexample: (0, 2018) and (1, 1009) hash to the
+    same legacy seed (0*1009+2018 == 1*1009+1009), so two distinct pairs
+    shared one mask — the new derivation separates them."""
+    assert _legacy_pair_seed(7, 0, 2018) == _legacy_pair_seed(7, 1, 1009)
+    assert pair_seed(7, 0, 2018) != pair_seed(7, 1, 1009)
+    tree = {"w": np.zeros((3, 2), np.float32)}
+    m1 = privacy._pair_mask(pair_seed(7, 0, 2018), tree)
+    m2 = privacy._pair_mask(pair_seed(7, 1, 1009), tree)
+    assert not np.allclose(np.asarray(m1["w"]), np.asarray(m2["w"]))
+
+
+def test_pair_seed_distinct_on_adversarial_colliding_family():
+    """Every pair family {(i, c - 1009*i)} is a legacy-collision class;
+    the SeedSequence derivation must keep all of them (and a broad
+    random sample at n > 1009) distinct."""
+    seen = {}
+    for c in (2018, 3031, 5000, 9000):
+        fam = [(i, c - 1009 * i) for i in range(c // 1009 + 1)
+               if i < c - 1009 * i]
+        legacy = {_legacy_pair_seed(3, lo, hi) for lo, hi in fam}
+        assert len(legacy) == 1, "family construction broken"
+        for lo, hi in fam:
+            seen[(lo, hi)] = pair_seed(3, lo, hi)
+    rng = np.random.default_rng(0)
+    n = 4096
+    while len(seen) < 20_000:
+        lo, hi = sorted(rng.integers(0, n, size=2))
+        if lo != hi:
+            seen[(int(lo), int(hi))] = pair_seed(3, int(lo), int(hi))
+    assert len(set(seen.values())) == len(seen)
+
+
+# --- mask_update single-pass parity -------------------------------------------
+
+def _reference_mask_update(update, client_idx, n_clients, round_seed):
+    """The old O(n_clients) full-pytree-per-peer loop, verbatim math."""
+    masked = update
+    for j in range(n_clients):
+        if j == client_idx:
+            continue
+        lo, hi = min(client_idx, j), max(client_idx, j)
+        mask = privacy._pair_mask(pair_seed(round_seed, lo, hi), update)
+        sgn = 1.0 if client_idx < j else -1.0
+        masked = jax.tree.map(lambda a, m: a + sgn * m, masked, mask)
+    return masked
+
+
+@for_cases(cases(6, seed=11, c=ints(2, 9), n=ints(1, 12), m=ints(1, 6),
+                 seed2=ints(0, 10 ** 6)))
+def test_mask_update_bit_identical_to_reference_loop(c, n, m, seed2):
+    rng = np.random.default_rng(seed2)
+    u = {"w": np.asarray(rng.normal(size=(n, m)), np.float32),
+         "b": np.asarray(rng.normal(size=(m,)), np.float32)}
+    for i in range(c):
+        fast = mask_update(u, i, c, round_seed=seed2)
+        ref = _reference_mask_update(u, i, c, round_seed=seed2)
+        for a, b in zip(_leaves(fast), _leaves(ref)):
+            np.testing.assert_array_equal(a, b)
+
+
+# --- Shamir seed sharing ------------------------------------------------------
+
+def test_shamir_any_threshold_subset_reconstructs():
+    rng = np.random.default_rng(5)
+    secret = int.from_bytes(rng.bytes(16), "little") % privacy.SHAMIR_PRIME
+    shares = shamir_share(secret, n_shares=6, threshold=3, rng=rng)
+    for sub in itertools.combinations(shares, 3):
+        assert shamir_reconstruct(list(sub)) == secret
+    # t-1 shares interpolate to something else (info-theoretically the
+    # secret is unrecoverable; equality would be a 2^-127 fluke)
+    assert shamir_reconstruct(shares[:2]) != secret
+
+
+def test_shamir_validation():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError, match="threshold"):
+        shamir_share(1, n_shares=3, threshold=4, rng=rng)
+    with pytest.raises(ValueError, match="threshold"):
+        shamir_share(1, n_shares=3, threshold=0, rng=rng)
+    with pytest.raises(ValueError, match="duplicate"):
+        shamir_reconstruct([(1, 5), (1, 6)])
+    with pytest.raises(ValueError, match="threshold"):
+        SeedShareBook(round_seed=1, n_active=2, threshold=3)
+
+
+def test_share_book_recovers_pair_seeds_and_enforces_threshold():
+    book = SeedShareBook(round_seed=99, n_active=5, threshold=3)
+    assert book.recover_seed(1, 4) == pair_seed(99, 1, 4)
+    assert book.recover_seed(1, 4, respondents=(0, 2, 3)) == \
+        pair_seed(99, 1, 4)
+    assert book.shares_pulled == 6        # 2 recoveries * t=3
+    with pytest.raises(MaskRecoveryError, match="threshold"):
+        book.recover_seed(0, 2, respondents=(0, 1))
+
+
+def test_mask_layer_threshold_resolution():
+    assert MaskLayer(0.0).resolve_threshold(5) == 3      # n//2 + 1
+    assert MaskLayer(0.6).resolve_threshold(5) == 3      # ceil(0.6*5)
+    assert MaskLayer(2).resolve_threshold(5) == 2        # absolute
+    assert MaskLayer(9).resolve_threshold(5) == 5        # clamped
+    with pytest.raises(ValueError):
+        MaskLayer(-1)
+
+
+# --- dropout recovery (unit property) -----------------------------------------
+
+@for_cases(cases(8, seed=17, c=ints(2, 7), n=ints(1, 10), m=ints(1, 5),
+                 t=ints(1, 7), seed2=ints(0, 10 ** 6)))
+def test_recovered_masked_sum_equals_plain_sum(c, n, m, t, seed2):
+    """For any cohort size, leaf shapes, threshold <= cohort and
+    non-empty delivery subset: sum of delivered masked payloads after
+    ``strip_missing_masks`` == plain sum of the delivered updates."""
+    t = min(t, c)
+    rng = np.random.default_rng(seed2)
+    updates = [{"w": np.asarray(rng.normal(size=(n, m)), np.float32),
+                "b": np.asarray(rng.normal(size=(m,)), np.float32)}
+               for _ in range(c)]
+    rs = mask_round_seed(seed2, 0)
+    masked = [mask_update(u, i, c, round_seed=rs)
+              for i, u in enumerate(updates)]
+    k = int(rng.integers(1, c + 1))
+    present = set(int(s) for s in rng.choice(c, size=k, replace=False))
+    book = SeedShareBook(rs, c, t)
+    stripped = [strip_missing_masks(masked[s], book, s, present)[0]
+                for s in sorted(present)]
+    plain = secure_sum([updates[s] for s in sorted(present)])
+    got = secure_sum(stripped)
+    for a, b in zip(_leaves(got), _leaves(plain)):
+        np.testing.assert_allclose(a, b, atol=2e-4 * c)
+
+
+def test_strip_missing_masks_counts_and_full_batch_is_free():
+    c, rs = 4, mask_round_seed(1, 2)
+    u = {"w": np.ones((2, 2), np.float32)}
+    masked = mask_update(u, 0, c, round_seed=rs)
+    book = SeedShareBook(rs, c, 2)
+    same, n_rec = strip_missing_masks(masked, book, 0, {0, 1, 2, 3})
+    assert n_rec == 0 and book.shares_pulled == 0
+    assert same is masked                 # untouched when nobody is missing
+    _, n_rec = strip_missing_masks(masked, book, 0, {0, 2})
+    assert n_rec == 2                     # peers 1 and 3 reconstructed
+    assert book.shares_pulled == 2 * book.t
+
+
+# --- end-to-end runtime recovery ----------------------------------------------
+
+def _tiny_clients(n_clients=4, rows=24, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n_clients):
+        x = np.asarray(rng.normal(size=(rows, 5)), np.float32)
+        y = np.asarray(rng.integers(0, 2, size=rows), np.float32)
+        out.append((x, y))
+    return out
+
+
+def _run(transport, participation="full", schedule="sync", seed=3,
+         rounds=4, dp_budget=None):
+    cfg = FedParametricConfig(model="logreg", rounds=rounds,
+                              local_steps=3, transport=transport,
+                              participation=participation,
+                              schedule=schedule, seed=seed,
+                              dp_budget=dp_budget)
+    return train_federated(_tiny_clients(), cfg)
+
+
+@for_cases(cases(3, seed=23, seed2=ints(0, 10 ** 6)))
+def test_masked_dropout_run_matches_plain(seed2):
+    """Former hard rejection, now the recovery path: a mask transport
+    under ``dropout:p:p_straggle`` must reproduce the plain transport's
+    global params — stragglers' and droppers' mask terms are Shamir-
+    recovered before each (possibly discounted) aggregation."""
+    p_plain, *_ = _run("plain", "dropout:0.3:0.5", seed=seed2)
+    p_mask, *_ = _run("secure", "dropout:0.3:0.5", seed=seed2)
+    for a, b in zip(_leaves(p_plain), _leaves(p_mask)):
+        np.testing.assert_allclose(a, b, atol=1e-3)
+
+
+@for_cases(cases(2, seed=29, k=ints(1, 3), seed2=ints(0, 10 ** 6)))
+def test_masked_async_run_matches_plain(k, seed2):
+    """Async buffered aggregation mixes dispatch cohorts in one buffer;
+    cross-cohort mask terms are recovered per delivery group, so the
+    masked async run tracks the plain one."""
+    p_plain, *_ = _run("plain", schedule=f"async:{k}", seed=seed2)
+    p_mask, *_ = _run("secure", schedule=f"async:{k}", seed=seed2)
+    for a, b in zip(_leaves(p_plain), _leaves(p_mask)):
+        np.testing.assert_allclose(a, b, atol=1e-3)
+
+
+def test_mask_share_traffic_ledgered_only_under_recovery():
+    _, comm_full, *_ = _run("secure", "full")
+    assert "mask-shares" not in comm_full.per_what_bytes()
+    assert getattr(comm_full, "privacy", None) is None   # no dpnoise layer
+    # heavy straggling forces split deliveries -> recovery traffic
+    _, comm_drop, *_ = _run("secure", "dropout:0.2:0.9", seed=5)
+    per_what = comm_drop.per_what_bytes()
+    assert per_what.get("mask-shares", 0) > 0
+    assert per_what["mask-shares"] % SeedShareBook.SHARE_NBYTES == 0
+
+
+# --- RDP accountant -----------------------------------------------------------
+
+def test_rdp_matches_gaussian_closed_form_at_full_participation():
+    """q=1 reduces to the plain Gaussian mechanism: after T steps
+    eps = min_a [ T*a/(2 z^2) + log(1/delta)/(a-1) ]."""
+    z, delta, T = 1.7, 1e-5, 12
+    acc = RDPAccountant(noise_multiplier=z, delta=delta)
+    for _ in range(T):
+        acc.step([0, 1, 2], q=1.0)
+    expect = min(T * a / (2 * z * z) + np.log(1 / delta) / (a - 1)
+                 for a in acc.orders)
+    np.testing.assert_allclose(acc.epsilon(), expect, rtol=1e-12)
+    assert subsampled_gaussian_rdp(1.0, z, 8) == 8 / (2 * z * z)
+
+
+def test_rdp_monotone_in_steps_and_amplified_by_subsampling():
+    full = RDPAccountant(noise_multiplier=2.0)
+    sub = RDPAccountant(noise_multiplier=2.0)
+    prev = 0.0
+    for _ in range(8):
+        full.step([0], q=1.0)
+        sub.step([0], q=0.25)
+        assert full.epsilon() > prev     # strictly accumulating
+        prev = full.epsilon()
+    assert sub.epsilon() < full.epsilon()   # amplification by subsampling
+    assert sub.epsilon() > 0.0
+
+
+def test_rdp_individual_accounting_per_client():
+    acc = RDPAccountant(noise_multiplier=1.5)
+    acc.step([0, 1], q=0.5)
+    acc.step([0], q=0.5)
+    s = acc.summary()
+    assert s["per_client"][0] > s["per_client"][1] > 0
+    assert s["epsilon"] == acc.epsilon(client=0)
+    assert acc.epsilon(client=7) == 0.0     # never sampled
+    assert s["steps"] == 2
+
+
+def test_rdp_validation():
+    with pytest.raises(ValueError, match="noise_multiplier"):
+        RDPAccountant(noise_multiplier=0.0)
+    with pytest.raises(ValueError, match="delta"):
+        RDPAccountant(noise_multiplier=1.0, delta=1.0)
+    acc = RDPAccountant(noise_multiplier=1.0)
+    with pytest.raises(ValueError, match="q"):
+        acc.step([0], q=0.0)
+    with pytest.raises(ValueError, match="q"):
+        acc.step([0], q=1.5)
+    with pytest.raises(ValueError, match="order"):
+        subsampled_gaussian_rdp(0.5, 1.0, 1)
+
+
+def test_dp_budget_stops_training_early():
+    rounds = 30
+    _, comm, history, _ = _run("secure_dp", rounds=rounds, dp_budget=1.0)
+    p = comm.privacy
+    assert p is not None and p["epsilon"] >= 1.0
+    assert p["budget"] == 1.0
+    assert p["budget_stop_round"] < rounds - 1
+    assert p["steps"] == p["budget_stop_round"] + 1
+
+
+def test_dp_budget_requires_accountant():
+    with pytest.raises(ValueError, match="dp_budget"):
+        _run("plain", dp_budget=1.0)
+
+
+# --- construction validation --------------------------------------------------
+
+def test_dpnoise_layer_validates_epsilon_and_delta():
+    DPNoiseLayer(0.5, 1e-5)                 # paper defaults construct
+    for eps, delta in ((0.0, 1e-5), (-1.0, 1e-5), (0.5, 0.0),
+                      (0.5, 1.0), (0.5, -0.1)):
+        with pytest.raises(ValueError, match="dpnoise"):
+            DPNoiseLayer(eps, delta)
+    with pytest.raises(ValueError, match="epsilon"):
+        privacy.gaussian_sigma(0.0, 1e-5)
+    with pytest.raises(ValueError, match="delta"):
+        privacy.gaussian_sigma(0.5, 2.0)

@@ -22,9 +22,12 @@ from repro.core.privacy import mask_update, secure_sum
 #: presets whose client-side encode is value-preserving when the payload
 #: is inside the clip ball and the round has a single active client
 #: (clip scales by 1, a 1-client mask has no peers, dpnoise/weight act
-#: server-side / as *1.0): everything without a codec layer.
+#: server-side / as *1.0): everything without a codec or HE layer.
 LOSSLESS = ("plain", "framed", "secure", "dp", "secure_dp")
 CODECS = ("sparse", "quant", "full_stack")
+#: presets with the fixed-point HE cost-model layer: lossy at the
+#: quantization step (gated in test_he_presets_* below)
+HE = ("he", "he_dp")
 
 
 def _payload(rng, scale=0.01):
@@ -109,6 +112,47 @@ def test_secure_agg_masks_cancel_in_sum(c, n, m, seed2):
         assert any(not np.allclose(a, b, atol=1e-6)
                    for a, b in zip(_leaves(masked[0]),
                                    _leaves(updates[0])))
+
+
+HE_CASES = cases(5, seed=7, n=ints(1, 64), m=ints(1, 9),
+                 frac=ints(4, 20), seed2=ints(0, 10 ** 6))
+
+
+@for_cases(HE_CASES)
+def test_he_presets_quantize_within_one_step(n, m, frac, seed2):
+    """The HE cost-model layer is fixed-point lossy: per-scalar error is
+    bounded by half a quantization step (payloads inside the clip ball,
+    so no magnitude clipping triggers)."""
+    rng = np.random.default_rng(seed2)
+    delta = {"w": jnp.asarray(rng.normal(size=(n, m)) * 0.01,
+                              jnp.float32)}
+    for name in HE:
+        t = get_transport(name, he_frac_bits=frac)
+        msg = t.encode(delta, ctx=WireCtx(round=0, client=0, slot=0,
+                                          n_active=1, seed=seed2))
+        err = np.abs(np.asarray(msg.payload["w"])
+                     - np.asarray(delta["w"])).max()
+        assert err <= 2.0 ** -frac, (name, err)
+
+
+@for_cases(cases(4, seed=9, n=ints(1, 5000), c=ints(1, 40),
+                 seed2=ints(0, 10 ** 6)))
+def test_he_byte_accounting_matches_cost_model(n, c, seed2):
+    """Wire bytes == ceil(n_scalars / slots_per_ct) * 2*key_bits/8 with
+    slot width int+frac+sign+ceil(log2(n_active)) — the honest Paillier
+    ciphertext-expansion accounting."""
+    from repro.core.comm import HELayer
+    lay = HELayer(key_bits=2048, frac_bits=16, int_bits=8)
+    slot_bits = 8 + 16 + 1 + max(1, c).bit_length()
+    slots = max(1, 2048 // slot_bits)
+    expect = -(-n // slots) * (2 * 2048 // 8)
+    assert lay.wire_bytes(n, c) == expect
+    rng = np.random.default_rng(seed2)
+    delta = {"w": jnp.asarray(rng.normal(size=(n,)) * 0.01, jnp.float32)}
+    msg = get_transport("he").encode(
+        delta, ctx=WireCtx(round=0, client=0, slot=0, n_active=c,
+                           seed=seed2))
+    assert msg.nbytes == expect
 
 
 @for_cases(cases(4, seed=3, c=ints(2, 5), seed2=ints(0, 10 ** 6)))
